@@ -1,0 +1,66 @@
+"""Fig. 3 reproduction: % error (vs FP32 accumulation) of FP8 Gaussian
+dot products, per summation algorithm, over dot-product length."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import formats, mgs, summation
+from .common import Csv, timeit
+
+
+def _fp8_pair(rng, k):
+    x = rng.normal(0, 1, k).astype(np.float32)
+    w = rng.normal(0, 1, k).astype(np.float32)
+    f = formats.E4M3
+    return (np.asarray(formats.round_to_format(x, f)),
+            np.asarray(formats.round_to_format(w, f)))
+
+
+def run(csv: Csv, lengths=(16, 64, 256, 1024, 4096), n_trials: int = 16):
+    acc4 = summation.acc_format(4)   # the paper's 4-bit mantissa accumulator
+    algos = {}
+
+    def rel_err(est, ref):
+        return abs(est - ref) / max(abs(ref), 1e-9)
+
+    for k in lengths:
+        errs = {a: [] for a in
+                ("sequential", "pairwise", "kahan", "mgs_narrow_clip",
+                 "mgs_dmac", "mgs_exact")}
+        for t in range(n_trials):
+            rng = np.random.default_rng(1000 * k + t)
+            x, w = _fp8_pair(rng, k)
+            p = np.asarray(mgs.round_product(
+                jnp.asarray(x) * jnp.asarray(w), formats.E4M3)[0])
+            ref = p.astype(np.float64).sum()  # FP32-accumulation oracle
+            if abs(ref) < 1e-6:
+                continue
+            errs["sequential"].append(rel_err(
+                float(summation.sequential_sum(jnp.asarray(p), acc4)), ref))
+            errs["pairwise"].append(rel_err(
+                float(summation.pairwise_sum(jnp.asarray(p), acc4)), ref))
+            errs["kahan"].append(rel_err(
+                float(summation.kahan_sum(jnp.asarray(p), acc4)), ref))
+            errs["mgs_narrow_clip"].append(rel_err(float(
+                mgs.mgs_dot_narrow_clipped(jnp.asarray(x),
+                                           jnp.asarray(w))[0]), ref))
+            errs["mgs_dmac"].append(rel_err(float(
+                mgs.mgs_dot_exact(jnp.asarray(x), jnp.asarray(w),
+                                  formats.E4M3, "dmac")), ref))
+            true = float(np.sum(x.astype(np.float64) * w.astype(np.float64)))
+            errs["mgs_exact"].append(
+                abs(float(mgs.mgs_dot_exact(jnp.asarray(x), jnp.asarray(w),
+                                            formats.E4M3, "exact")) - true)
+                / max(abs(true), 1e-9))
+        for a, es in errs.items():
+            if es:
+                csv.add(f"fig3/{a}/k={k}", 0.0,
+                        f"pct_err={100 * float(np.mean(es)):.2f}")
+
+    # one timing row (emulation cost on CPU, informational)
+    rng = np.random.default_rng(0)
+    x, w = _fp8_pair(rng, 1024)
+    us = timeit(lambda: mgs.mgs_dot_exact(jnp.asarray(x), jnp.asarray(w)))
+    csv.add("fig3/mgs_dot_exact_k1024_timing", us, "emulation")

@@ -1,0 +1,43 @@
+"""Fig. 4 reproduction: (a) analytic overflow probability vs accumulator
+bitwidth/length; (b) average accumulator bitwidth during emulated
+quantized inference (5-bit weights x 7-bit activations, as in the paper)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import int_dmac, markov
+from .common import Csv
+
+
+def run(csv: Csv):
+    # (a) CLT overflow probabilities (paper's 5-bit w sigma=5, 7-bit x
+    # sigma=21 setup)
+    sigma_p = 5.0 * 21.0
+    for a in (8, 10, 12, 14):
+        for k in (5, 10, 15, 30):
+            p = float(markov.clt_overflow_prob(k, a, sigma_p))
+            csv.add(f"fig4a/acc{a}b/k={k}", 0.0, f"p_overflow={p:.4f}")
+
+    # (b) average accumulator bitwidth across emulated layers: random
+    # normal 5-bit weights x half-normal 7-bit activations (post-ReLU),
+    # dMAC with narrow widths 8..14, wide=32.
+    rng = np.random.default_rng(0)
+    K = 576  # 1x1 conv over 64 channels x 3x3 receptive field scale
+    n_dots = 64
+    for nb in (8, 9, 10, 12):
+        total_narrow = total_wide = 0
+        for i in range(n_dots):
+            w = np.clip(np.rint(rng.normal(0, 5, K)), -15, 15)
+            x = np.clip(np.rint(np.abs(rng.normal(0, 21, K))), 0, 127)
+            _, stats = int_dmac.int_dot_dmac(jnp.asarray(w), jnp.asarray(x),
+                                             narrow_bits=nb)
+            total_narrow += int(stats.narrow_adds)
+            total_wide += int(stats.wide_flushes) + 1  # final drain
+        avg = float(int_dmac.average_accumulator_bits(
+            total_narrow, total_wide, nb, 32))
+        csv.add(f"fig4b/narrow{nb}b", 0.0,
+                f"avg_bits={avg:.2f};ovf_rate="
+                f"{total_wide / max(total_narrow, 1):.4f}")

@@ -1,0 +1,26 @@
+"""Fig. 5 reproduction: Markov-chain expected sums-before-overflow vs
+Monte-Carlo empirical average, across accumulator bitwidths (5-bit normal
+weights x 7-bit half-normal activations, the paper's setup)."""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import markov
+from .common import Csv
+
+
+def run(csv: Csv):
+    pw = markov.gaussian_quantized_pmf(5)
+    px = markov.gaussian_quantized_pmf(7, half=True)
+    pp = markov.product_pmf(pw, px)
+    for a in (8, 9, 10, 11, 12):
+        model = markov.expected_sums_before_overflow(pp, a)
+        sim = markov.simulate_walk(pp, a, n_trials=800, seed=a)
+        csv.add(f"fig5/acc{a}b", 0.0,
+                f"model={model:.1f};empirical={sim.mean():.1f};"
+                f"rel_gap={abs(model - sim.mean()) / max(sim.mean(), 1):.3f}")
+    # chunk planner output for the kernel (TPU adaptation artifact)
+    k_plan = markov.plan_chunk_length_clt(10, sigma_p=pp.std,
+                                          target_overflow=1e-3)
+    csv.add("fig5/chunk_plan_acc10b", 0.0, f"k={k_plan}")

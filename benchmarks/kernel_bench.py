@@ -1,0 +1,37 @@
+"""MGS matmul kernel micro-bench: interpret-mode wall time (CPU; the TPU
+figure of merit is the structural analysis in §Roofline) plus the
+analytic MXU-pass accounting of the limb kernel."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import formats
+from repro.kernels import ops, ref
+from repro.kernels.mgs_matmul import worst_case_flush_period
+from .common import Csv, timeit
+
+
+def run(csv: Csv):
+    rng = np.random.default_rng(0)
+    f = formats.E4M3
+    for (M, K, N) in [(64, 256, 64), (128, 512, 128)]:
+        x = jnp.asarray(np.asarray(formats.round_to_format(
+            rng.normal(0, 1, (M, K)).astype(np.float32), f)))
+        w = jnp.asarray(np.asarray(formats.round_to_format(
+            rng.normal(0, 1, (K, N)).astype(np.float32), f)))
+        us_k = timeit(lambda: ops.mgs_matmul(x, w, f, "exact",
+                                             block_m=64, block_n=64,
+                                             block_k=128), n=3)
+        us_r = timeit(lambda: ref.mgs_matmul_ref(x, w, f, "exact"), n=3)
+        us_w = timeit(lambda: ref.wide_matmul_ref(x, w), n=3)
+        csv.add(f"kernel/exact_pallas_interp/{M}x{K}x{N}", us_k,
+                f"ref_us={us_r:.0f};f32_us={us_w:.0f}")
+    # structural accounting: the limb kernel runs 9 int8 MXU passes per
+    # bf16-equivalent matmul; v5e int8 throughput ~2x bf16 -> ~4.5x
+    # bf16-matmul cost for *exact* FP8 accumulation (vs inexact fp32-acc).
+    csv.add("kernel/exact_limb_mxu_passes", 0.0,
+            "passes=9;int8_speedup=2.0;bf16_equiv_cost=4.5")
+    csv.add("kernel/flush_period_bk128", 0.0,
+            f"worst_case={worst_case_flush_period(128)}")

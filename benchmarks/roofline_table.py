@@ -1,0 +1,51 @@
+"""Emit the §Roofline table from the dry-run JSON records."""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from .common import Csv
+
+
+def run(csv: Csv, root: str = "experiments/dryrun"):
+    files = sorted(glob.glob(os.path.join(root, "*.json")))
+    if not files:
+        csv.add("roofline/missing", 0.0,
+                "run `python -m repro.launch.dryrun --all` first")
+        return
+    for f in files:
+        r = json.load(open(f))
+        tag = os.path.basename(f)[:-5]
+        if r.get("skipped"):
+            csv.add(f"roofline/{tag}", 0.0, "skipped")
+            continue
+        if "error" in r:
+            csv.add(f"roofline/{tag}", 0.0, "ERROR")
+            continue
+        csv.add(
+            f"roofline/{tag}", r["compile_s"] * 1e6,
+            f"t_comp={r['t_compute']:.3f}s;t_mem={r['t_memory']:.3f}s;"
+            f"t_coll={r['t_collective']:.3f}s;bn={r['bottleneck']};"
+            f"peak_frac={r['peak_fraction']:.3f};"
+            f"useful={r['useful_flops_ratio']:.3f};"
+            f"live_gb={r['memory_per_device']['live_bytes'] / 1e9:.2f}")
+
+
+def markdown_table(root: str = "experiments/dryrun") -> str:
+    rows = ["| arch | shape | mesh | t_comp (s) | t_mem (s) | t_coll (s) |"
+            " bottleneck | peak frac | 6ND/HLO | live GB | fits |",
+            "|---|---|---|---|---|---|---|---|---|---|---|"[:-4]]
+    for f in sorted(glob.glob(os.path.join(root, "*.json"))):
+        r = json.load(open(f))
+        if r.get("skipped") or "error" in r:
+            continue
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} "
+            f"| {r['t_compute']:.3f} | {r['t_memory']:.3f} "
+            f"| {r['t_collective']:.3f} | {r['bottleneck']} "
+            f"| {r['peak_fraction']:.3f} | {r['useful_flops_ratio']:.2f} "
+            f"| {r['memory_per_device']['live_bytes'] / 1e9:.2f} "
+            f"| {'Y' if r['fits_hbm'] else 'N'} |")
+    return "\n".join(rows)

@@ -1,0 +1,39 @@
+"""Table 1 proxy: task accuracy of FP32 / INT8 / FP8(wide) / dMAC
+inference on the same pre-trained model.
+
+The paper evaluates ImageNet classification (MobileNetV2/ResNet-18/ViT);
+no datasets ship with this container, so the proxy task is next-token
+top-1 accuracy of a small LM trained on the structured synthetic stream
+(benchmarks/common.py). The claim under test is the paper's: dMAC (MGS)
+accuracy ~= FP8-with-wide-accumulation ~= FP32 baseline, while narrow
+clipped accumulation degrades.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+from repro.quant import QuantConfig
+from .common import Csv, timeit, top1_accuracy, trained_tiny_lm
+
+MODES = {
+    "baseline_fp32": QuantConfig(),
+    "int8": QuantConfig(dtype="int8", accum="wide"),
+    "fp8_wide": QuantConfig(dtype="fp8_e4m3", accum="wide"),
+    "dmac_mgs": QuantConfig(dtype="fp8_e4m3", accum="mgs_dmac"),
+    "mgs_exact": QuantConfig(dtype="fp8_e4m3", accum="mgs_exact"),
+    "fp8_swamp_narrow": QuantConfig(dtype="fp8_e4m3", accum="swamp",
+                                    narrow_bits=5),
+}
+
+
+def run(csv: Csv):
+    cfg, params, evals = trained_tiny_lm()
+    base_acc = None
+    for name, q in MODES.items():
+        cfg_q = dataclasses.replace(cfg, quant=q)
+        acc = top1_accuracy(cfg_q, params, evals)
+        if name == "baseline_fp32":
+            base_acc = acc
+        csv.add(f"table1/{name}", 0.0,
+                f"top1={acc:.4f};delta_vs_fp32={acc - base_acc:+.4f}")

@@ -1,0 +1,67 @@
+"""Table 3 reproduction: dMAC vs conventional MAC energy, driven by
+*measured* overflow/skip statistics from emulated FP8 inference traces
+instead of assumed rates."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import energy, formats, mgs
+from .common import Csv, trained_tiny_lm
+
+
+def run(csv: Csv, n_dots: int = 32):
+    """dMAC savings are a function of the activation trace: the narrow
+    accumulators only pay off when most products are subnormal-gated or
+    tiny (an E4M3 *normal* mantissa is >=8, so two same-sign products in
+    a bin overflow a 5-bit register). We sweep activation sparsity — the
+    paper's ViT/MobileNet post-ReLU traces sit at the sparse end — and
+    report measured-rate savings per level plus the paper's calibration
+    point (reproduced exactly at its ~2% traced overflow rate)."""
+    cfg, params, _ = trained_tiny_lm()
+    import jax
+    w_leaves = [np.asarray(x, np.float32).reshape(-1)
+                for x in jax.tree.leaves(params["layers"]) if x.ndim >= 2]
+    wpool = np.concatenate(w_leaves)[:200000]
+    rng = np.random.default_rng(0)
+    K = cfg.d_model
+    m = energy.FP8_MODEL
+
+    for sparsity in (0.0, 0.5, 0.8, 0.95):
+        total = {"narrow": 0, "flush": 0, "skip": 0, "macs": 0}
+        for i in range(n_dots):
+            w = rng.choice(wpool, K).astype(np.float32)
+            x = np.abs(rng.normal(0, 1.0, K)).astype(np.float32)
+            x[rng.random(K) < sparsity] = 0.0  # post-ReLU zeros
+            wq = np.asarray(formats.round_to_format(
+                w / (np.abs(w).max() / 448 ** 0.5), formats.E4M3))
+            xq = np.asarray(formats.round_to_format(
+                x / (max(np.abs(x).max(), 1e-9) / 448 ** 0.5),
+                formats.E4M3))
+            _, st = mgs.mgs_dot_dmac(jnp.asarray(xq), jnp.asarray(wq),
+                                     formats.E4M3, 5)
+            total["narrow"] += int(st.narrow_adds)
+            total["flush"] += int(st.wide_flushes) + int(st.final_flushes)
+            total["skip"] += int(st.skipped)
+            total["macs"] += int(st.total_macs)
+        ovf = total["flush"] / max(total["narrow"], 1)
+        s = m.savings(total["narrow"], total["flush"], total["skip"],
+                      skipping=True)
+        csv.add(f"table3/fp8_dmac/act_sparsity={sparsity}", 0.0,
+                f"savings={s:.3f};ovf_rate={ovf:.3f};"
+                f"skip_rate={total['skip'] / max(total['macs'], 1):.3f}")
+
+    # paper calibration point: savings at their traced ~2% overflow rate
+    n = 10**6
+    csv.add("table3/fp8_dmac/paper_rate", 0.0,
+            f"savings={m.savings(n, int(0.02 * n)):.3f};paper=0.336")
+    csv.add("table3/fp8_dmac_skipping/paper_rate", 0.0,
+            f"savings={m.savings(n, int(0.02 * n), int(0.04 * n), True):.3f}"
+            f";paper=0.341")
+    mi = energy.INT8_MODEL
+    csv.add("table3/int8_dmac/paper_rate", 0.0,
+            f"savings={mi.savings(n, int(0.02 * n)):.3f};paper=0.154")
+    for unit, row in energy.PAPER_TABLE3.items():
+        csv.add(f"table3/paper/{unit.replace(' ', '_')}", 0.0,
+                f"total_uW={row[2]};savings={row[3]}")

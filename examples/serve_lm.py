@@ -1,0 +1,49 @@
+"""End-to-end serving example (the paper is an inference paper, so the
+primary driver is serving): batched prefill+decode of an LM with MGS
+FP8 quantized matmuls, compared against the unquantized model.
+
+    PYTHONPATH=src python examples/serve_lm.py
+"""
+
+import dataclasses
+
+import numpy as np
+
+from repro.configs import reduced_config
+from repro.launch.mesh import make_mesh
+from repro.launch.serve import Request, ServeEngine
+from repro.quant import QuantConfig
+
+
+def main():
+    cfg = reduced_config("deepseek-7b")
+    mesh = make_mesh((1, 1), ("data", "model"))
+    rng = np.random.default_rng(0)
+
+    def make_requests():
+        return [Request(rid=i,
+                        prompt=rng.integers(1, cfg.vocab, 32).astype(
+                            np.int32),
+                        max_new_tokens=8)
+                for i in range(8)]
+
+    print("== bf16 serving ==")
+    engine = ServeEngine(cfg, mesh, batch=4, max_len=48)
+    stats = engine.run(make_requests())
+    print(stats)
+
+    print("\n== FP8 MGS-exact serving (same weights) ==")
+    cfg_q = dataclasses.replace(
+        cfg, quant=QuantConfig(dtype="fp8_e4m3", accum="mgs_exact"))
+    engine_q = ServeEngine(cfg_q, mesh, batch=4, max_len=48,
+                           params=engine.params)
+    rng = np.random.default_rng(0)
+    reqs_q = make_requests()
+    stats_q = engine_q.run(reqs_q)
+    print(stats_q)
+    print("\nNote: wall-clock on CPU reflects the *emulation*; on TPU the "
+          "limb kernel runs 9 int8 MXU passes (see benchmarks/kernel).")
+
+
+if __name__ == "__main__":
+    main()

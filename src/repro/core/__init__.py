@@ -1,0 +1,22 @@
+# The paper's primary contribution: Markov Greedy Sums — exponent-binned
+# low-bitwidth floating-point accumulation, dual-accumulator emulation,
+# the absorbing-Markov overflow analysis that sizes the narrow accumulator,
+# and the calibrated dMAC energy model.
+from .formats import (E4M3, E5M2, E3M4, FPFormat, decode_bits, decompose,
+                      encode_bits, get_format, recompose,
+                      representable_values, round_to_format)
+from .int_dmac import (IntDmacStats, average_accumulator_bits, int_dot_clip,
+                       int_dot_dmac, int_dot_exact, int_dot_wrap)
+from .mgs import (MGSStats, bin_sums, combine_bins, mgs_dot_dmac,
+                  mgs_dot_exact, mgs_dot_narrow_clipped, round_product)
+from . import energy, markov, summation
+
+__all__ = [
+    "E4M3", "E5M2", "E3M4", "FPFormat", "decode_bits", "decompose",
+    "encode_bits", "get_format", "recompose", "representable_values",
+    "round_to_format", "IntDmacStats", "average_accumulator_bits",
+    "int_dot_clip", "int_dot_dmac", "int_dot_exact", "int_dot_wrap",
+    "MGSStats", "bin_sums", "combine_bins", "mgs_dot_dmac", "mgs_dot_exact",
+    "mgs_dot_narrow_clipped", "round_product", "energy", "markov",
+    "summation",
+]

@@ -1,0 +1,256 @@
+"""Low-bitwidth floating-point formats (bit-level codecs), pure JAX.
+
+This module is the numerical foundation of the MGS reproduction. It models
+narrow floating-point formats (OCP FP8 E4M3 / E5M2 and generalizations) at
+the *bit* level so that the rest of the system can reason about mantissas
+and exponents explicitly — exactly what the paper's dMAC hardware does.
+
+Design notes
+------------
+* Every routine is branch-free vector JAX so it can be jitted, vmapped and
+  used inside Pallas kernel bodies.
+* A value ``v`` of a format ``f`` is represented canonically as an integer
+  *signed mantissa* ``sm`` and an *exponent-bin index* ``e`` such that::
+
+      v = sm * 2 ** (max(e, 1) - f.bias - f.mbits)
+
+  For normals (``e >= 1``) ``|sm|`` lies in ``[2**mbits, 2**(mbits+1) - 1]``
+  (leading one included); for subnormals (``e == 0``) ``|sm|`` lies in
+  ``[0, 2**mbits - 1]``. The ``max(e, 1)`` mirrors IEEE subnormal scaling:
+  bins 0 and 1 share a scale. This is the decomposition the FP8 dMAC unit
+  of the paper operates on (Fig. 8: "4-bit mantissa (with leading 1) to
+  5-bit signed 2's complement", binned by the 4-bit exponent).
+* Rounding is IEEE round-to-nearest-even (RNE), implemented with
+  ``jnp.rint`` on a mantissa-scaled value. Overflow saturates to the
+  format's max finite value (the paper's emulation clips; ml_dtypes'
+  ``float8_e4m3fn`` saturating cast agrees on finite inputs).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "FPFormat",
+    "E4M3",
+    "E5M2",
+    "E3M4",
+    "round_to_format",
+    "decompose",
+    "recompose",
+    "encode_bits",
+    "decode_bits",
+    "quantum_exponent",
+    "representable_values",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class FPFormat:
+    """A sign + ``ebits`` exponent + ``mbits`` mantissa floating point format.
+
+    Follows OCP FP8 conventions: exponent bias ``2**(ebits-1) - 1``,
+    subnormals supported, no infinities (overflow saturates).
+    """
+
+    name: str
+    ebits: int
+    mbits: int
+    # Number of finite codes lost at the top of the range. E4M3 (fn variant)
+    # reserves only mantissa=0b111 @ emax for NaN, so max = 1.75 * 2^8 = 448.
+    # E5M2 follows IEEE-ish layout: top exponent is inf/NaN, max = 1.75*2^15.
+    top_exponent_reserved: bool = False
+    nan_codes_at_top: int = 1
+
+    @property
+    def bias(self) -> int:
+        return 2 ** (self.ebits - 1) - 1
+
+    @property
+    def n_bins(self) -> int:
+        """Number of exponent bins (registers in the dMAC design)."""
+        return 2**self.ebits
+
+    @property
+    def emax(self) -> int:
+        """Largest usable biased exponent."""
+        top = self.n_bins - 1
+        return top - 1 if self.top_exponent_reserved else top
+
+    @property
+    def emax_unbiased(self) -> int:
+        return self.emax - self.bias
+
+    @property
+    def emin_unbiased(self) -> int:
+        """Smallest *normal* unbiased exponent."""
+        return 1 - self.bias
+
+    @property
+    def mant_lead(self) -> int:
+        return 2**self.mbits
+
+    @property
+    def max_mantissa(self) -> int:
+        """Largest |signed mantissa| at emax (accounting for NaN codes)."""
+        hi = 2 ** (self.mbits + 1) - 1
+        if not self.top_exponent_reserved:
+            hi -= self.nan_codes_at_top
+        return hi
+
+    @property
+    def max_finite(self) -> float:
+        return float(self.max_mantissa) * 2.0 ** (self.emax - self.bias - self.mbits)
+
+    @property
+    def min_subnormal(self) -> float:
+        """Smallest positive value = the accumulation quantum at bin 0/1."""
+        return 2.0 ** (1 - self.bias - self.mbits)
+
+    @property
+    def min_subnormal_exp(self) -> int:
+        return 1 - self.bias - self.mbits
+
+    @property
+    def max_abs_sm(self) -> int:
+        """Largest |signed mantissa| over all bins (for overflow analysis)."""
+        return 2 ** (self.mbits + 1) - 1
+
+    def scale(self, e):
+        """Per-bin power-of-two scale: value = sm * 2**scale_exp(e)."""
+        return jnp.exp2(
+            (jnp.maximum(e, 1) - (self.bias + self.mbits)).astype(jnp.float32)
+        )
+
+    def scale_exp(self, e):
+        return jnp.maximum(e, 1) - (self.bias + self.mbits)
+
+
+# The paper's formats. E4M3 == OCP FP8 E4M3 (fn): bias 7, max 448,
+# subnormal quantum 2^-9 (the paper's §5.3 skip threshold).
+E4M3 = FPFormat("e4m3", ebits=4, mbits=3)
+E5M2 = FPFormat("e5m2", ebits=5, mbits=2, top_exponent_reserved=True)
+# A wider-mantissa FP8 variant occasionally used for weights.
+E3M4 = FPFormat("e3m4", ebits=3, mbits=4)
+
+_FORMATS = {f.name: f for f in (E4M3, E5M2, E3M4)}
+
+
+def get_format(name: str) -> FPFormat:
+    return _FORMATS[name]
+
+
+def _floor_log2(ax):
+    """floor(log2(ax)) for ax > 0, exact via frexp (bit manipulation)."""
+    _, e = jnp.frexp(ax)  # ax = m * 2**e with m in [0.5, 1)
+    return e - 1
+
+
+@partial(jax.jit, static_argnames=("fmt",))
+def round_to_format(x, fmt: FPFormat = E4M3):
+    """RNE-round float values to ``fmt``; saturating; subnormal-aware.
+
+    Returns the rounded value in the input's float dtype. NaNs propagate.
+    Half-precision inputs are promoted to float32 internally (the scaled
+    divide must not itself round) and cast back — lossless, since every
+    ``fmt``-representable value fits in bf16/f16.
+    """
+    x_in = jnp.asarray(x)
+    x = x_in.astype(jnp.float32) if x_in.dtype in (
+        jnp.bfloat16, jnp.float16) else x_in
+    ax = jnp.abs(x)
+    # Effective unbiased exponent, clamped to the subnormal floor and emax.
+    e = jnp.clip(_floor_log2(jnp.where(ax > 0, ax, 1.0)),
+                 fmt.emin_unbiased, fmt.emax_unbiased)
+    # Quantum at this binade; RNE to a multiple of the quantum.
+    q = jnp.exp2((e - fmt.mbits).astype(x.dtype))
+    r = jnp.rint(ax / q) * q
+    # Values straddling a binade boundary may round up into the next binade;
+    # that is still representable. Saturate at max_finite.
+    r = jnp.minimum(r, jnp.asarray(fmt.max_finite, x.dtype))
+    r = jnp.where(ax == 0, jnp.zeros_like(r), r)
+    out = jnp.where(jnp.isnan(x), x, jnp.sign(x) * r)
+    return out.astype(x_in.dtype)
+
+
+@partial(jax.jit, static_argnames=("fmt",))
+def decompose(v, fmt: FPFormat = E4M3):
+    """Decompose format-exact values into (signed mantissa, exponent bin).
+
+    ``v`` must already be representable in ``fmt`` (i.e. output of
+    :func:`round_to_format`). Returns ``(sm, e)`` with ``sm`` int32 in
+    ``[-(2**(mbits+1)-1), 2**(mbits+1)-1]`` and ``e`` int32 in
+    ``[0, 2**ebits - 1]`` such that ``v == sm * 2**(max(e,1)-bias-mbits)``.
+    """
+    v = jnp.asarray(v)
+    av = jnp.abs(v)
+    eu = _floor_log2(jnp.where(av > 0, av, 1.0))  # unbiased exponent
+    is_sub = (eu < fmt.emin_unbiased) | (av == 0)
+    e = jnp.where(is_sub, 0, eu + fmt.bias).astype(jnp.int32)
+    # Shared scale for bins 0 and 1.
+    sc = jnp.exp2((jnp.maximum(e, 1) - (fmt.bias + fmt.mbits)).astype(v.dtype))
+    sm = jnp.rint(v / sc).astype(jnp.int32)
+    sm = jnp.where(av == 0, 0, sm)
+    return sm, e
+
+
+@partial(jax.jit, static_argnames=("fmt", "dtype"))
+def recompose(sm, e, fmt: FPFormat = E4M3, dtype=jnp.float32):
+    """Inverse of :func:`decompose`."""
+    sc = jnp.exp2(
+        (jnp.maximum(e, 1) - (fmt.bias + fmt.mbits)).astype(dtype))
+    return sm.astype(dtype) * sc
+
+
+@partial(jax.jit, static_argnames=("fmt",))
+def encode_bits(v, fmt: FPFormat = E4M3):
+    """Pack format-exact values into (1 + ebits + mbits)-bit integer codes.
+
+    Layout (MSB..LSB): sign | exponent | mantissa-fraction. Returns uint8
+    for formats that fit in 8 bits. Zero encodes as 0 (positive zero).
+    """
+    sm, e = decompose(v, fmt)
+    sign = (sm < 0).astype(jnp.uint8)
+    mag = jnp.abs(sm)
+    # Normals carry an implicit leading one: fraction = |sm| - 2**mbits.
+    frac = jnp.where(e > 0, mag - fmt.mant_lead, mag).astype(jnp.uint8)
+    code = (sign << (fmt.ebits + fmt.mbits)) | (
+        e.astype(jnp.uint8) << fmt.mbits) | frac
+    return code.astype(jnp.uint8)
+
+
+@partial(jax.jit, static_argnames=("fmt", "dtype"))
+def decode_bits(code, fmt: FPFormat = E4M3, dtype=jnp.float32):
+    """Unpack integer codes produced by :func:`encode_bits`."""
+    code = code.astype(jnp.int32)
+    frac = code & (fmt.mant_lead - 1)
+    e = (code >> fmt.mbits) & (fmt.n_bins - 1)
+    sign = (code >> (fmt.ebits + fmt.mbits)) & 1
+    mag = jnp.where(e > 0, frac + fmt.mant_lead, frac)
+    sm = jnp.where(sign == 1, -mag, mag)
+    return recompose(sm, e, fmt, dtype)
+
+
+def quantum_exponent(fmt: FPFormat, e):
+    """Power-of-two exponent of one mantissa ULP in bin ``e``."""
+    return jnp.maximum(e, 1) - (fmt.bias + fmt.mbits)
+
+
+def representable_values(fmt: FPFormat = E4M3) -> np.ndarray:
+    """All finite non-negative representable values, ascending (numpy)."""
+    vals = []
+    for e in range(fmt.n_bins):
+        if fmt.top_exponent_reserved and e == fmt.n_bins - 1:
+            continue
+        for m in range(fmt.mant_lead):
+            mag = m if e == 0 else m + fmt.mant_lead
+            if (not fmt.top_exponent_reserved and e == fmt.n_bins - 1
+                    and mag > fmt.max_mantissa):
+                continue  # NaN code(s)
+            vals.append(mag * 2.0 ** (max(e, 1) - fmt.bias - fmt.mbits))
+    return np.unique(np.array(vals, dtype=np.float64))

@@ -1,0 +1,91 @@
+"""Classical low-precision summation algorithms (the paper's Fig. 3 baselines).
+
+Models *accumulator-limited* floating point: every intermediate sum is
+rounded to an accumulator format with a narrow mantissa (swamping) and a
+bounded exponent range (clipping). The paper evaluates sequential, pairwise
+and (implicitly, §2.2) Kahan summation against MGS under a 4-bit-mantissa
+accumulator; we reproduce all of them.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .formats import E4M3, FPFormat, round_to_format
+
+__all__ = [
+    "acc_format",
+    "lowprec_add",
+    "sequential_sum",
+    "pairwise_sum",
+    "kahan_sum",
+    "fp32_sum",
+]
+
+
+def acc_format(mantissa_bits: int, ebits: int = 4) -> FPFormat:
+    """An accumulator format: E4-range exponent, ``mantissa_bits`` mantissa.
+
+    Fig. 3 uses a "4-bit mantissa accumulator" — i.e. E4M3-range values
+    whose running sum keeps only 4 significant mantissa bits (leading one
+    included ⇒ mbits = mantissa_bits - 1 stored bits).
+    """
+    return FPFormat(f"acc_e{ebits}m{mantissa_bits - 1}", ebits=ebits,
+                    mbits=mantissa_bits - 1)
+
+
+def lowprec_add(a, b, fmt: FPFormat):
+    """One accumulator add: exact add then RNE-round to ``fmt`` (swamping),
+    saturating at the format max (clipping on overflow)."""
+    return round_to_format(a + b, fmt)
+
+
+@partial(jax.jit, static_argnames=("fmt",))
+def sequential_sum(x, fmt: FPFormat):
+    """Left-to-right summation in accumulator precision (Fig. 3 'sequential')."""
+
+    def step(acc, v):
+        return lowprec_add(acc, v, fmt), None
+
+    acc, _ = jax.lax.scan(step, jnp.zeros(x.shape[:-1], x.dtype),
+                          jnp.moveaxis(x, -1, 0))
+    return acc
+
+
+@partial(jax.jit, static_argnames=("fmt",))
+def pairwise_sum(x, fmt: FPFormat):
+    """Balanced-tree summation in accumulator precision (Higham [23])."""
+    n = x.shape[-1]
+    pow2 = 1
+    while pow2 < n:
+        pow2 *= 2
+    x = jnp.concatenate(
+        [x, jnp.zeros(x.shape[:-1] + (pow2 - n,), x.dtype)], axis=-1)
+
+    while x.shape[-1] > 1:
+        x = round_to_format(x[..., 0::2] + x[..., 1::2], fmt)
+    return x[..., 0]
+
+
+@partial(jax.jit, static_argnames=("fmt",))
+def kahan_sum(x, fmt: FPFormat):
+    """Kahan compensated summation [26] in accumulator precision."""
+
+    def step(carry, v):
+        s, c = carry
+        y = round_to_format(v - c, fmt)
+        t = round_to_format(s + y, fmt)
+        c = round_to_format(round_to_format(t - s, fmt) - y, fmt)
+        return (t, c), None
+
+    z = jnp.zeros(x.shape[:-1], x.dtype)
+    (s, _), _ = jax.lax.scan(step, (z, z), jnp.moveaxis(x, -1, 0))
+    return s
+
+
+def fp32_sum(x):
+    """Wide-accumulator baseline (24-bit mantissa)."""
+    return jnp.sum(x.astype(jnp.float32), axis=-1)

@@ -1,0 +1,263 @@
+"""Pallas TPU kernels for MGS quantized matmuls.
+
+Two kernels, matching the contracts in :mod:`repro.kernels.ref`:
+
+``mgs_matmul_exact_kernel`` — beyond-paper TPU-native form. E4M3 operands
+are pre-decomposed (host-side elementwise op) into 20-bit fixed-point
+integers split into three balanced 7-bit limbs (int8). The kernel runs the
+9 limb-pair int8×int8→int32 contractions on the MXU, keeping 5 per-weight
+int32 accumulators resident in VMEM, and flushes them into a float32 wide
+accumulator every ``flush_period`` K-steps (the Markov/worst-case planner
+picks the period — the paper's greedy narrow/wide fallback turned into a
+deterministic schedule). One flush per period amortizes all mantissa
+alignment, exactly the paper's §5.2 insight.
+
+``mgs_matmul_dmac_kernel`` — paper-faithful Fig. 8 numerics. Product tiles
+are materialized in VMEM, RNE-rounded to E4M3 (subnormal-gated per §5.3),
+decomposed into signed mantissas + exponent bins, and accumulated into 16
+per-bin int32 registers (the dMAC's 16 narrow accumulators, widened to
+int32 so the in-VMEM totals are exact — the wide-fallback path never loses
+bits, so this is bit-identical to the hardware). The 16× shift+combine
+runs once per output tile.
+
+Block shapes default to MXU-aligned (128×128) tiles; VMEM budgets:
+exact: 2·(3·bm·bk + 3·bk·bn) int8 + 5·bm·bn int32 + bm·bn f32 ≈ 0.5 MB.
+dmac:  bm·bk·bn f32 product tile dominates (32·128·32·4 = 0.5 MB).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.formats import E4M3, FPFormat
+
+__all__ = ["mgs_matmul_exact_pallas", "mgs_matmul_dmac_pallas",
+           "limb_decompose", "worst_case_flush_period"]
+
+_LIMB_BASE = 7
+_N_LIMBS = 3
+_N_CLASSES = 2 * _N_LIMBS - 1  # limb-weight classes a+b in [0, 4]
+
+
+def limb_decompose(v, fmt: FPFormat = E4M3):
+    """Format-exact values -> 3 balanced base-128 int8 limbs of the
+    fixed-point integer ix = sm << max(e, 1) (value = ix * 2^-(bias+mbits))."""
+    from repro.core.formats import decompose
+    sm, e = decompose(v.astype(jnp.float32), fmt)
+    ix = sm << jnp.maximum(e, 1)
+    half, mod = 1 << (_LIMB_BASE - 1), 1 << _LIMB_BASE
+    limbs, rem = [], ix
+    for _ in range(_N_LIMBS - 1):
+        c = ((rem + half) & (mod - 1)) - half
+        limbs.append(c.astype(jnp.int8))
+        rem = (rem - c) >> _LIMB_BASE
+    limbs.append(rem.astype(jnp.int8))
+    return jnp.stack(limbs)  # (3, ...) int8
+
+
+def worst_case_flush_period(block_k: int) -> int:
+    """Deterministic no-overflow flush period for the int32 class accums.
+
+    Per K element, a weight class accumulates at most
+    max_pairs_per_class * 64 * 64 = 3 * 4096; the int32 register is safe for
+    floor((2^31 - 1) / (block_k * 12288)) grid K-steps between flushes.
+    """
+    per_step = block_k * _N_LIMBS * (1 << (_LIMB_BASE - 1)) ** 2
+    return max(1, (2**31 - 1) // per_step)
+
+
+# ---------------------------------------------------------------------------
+# exact mode
+# ---------------------------------------------------------------------------
+
+
+def _exact_kernel(lx_ref, lw_ref, o_ref, acc_i, acc_f, *, nsteps: int,
+                  flush_period: int, out_scale: float):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_i[...] = jnp.zeros_like(acc_i)
+        acc_f[...] = jnp.zeros_like(acc_f)
+
+    # 9 limb-pair MXU contractions, accumulated per weight class a+b.
+    for a in range(_N_LIMBS):
+        xa = lx_ref[a]
+        for b in range(_N_LIMBS):
+            wb = lw_ref[b]
+            acc_i[a + b] += jax.lax.dot_general(
+                xa, wb, (((1,), (0,)), ((), ())),
+                preferred_element_type=jnp.int32)
+
+    @pl.when((jax.lax.rem(k + 1, flush_period) == 0) | (k == nsteps - 1))
+    def _flush():
+        # the "wide accumulator" add: one shift+combine per period.
+        tot = acc_f[...]
+        for c in range(_N_CLASSES):
+            tot += acc_i[c].astype(jnp.float32) * (2.0 ** (_LIMB_BASE * c))
+        acc_f[...] = tot
+        acc_i[...] = jnp.zeros_like(acc_i)
+
+    @pl.when(k == nsteps - 1)
+    def _done():
+        o_ref[...] = acc_f[...] * out_scale
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("fmt", "block_m", "block_n", "block_k", "flush_period",
+                     "interpret"))
+def mgs_matmul_exact_pallas(x, w, fmt: FPFormat = E4M3, *, block_m: int = 128,
+                            block_n: int = 128, block_k: int = 128,
+                            flush_period: int | None = None,
+                            interpret: bool = False):
+    """Exact fixed-point FP8 matmul: out = x @ w with no accumulation error.
+
+    ``x`` (M, K) and ``w`` (K, N) hold format-exact FP8 values.
+    """
+    M, K = x.shape
+    K2, N = w.shape
+    assert K == K2, (x.shape, w.shape)
+    Mp, Np, Kp = (_ceil(M, block_m) * block_m, _ceil(N, block_n) * block_n,
+                  _ceil(K, block_k) * block_k)
+    lx = limb_decompose(_pad2(x, Mp, Kp), fmt)          # (3, Mp, Kp) int8
+    lw = limb_decompose(_pad2(w, Kp, Np), fmt)          # (3, Kp, Np) int8
+    nsteps = Kp // block_k
+    if flush_period is None:
+        flush_period = worst_case_flush_period(block_k)
+    out_scale = 2.0 ** (-2 * (fmt.bias + fmt.mbits))
+
+    grid = (Mp // block_m, Np // block_n, nsteps)
+    kernel = functools.partial(_exact_kernel, nsteps=nsteps,
+                               flush_period=flush_period,
+                               out_scale=out_scale)
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((_N_LIMBS, block_m, block_k),
+                         lambda i, j, k: (0, i, k)),
+            pl.BlockSpec((_N_LIMBS, block_k, block_n),
+                         lambda i, j, k: (0, k, j)),
+        ],
+        out_specs=pl.BlockSpec((block_m, block_n), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((Mp, Np), jnp.float32),
+        scratch_shapes=[
+            pltpu.VMEM((_N_CLASSES, block_m, block_n), jnp.int32),
+            pltpu.VMEM((block_m, block_n), jnp.float32),
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(lx, lw)
+    return out[:M, :N]
+
+
+# ---------------------------------------------------------------------------
+# dmac (paper-faithful) mode
+# ---------------------------------------------------------------------------
+
+
+def _round_decompose_e4m3(p, fmt: FPFormat, gate_subnormal: bool):
+    """Kernel-local RNE round-to-fmt + mantissa/exponent decomposition.
+
+    Uses exponent-field bit extraction (exact) instead of frexp so it
+    lowers inside Pallas on TPU. ``p`` is a float32 tile of exact products
+    of fmt values (such products are exactly representable in f32).
+    """
+    ap = jnp.abs(p)
+    bits = jax.lax.bitcast_convert_type(ap, jnp.int32)
+    eu = jnp.clip((bits >> 23) - 127, fmt.emin_unbiased, fmt.emax_unbiased)
+    q = jnp.exp2((eu - fmt.mbits).astype(jnp.float32))
+    r = jnp.rint(ap / q) * q
+    r = jnp.minimum(r, fmt.max_finite)
+    if gate_subnormal:
+        r = jnp.where(ap < fmt.min_subnormal, 0.0, r)
+    r = jnp.where(ap == 0, 0.0, r) * jnp.sign(p)
+    # decompose the rounded value
+    rbits = jax.lax.bitcast_convert_type(jnp.abs(r), jnp.int32)
+    eu2 = jnp.clip((rbits >> 23) - 127, fmt.emin_unbiased, fmt.emax_unbiased)
+    is_sub = jnp.abs(r) < 2.0 ** fmt.emin_unbiased
+    e = jnp.where(is_sub, 0, eu2 + fmt.bias).astype(jnp.int32)
+    sc = jnp.exp2(-(jnp.maximum(e, 1) - (fmt.bias + fmt.mbits)).astype(
+        jnp.float32))
+    sm = jnp.rint(r * sc).astype(jnp.int32)
+    return sm, e
+
+
+def _dmac_kernel(x_ref, w_ref, o_ref, acc_bins, *, nsteps: int,
+                 fmt: FPFormat, gate_subnormal: bool):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_bins[...] = jnp.zeros_like(acc_bins)
+
+    xt = x_ref[...].astype(jnp.float32)   # (bm, bk)
+    wt = w_ref[...].astype(jnp.float32)   # (bk, bn)
+    p = xt[:, :, None] * wt[None, :, :]   # (bm, bk, bn) exact in f32
+    sm, e = _round_decompose_e4m3(p, fmt, gate_subnormal)
+    # the 16 narrow exponent-bin accumulators (int32-exact totals)
+    for b in range(fmt.n_bins):
+        acc_bins[b] += jnp.sum(jnp.where(e == b, sm, 0), axis=1)
+
+    @pl.when(k == nsteps - 1)
+    def _done():
+        # final 16x shift+add (once per dot product — §5.2 amortization)
+        tot = jnp.zeros_like(o_ref)
+        for b in range(fmt.n_bins):
+            tot += acc_bins[b].astype(jnp.float32) * (
+                2.0 ** (max(b, 1) - (fmt.bias + fmt.mbits)))
+        o_ref[...] = tot
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("fmt", "gate_subnormal", "block_m", "block_n", "block_k",
+                     "interpret"))
+def mgs_matmul_dmac_pallas(x, w, fmt: FPFormat = E4M3,
+                           gate_subnormal: bool = True, *, block_m: int = 32,
+                           block_n: int = 32, block_k: int = 128,
+                           interpret: bool = False):
+    """Paper-faithful MGS matmul (per-product E4M3 rounding, Fig. 8)."""
+    M, K = x.shape
+    K2, N = w.shape
+    assert K == K2, (x.shape, w.shape)
+    Mp, Np, Kp = (_ceil(M, block_m) * block_m, _ceil(N, block_n) * block_n,
+                  _ceil(K, block_k) * block_k)
+    xp = _pad2(x.astype(jnp.float32), Mp, Kp)
+    wp = _pad2(w.astype(jnp.float32), Kp, Np)
+    nsteps = Kp // block_k
+
+    kernel = functools.partial(_dmac_kernel, nsteps=nsteps, fmt=fmt,
+                               gate_subnormal=gate_subnormal)
+    out = pl.pallas_call(
+        kernel,
+        grid=(Mp // block_m, Np // block_n, nsteps),
+        in_specs=[
+            pl.BlockSpec((block_m, block_k), lambda i, j, k: (i, k)),
+            pl.BlockSpec((block_k, block_n), lambda i, j, k: (k, j)),
+        ],
+        out_specs=pl.BlockSpec((block_m, block_n), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((Mp, Np), jnp.float32),
+        scratch_shapes=[
+            pltpu.VMEM((fmt.n_bins, block_m, block_n), jnp.int32),
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(xp, wp)
+    return out[:M, :N]
+
+
+def _ceil(a: int, b: int) -> int:
+    return -(-a // b)
+
+
+def _pad2(x, r: int, c: int):
+    return jnp.pad(x, ((0, r - x.shape[0]), (0, c - x.shape[1])))

@@ -1,0 +1,58 @@
+"""Jitted public wrappers around the MGS Pallas kernels.
+
+``mgs_matmul`` dispatches to the Pallas kernel (TPU; tests run it in
+interpret mode on CPU) or to the pure-jnp reference, honoring the
+QuantConfig block shapes. Batched LHS (..., K) is flattened to (M, K).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.formats import E4M3, FPFormat
+from . import ref as _ref
+from .mgs_matmul import mgs_matmul_dmac_pallas, mgs_matmul_exact_pallas
+
+__all__ = ["mgs_matmul"]
+
+
+def _default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def mgs_matmul(x, w, fmt: FPFormat = E4M3, mode: str = "exact", *,
+               use_kernel: bool = True, gate_subnormal: bool = True,
+               block_m: int = 128, block_n: int = 128, block_k: int = 128,
+               interpret: bool | None = None):
+    """MGS quantized matmul: (..., K) @ (K, N) with MGS numerics.
+
+    Operands must be format-exact FP8 values (see quant.quantize_fp8);
+    per-tensor scales are applied by the caller (quant.qmatmul).
+    """
+    if interpret is None:
+        interpret = _default_interpret()
+    ix_bits = fmt.mbits + 1 + fmt.emax  # fixed-point width of sm << e
+    if mode == "exact" and ix_bits > 21:
+        # The 3x7-bit limb scheme needs ix = sm << e to fit ~20 bits;
+        # wide-exponent formats (E5M2: 33-bit ix) cannot use it — mirror
+        # the paper's hardware, which is E4M3-only (Fig. 8).
+        raise ValueError(
+            f"exact mode supports narrow-exponent formats only (E4M3/"
+            f"E3M4); {fmt.name} (ix={ix_bits}b) needs dmac mode")
+    lead = x.shape[:-1]
+    K = x.shape[-1]
+    x2 = x.reshape((-1, K))
+    if not use_kernel:
+        out = _ref.mgs_matmul_ref(x2, w, fmt, mode, gate_subnormal)
+    elif mode == "exact":
+        out = mgs_matmul_exact_pallas(
+            x2, w, fmt, block_m=block_m, block_n=block_n, block_k=block_k,
+            interpret=interpret)
+    elif mode == "dmac":
+        out = mgs_matmul_dmac_pallas(
+            x2, w, fmt, gate_subnormal, block_m=min(block_m, 32),
+            block_n=min(block_n, 32), block_k=block_k, interpret=interpret)
+    else:
+        raise ValueError(f"unknown mode {mode!r}")
+    return out.reshape(lead + (w.shape[-1],))

@@ -1,0 +1,95 @@
+"""Pure-jnp oracles for the MGS matmul kernels.
+
+These implement the exact numerical contracts the Pallas kernels must
+honor, in straightforward (memory-hungry) jnp. Test sizes only.
+
+Contracts (operands are format-exact FP8 values; see quant.quantize):
+
+* ``mode="dmac"``  (paper-faithful, Fig. 8):
+      out[i, j] = Σ_k round_e4m3_gated(x[i, k] * w[k, j])
+  accumulated *exactly* (exponent-binned integer mantissa sums, one final
+  shift+combine).
+* ``mode="exact"`` (beyond-paper): no per-product re-rounding —
+      out[i, j] = Σ_k x[i, k] * w[k, j]
+  exactly, via 20-bit fixed-point (products and sums exact in integers).
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.formats import E4M3, FPFormat, decompose
+from repro.core.mgs import bin_sums, combine_bins, round_product
+
+__all__ = ["mgs_matmul_ref", "wide_matmul_ref", "swamp_matmul_ref"]
+
+
+@partial(jax.jit, static_argnames=("fmt", "mode", "gate_subnormal", "dtype"))
+def mgs_matmul_ref(x, w, fmt: FPFormat = E4M3, mode: str = "dmac",
+                   gate_subnormal: bool = True, dtype=jnp.float32):
+    """Oracle matmul with MGS numerics. x: (M, K), w: (K, N) format-exact."""
+    if mode == "dmac":
+        p = x.astype(jnp.float32)[:, :, None] * w.astype(jnp.float32)[None]
+        p, _ = round_product(p, fmt, gate_subnormal)
+        sm, e = decompose(p, fmt)
+        bs = bin_sums(sm, e, fmt, axis=1)  # (M, N, n_bins) int32 exact
+        return combine_bins(bs, fmt, dtype)
+    if mode == "exact":
+        sx, ex = decompose(x.astype(jnp.float32), fmt)
+        sw, ew = decompose(w.astype(jnp.float32), fmt)
+        ix = sx << jnp.maximum(ex, 1)   # 20-bit fixed point, scale 2^-(bias+mbits)
+        iw = sw << jnp.maximum(ew, 1)
+        out = None
+        base, nlimb = 7, 3
+        lx = _limbs(ix, base, nlimb)
+        lw = _limbs(iw, base, nlimb)
+        for a in range(nlimb):
+            for b in range(nlimb):
+                part = jnp.dot(lx[a], lw[b], preferred_element_type=jnp.int32)
+                term = part.astype(dtype) * (2.0 ** (base * (a + b)))
+                out = term if out is None else out + term
+        return out * jnp.asarray(2.0 ** (-2 * (fmt.bias + fmt.mbits)), dtype)
+    raise ValueError(f"unknown mode {mode!r}")
+
+
+def _limbs(ix, base: int, n: int):
+    half, mod = 1 << (base - 1), 1 << base
+    limbs, rem = [], ix
+    for _ in range(n - 1):
+        c = ((rem + half) & (mod - 1)) - half
+        limbs.append(c)
+        rem = (rem - c) >> base
+    limbs.append(rem)
+    return limbs
+
+
+def wide_matmul_ref(x, w, dtype=jnp.float32):
+    """FP32-accumulation baseline (what H100/TPU MXU hardware does)."""
+    return jnp.dot(x.astype(jnp.float32), w.astype(jnp.float32)).astype(dtype)
+
+
+@partial(jax.jit, static_argnames=("fmt", "acc_mantissa_bits", "acc_ebits"))
+def swamp_matmul_ref(x, w, fmt: FPFormat = E4M3, acc_mantissa_bits: int = 4,
+                     acc_ebits: int = 4):
+    """Sequential narrow-accumulator matmul — the Fig. 3 failure mode.
+
+    Every partial sum is rounded to an ``acc_mantissa_bits``-significant-bit
+    accumulator (swamping) and clipped at its max (overflow).
+    """
+    from repro.core.formats import FPFormat as _F, round_to_format
+    acc_fmt = _F(f"acc{acc_mantissa_bits}", ebits=acc_ebits,
+                 mbits=acc_mantissa_bits - 1)
+
+    p_rounded, _ = round_product(
+        x.astype(jnp.float32)[:, :, None] * w.astype(jnp.float32)[None],
+        fmt, True)
+
+    def step(acc, pk):
+        return round_to_format(acc + pk, acc_fmt), None
+
+    acc0 = jnp.zeros((x.shape[0], w.shape[1]), jnp.float32)
+    acc, _ = jax.lax.scan(step, acc0, jnp.moveaxis(p_rounded, 1, 0))
+    return acc

@@ -1,0 +1,5 @@
+# Launch layer: production mesh, multi-pod dry-run, roofline analysis,
+# trip-count-corrected HLO cost model, and the train/serve drivers.
+# NOTE: repro.launch.dryrun must be imported FIRST in a fresh process
+# (it pins XLA_FLAGS before jax initializes); this package __init__
+# deliberately imports nothing heavy.

@@ -1,0 +1,321 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# The two lines above MUST precede any other import (jax locks the device
+# count at first initialization). Test hook: REPRO_DRYRUN_DEVICES overrides
+# the placeholder count — still before the jax import below.
+if os.environ.get("REPRO_DRYRUN_DEVICES"):
+    os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count="
+                               + os.environ["REPRO_DRYRUN_DEVICES"])
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell this builds the real train/prefill/decode step function,
+lowers it with ShapeDtypeStruct stand-ins (zero allocation), compiles it
+for the production mesh, and records:
+
+  * memory_analysis()  — proves the cell fits per-device HBM,
+  * cost_analysis()    — per-device FLOPs / bytes for the roofline,
+  * collective traffic — parsed from the post-SPMD HLO,
+  * the three roofline terms + bottleneck (launch/roofline.py).
+
+Usage:
+  python -m repro.launch.dryrun --arch deepseek-7b --shape train_4k
+  python -m repro.launch.dryrun --all --multi-pod both
+  python -m repro.launch.dryrun --all --out experiments/dryrun
+"""
+
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import (ARCHS, SHAPES, get_config, shape_applicable)
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.launch.mesh import batch_axes, make_production_mesh
+from repro.launch import roofline as rl
+from repro.models import (decode_step, init_cache, init_params, prefill)
+from repro.launch import hlo_cost
+from repro.parallel.sharding import (make_rules, named_sharding,
+                                     resolve_spec, use_rules)
+from repro.quant import QuantConfig
+from repro.train import OptConfig, init_train_state, make_train_step
+
+__all__ = ["input_specs", "build_cell", "run_cell", "main"]
+
+QUANT_MODES = {
+    "none": QuantConfig(),
+    "fp8_wide": QuantConfig(dtype="fp8_e4m3", accum="wide"),
+    "fp8_mgs_exact": QuantConfig(dtype="fp8_e4m3", accum="mgs_exact",
+                                 use_kernel=False),
+    "int8": QuantConfig(dtype="int8", accum="wide"),
+}
+
+
+def _cfg_for(arch: str, shape: ShapeConfig, quant: str,
+             overrides: Optional[Dict] = None) -> ModelConfig:
+    cfg = get_config(arch)
+    kw: Dict[str, Any] = {"quant": QUANT_MODES[quant]}
+    if shape.kind == "train":
+        kw["remat"] = "layer"
+    else:
+        # serving runs bf16 weights (no optimizer, no master copies)
+        kw["remat"] = "none"
+        kw["param_dtype"] = "bfloat16"
+    if overrides:
+        kw.update(overrides)
+    return dataclasses.replace(cfg, **kw)
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    """ShapeDtypeStruct stand-ins for every model input of this cell."""
+    B, S = shape.global_batch, shape.seq_len
+    f = jax.ShapeDtypeStruct
+    cdt = jnp.bfloat16
+    if shape.kind == "train":
+        specs = {"tokens": f((B, S), jnp.int32),
+                 "labels": f((B, S), jnp.int32)}
+    elif shape.kind == "prefill":
+        specs = {"tokens": f((B, S), jnp.int32)}
+    else:  # decode
+        specs = {"tokens": f((B, 1), jnp.int32)}
+    if cfg.vision_prefix and shape.kind != "decode":
+        specs["vision_embeds"] = f((B, cfg.vision_prefix, cfg.d_model), cdt)
+    if cfg.encoder_layers and shape.kind != "decode":
+        specs["audio_embeds"] = f((B, cfg.encoder_len, cfg.d_model), cdt)
+    return specs
+
+
+def _cache_len(cfg: ModelConfig, shape: ShapeConfig) -> int:
+    return shape.seq_len + (cfg.vision_prefix or 0)
+
+
+def build_cell(cfg: ModelConfig, shape: ShapeConfig, mesh,
+               opt_cfg: Optional[OptConfig] = None):
+    """Returns (fn, args_sds, in_shardings, out_shardings, meta)."""
+    rules = make_rules(mesh,
+                       "train" if shape.kind == "train" else "serve",
+                       seq_shard_kv=cfg.seq_shard_kv,
+                       prefer_sp=cfg.is_moe,
+                       shard_seq=(cfg.ssm_state == 0))
+    box: Dict[str, Any] = {}
+    batch_sds = input_specs(cfg, shape)
+    bspec = {
+        "tokens": ("batch", "seq"), "labels": ("batch", "seq"),
+        "vision_embeds": ("batch", "seq", "embed_act"),
+        "audio_embeds": ("batch", "seq", "embed_act"),
+    }
+    batch_dims = {k: bspec[k] for k in batch_sds}
+
+    if shape.kind == "train":
+        opt_cfg = opt_cfg or OptConfig(factored=cfg.opt_factored)
+
+        def make_state(k):
+            p, d = init_params(cfg, k)
+            box["dims"] = d
+            return init_train_state(p, factored=opt_cfg.factored)
+
+        state_sds = jax.eval_shape(make_state, jax.random.PRNGKey(0))
+        pdims = box["dims"]
+        from repro.train import opt_state_dims
+        state_dims = {"params": pdims,
+                      "opt": opt_state_dims(pdims, state_sds["params"],
+                                            opt_cfg.factored)}
+        state_specs = resolve_spec(
+            state_dims, jax.tree.map(lambda s: s.shape, state_sds), rules)
+        batch_specs = resolve_spec(
+            batch_dims, jax.tree.map(lambda s: s.shape, batch_sds), rules)
+        step = make_train_step(cfg, opt_cfg, grad_accum=cfg.grad_accum)
+        metrics_spec = {"loss": jax.sharding.PartitionSpec(),
+                        "aux_loss": jax.sharding.PartitionSpec(),
+                        "tokens": jax.sharding.PartitionSpec(),
+                        "grad_norm": jax.sharding.PartitionSpec()}
+        in_sh = (named_sharding(state_specs, mesh),
+                 named_sharding(batch_specs, mesh))
+        out_sh = (named_sharding(state_specs, mesh),
+                  named_sharding(metrics_spec, mesh))
+        args = (state_sds, batch_sds)
+        return step, args, in_sh, out_sh, {"rules": rules}
+
+    # serving cells
+    def make_params(k):
+        p, d = init_params(cfg, k)
+        box["dims"] = d
+        return p
+
+    params_sds = jax.eval_shape(make_params, jax.random.PRNGKey(0))
+    pdims = box["dims"]
+    params_specs = resolve_spec(
+        pdims, jax.tree.map(lambda s: s.shape, params_sds), rules)
+
+    cbox: Dict[str, Any] = {}
+    B = shape.global_batch
+    S_max = _cache_len(cfg, shape)
+
+    def make_cache():
+        c, d = init_cache(cfg, B, S_max)
+        cbox["dims"] = d
+        return c
+
+    cache_sds = jax.eval_shape(make_cache)
+    cdims = cbox["dims"]
+    cdims = {k: (v if v else (None,)) for k, v in cdims.items()}
+    cache_specs = resolve_spec(
+        cdims, jax.tree.map(lambda s: s.shape, cache_sds), rules)
+    batch_specs = resolve_spec(
+        batch_dims, jax.tree.map(lambda s: s.shape, batch_sds), rules)
+    logits_spec = rules.resolve(("batch", "vocab_act"), (B, cfg.vocab))
+
+    if shape.kind == "prefill":
+        def fn(params, batch, cache):
+            return prefill(params, cfg, batch, cache)
+        in_sh = (named_sharding(params_specs, mesh),
+                 named_sharding(batch_specs, mesh),
+                 named_sharding(cache_specs, mesh))
+        out_sh = (named_sharding(logits_spec, mesh),
+                  named_sharding(cache_specs, mesh))
+        args = (params_sds, batch_sds, cache_sds)
+        return fn, args, in_sh, out_sh, {"rules": rules}
+
+    def fn(params, tokens, cache):
+        return decode_step(params, cfg, tokens, cache)
+
+    tok_spec = rules.resolve(("batch", "seq"), (B, 1))
+    in_sh = (named_sharding(params_specs, mesh),
+             named_sharding(tok_spec, mesh),
+             named_sharding(cache_specs, mesh))
+    out_sh = (named_sharding(logits_spec, mesh),
+              named_sharding(cache_specs, mesh))
+    args = (params_sds, batch_sds["tokens"], cache_sds)
+    return fn, args, in_sh, out_sh, {"rules": rules}
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool = False,
+             quant: str = "none", overrides: Optional[Dict] = None,
+             donate: bool = True) -> Dict[str, Any]:
+    """Lower + compile one cell; return the §Dry-run/§Roofline record."""
+    shape = SHAPES[shape_name]
+    cfg = _cfg_for(arch, shape, quant, overrides)
+    if not shape_applicable(cfg, shape):
+        return {"arch": arch, "shape": shape_name, "skipped": True,
+                "reason": "long_500k needs sub-quadratic attention; "
+                          "this arch is pure full attention"}
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    t0 = time.time()
+    fn, args, in_sh, out_sh, meta = build_cell(cfg, shape, mesh)
+    donate_args = (0,) if shape.kind == "train" else (
+        (2,) if donate else ())
+    jitted = jax.jit(fn, in_shardings=in_sh, out_shardings=out_sh,
+                     donate_argnums=donate_args)
+    with use_rules(meta["rules"]):
+        lowered = jitted.lower(*args)
+    t1 = time.time()
+    compiled = lowered.compile()
+    t2 = time.time()
+
+    ma = compiled.memory_analysis()
+    mem = {
+        "argument_bytes": ma.argument_size_in_bytes,
+        "output_bytes": ma.output_size_in_bytes,
+        "temp_bytes": ma.temp_size_in_bytes,
+        "alias_bytes": ma.alias_size_in_bytes,
+        "code_bytes": ma.generated_code_size_in_bytes,
+    }
+    mem["live_bytes"] = (mem["argument_bytes"] + mem["output_bytes"]
+                         + mem["temp_bytes"] - mem["alias_bytes"])
+    cost = dict(compiled.cost_analysis())
+    hlo = compiled.as_text()
+    # cost_analysis counts while-loop (lax.scan) bodies ONCE; re-derive
+    # trip-count-corrected figures from the partitioned HLO text.
+    hc = hlo_cost.analyze_hlo(hlo)
+    cost_corrected = {
+        "flops": hc.flops,
+        "bytes accessed": max(float(cost.get("bytes accessed", 0.0)),
+                              hc.dot_bytes),
+    }
+    tokens = shape.global_batch * (shape.seq_len if shape.kind != "decode"
+                                   else 1)
+    mflops = rl.model_flops(cfg.n_params(), cfg.n_active_params(), tokens,
+                            shape.kind)
+    report = rl.analyze(
+        arch=arch, shape=shape_name, mesh_name=mesh_name,
+        n_devices=mesh.size, cost=cost_corrected,
+        collective_bytes=hc.collective_bytes,
+        collective_per_op=hc.collective_per_op, mem=mem, mflops=mflops)
+    rec = report.to_json()
+    rec.update(
+        quant=quant, lower_s=round(t1 - t0, 2),
+        compile_s=round(t2 - t1, 2),
+        n_params=cfg.n_params(), n_active_params=cfg.n_active_params(),
+        fits_hbm=mem["live_bytes"] <= rl.HW_V5E.hbm_bytes,
+        kind=shape.kind, overrides=overrides or {},
+        raw_cost_analysis={k: float(v) for k, v in cost.items()
+                           if isinstance(v, (int, float))},
+        n_while_loops=hc.n_while_loops, max_trip=hc.max_trip,
+    )
+    return rec
+
+
+def _cells():
+    for arch in ARCHS:
+        if arch == "mgs-paper-eval":
+            continue
+        for shape_name in SHAPES:
+            yield arch, shape_name
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None, choices=list(SHAPES))
+    ap.add_argument("--multi-pod", default="single",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--quant", default="none", choices=list(QUANT_MODES))
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--continue-on-error", action="store_true")
+    args = ap.parse_args()
+
+    os.makedirs(args.out, exist_ok=True)
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.multi_pod]
+    cells = (list(_cells()) if args.all
+             else [(args.arch, args.shape)])
+    results = []
+    for arch, shape_name in cells:
+        for mp in meshes:
+            tag = f"{arch}__{shape_name}__{'2x16x16' if mp else '16x16'}"
+            if args.quant != "none":
+                tag += f"__{args.quant}"
+            try:
+                rec = run_cell(arch, shape_name, mp, args.quant)
+            except Exception as e:  # record the failure — it's a bug
+                rec = {"arch": arch, "shape": shape_name, "error": str(e),
+                       "traceback": traceback.format_exc()}
+                print(f"FAIL {tag}: {e}")
+                if not args.continue_on_error:
+                    raise
+            path = os.path.join(args.out, tag + ".json")
+            with open(path, "w") as f:
+                json.dump(rec, f, indent=1)
+            results.append(rec)
+            if rec.get("skipped"):
+                print(f"SKIP {tag}: {rec['reason']}")
+            elif "error" not in rec:
+                print(f"OK   {tag}: compile={rec['compile_s']}s "
+                      f"live={rec['memory_per_device']['live_bytes']/1e9:.2f}GB "
+                      f"flops/dev={rec['hlo_flops_per_device']:.3e} "
+                      f"coll/dev={rec['collective_bytes_per_device']:.3e} "
+                      f"bottleneck={rec['bottleneck']}")
+    ok = sum(1 for r in results if "error" not in r)
+    print(f"\n{ok}/{len(results)} cells OK")
+
+
+if __name__ == "__main__":
+    main()

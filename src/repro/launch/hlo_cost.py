@@ -1,0 +1,248 @@
+"""Trip-count-aware cost analysis of compiled HLO text.
+
+``compiled.cost_analysis()`` counts a ``while`` body **once**, which makes
+it useless for scan-over-layers models (a 30-layer stack reports ~1 layer
+of FLOPs). This module re-derives the roofline inputs directly from the
+post-SPMD HLO text, multiplying every computation's cost by the product of
+its enclosing loops' trip counts:
+
+* **FLOPs**: every ``dot`` contributes 2 x prod(result_shape) x
+  prod(lhs contracting dims). (Element-wise FLOPs are ignored — matmul
+  dominates every cell in this pool; the resulting figure is a tight
+  lower bound, validated against the analytic 6·N·D in tests.)
+* **Collective bytes**: ring-model traffic per op (factors below), now
+  correctly multiplied through loop nests.
+* **HBM traffic estimate**: sum of dot operand+result bytes — a
+  matmul-centric estimate of bytes moved, reported alongside
+  cost_analysis()'s once-counted "bytes accessed".
+
+Trip counts are extracted from each while condition computation (the
+loop bound is its largest integer literal: ``constant(N)`` compared
+``LT`` against the induction variable).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+__all__ = ["HloCost", "analyze_hlo"]
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_COMP_HDR = re.compile(
+    r"^(?P<entry>ENTRY )?%?(?P<name>[\w.\-]+)\s*\((?P<params>.*)\)\s*->"
+    r".*\{\s*$")
+_DEF = re.compile(r"^\s*(?:ROOT\s+)?%([\w.\-]+) = \(?(\w+)\[([\d,]*)\]")
+_PARAM = re.compile(r"([\w.\-]+)(?:\.\d+)?: \(?(\w+)\[([\d,]*)\]")
+_SHAPE = re.compile(r"(\w+)\[([\d,]*)\]")
+_DOT = re.compile(
+    r"= (?P<result>[\w\[\],{} ]+?) dot\((?P<args>[^)]*)\)(?P<attrs>[^\n]*)")
+_CONV = re.compile(
+    r"= (?P<result>[\w\[\],{} ]+?) convolution\((?P<args>[^)]*)\)")
+_COLL = re.compile(
+    r"= (?P<result>.+?) (?P<op>all-reduce|all-gather|reduce-scatter|"
+    r"all-to-all|collective-permute)(?P<start>-start)?\((?P<args>[^)]*)\)"
+    r"(?P<attrs>[^\n]*)")
+_CALL = re.compile(r"(?:calls|to_apply)=%?([\w.\-]+)")
+_WHILE = re.compile(r"while\([^)]*\),\s*condition=%?([\w.\-]+),\s*"
+                    r"body=%?([\w.\-]+)")
+_CONST = re.compile(r"constant\((\d+)\)")
+_GROUPS = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_OPERAND = re.compile(r"%([\w.\-]+)")
+
+_COLL_FACTORS = {"all-reduce": 2.0, "all-gather": 1.0,
+                 "reduce-scatter": 1.0, "all-to-all": 1.0,
+                 "collective-permute": 1.0}
+
+
+def _nelems(dims: List[int]) -> int:
+    n = 1
+    for d in dims:
+        n *= d
+    return n
+
+
+@dataclasses.dataclass
+class _Comp:
+    name: str
+    header: str
+    lines: List[str]
+    flops: float = 0.0
+    dot_bytes: float = 0.0
+    coll_bytes: float = 0.0
+    coll_per_op: Dict[str, float] = dataclasses.field(default_factory=dict)
+    calls: List[Tuple[str, float]] = dataclasses.field(default_factory=list)
+
+
+def _split_computations(text: str) -> Tuple[Dict[str, _Comp], str]:
+    comps: Dict[str, _Comp] = {}
+    entry = ""
+    cur: Optional[_Comp] = None
+    for line in text.splitlines():
+        m = _COMP_HDR.match(line)
+        if m:
+            cur = _Comp(name=m.group("name"), header=m.group("params"),
+                        lines=[])
+            comps[cur.name] = cur
+            if m.group("entry"):
+                entry = cur.name
+        elif cur is not None:
+            if line.strip() == "}":
+                cur = None
+            else:
+                cur.lines.append(line)
+    return comps, entry
+
+
+def _defs_of(comp: _Comp) -> Dict[str, Tuple[str, List[int]]]:
+    """name -> (dtype, dims) for every op result + computation params."""
+    defs: Dict[str, Tuple[str, List[int]]] = {}
+    for m in _PARAM.finditer(comp.header):
+        dims = [int(d) for d in m.group(3).split(",") if d]
+        defs[m.group(1)] = (m.group(2), dims)
+    for line in comp.lines:
+        m = _DEF.match(line)
+        if m:
+            dims = [int(d) for d in m.group(3).split(",") if d]
+            defs[m.group(1)] = (m.group(2), dims)
+    return defs
+
+
+def _bytes_of(entry: Optional[Tuple[str, List[int]]]) -> int:
+    if entry is None or entry[0] not in _DTYPE_BYTES:
+        return 0
+    return _nelems(entry[1]) * _DTYPE_BYTES[entry[0]]
+
+
+def _trip_count(cond: Optional[_Comp], comps: Dict[str, _Comp]) -> int:
+    if cond is None:
+        return 1
+    best = 1
+    texts = ["\n".join(cond.lines)]
+    for cm in _CALL.finditer(texts[0]):
+        callee = comps.get(cm.group(1))
+        if callee:
+            texts.append("\n".join(callee.lines))
+    for t in texts:
+        for c in _CONST.finditer(t):
+            best = max(best, int(c.group(1)))
+    return best
+
+
+def _parse_comp(comp: _Comp, comps: Dict[str, _Comp]):
+    defs = _defs_of(comp)
+    for line in comp.lines:
+        dm = _DOT.search(line)
+        if dm:
+            rm = _SHAPE.search(dm.group("result"))
+            rdims = ([int(d) for d in rm.group(2).split(",") if d]
+                     if rm else [])
+            rbytes = _bytes_of((rm.group(1), rdims) if rm else None)
+            operands = _OPERAND.findall(dm.group("args"))
+            k = 1
+            cd = re.search(r"lhs_contracting_dims=\{([\d,]*)\}",
+                           dm.group("attrs"))
+            if operands and cd:
+                lhs = defs.get(operands[0])
+                if lhs:
+                    for ci in cd.group(1).split(","):
+                        if ci and int(ci) < len(lhs[1]):
+                            k *= lhs[1][int(ci)]
+            comp.flops += 2.0 * _nelems(rdims) * k
+            comp.dot_bytes += rbytes + sum(
+                _bytes_of(defs.get(o)) for o in operands)
+            continue
+        cm = _CONV.search(line)
+        if cm:
+            rm = _SHAPE.search(cm.group("result"))
+            if rm:
+                rdims = [int(d) for d in rm.group(2).split(",") if d]
+                # window size unknown from the result alone; count as 2x
+                # result elems x operand reduction — approximate via first
+                # operand size ratio (conservative; convs are rare here).
+                operands = _OPERAND.findall(cm.group("args"))
+                lhs = defs.get(operands[0]) if operands else None
+                k = (_nelems(lhs[1]) // max(_nelems(rdims), 1)
+                     if lhs else 1)
+                comp.flops += 2.0 * _nelems(rdims) * max(k, 1)
+            continue
+        xm = _COLL.search(line)
+        if xm:
+            if "-done" in line.split("=", 1)[1][:60]:
+                continue
+            op = xm.group("op")
+            rm = _SHAPE.findall(xm.group("result"))
+            rbytes = sum(_nelems([int(d) for d in dims.split(",") if d])
+                         * _DTYPE_BYTES.get(dt, 0) for dt, dims in rm)
+            gm = _GROUPS.search(line)
+            g = int(gm.group(2)) if gm else 2
+            eff = (g - 1) / g if g > 1 else 0.0
+            traffic = _COLL_FACTORS[op] * eff * rbytes
+            comp.coll_bytes += traffic
+            comp.coll_per_op[op] = comp.coll_per_op.get(op, 0.0) + traffic
+        wm = _WHILE.search(line)
+        if wm:
+            trips = _trip_count(comps.get(wm.group(1)), comps)
+            comp.calls.append((wm.group(2), float(trips)))
+            comp.calls.append((wm.group(1), float(trips)))
+            continue
+        for callm in _CALL.finditer(line):
+            comp.calls.append((callm.group(1), 1.0))
+
+
+@dataclasses.dataclass
+class HloCost:
+    flops: float
+    dot_bytes: float
+    collective_bytes: float
+    collective_per_op: Dict[str, float]
+    n_while_loops: int
+    max_trip: int
+
+
+def analyze_hlo(text: str) -> HloCost:
+    comps, entry = _split_computations(text)
+    for comp in comps.values():
+        _parse_comp(comp, comps)
+
+    memo: Dict[str, Tuple[float, float, float, Dict[str, float]]] = {}
+
+    def total(name: str, depth: int = 0):
+        if name in memo:
+            return memo[name]
+        comp = comps.get(name)
+        if comp is None or depth > 64:
+            return (0.0, 0.0, 0.0, {})
+        f, db, cb = comp.flops, comp.dot_bytes, comp.coll_bytes
+        per = dict(comp.coll_per_op)
+        for callee, mult in comp.calls:
+            cf, cdb, ccb, cper = total(callee, depth + 1)
+            f += mult * cf
+            db += mult * cdb
+            cb += mult * ccb
+            for key, v in cper.items():
+                per[key] = per.get(key, 0.0) + mult * v
+        memo[name] = (f, db, cb, per)
+        return memo[name]
+
+    n_while = 0
+    max_trip = 1
+    for comp in comps.values():
+        seen = set()
+        for callee, mult in comp.calls:
+            if mult > 1.0 and callee not in seen:
+                seen.add(callee)
+                n_while += 1
+                max_trip = max(max_trip, int(mult))
+    n_while //= 2  # body + condition counted per loop
+
+    f, db, cb, per = total(entry)
+    return HloCost(flops=f, dot_bytes=db, collective_bytes=cb,
+                   collective_per_op=per, n_while_loops=n_while,
+                   max_trip=max_trip)

@@ -1,0 +1,37 @@
+"""Production mesh construction.
+
+``make_production_mesh`` is a function (never a module-level constant) so
+importing this module touches no jax device state — required because the
+dry-run must set XLA_FLAGS before any jax initialization.
+
+Production topology: TPU v5e pods of 256 chips arranged (data=16,
+model=16); the multi-pod mesh adds a leading pod axis (2 pods = 512
+chips). DCN connects pods (the "pod" axis carries only data-parallel
+gradient reduction); ICI carries the model axis.
+"""
+
+from __future__ import annotations
+
+import jax
+
+__all__ = ["make_production_mesh", "make_mesh", "batch_axes"]
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes,
+        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_mesh(shape, axes):
+    """Arbitrary mesh (tests, elastic restarts, reduced smoke meshes)."""
+    return jax.make_mesh(
+        tuple(shape), tuple(axes),
+        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def batch_axes(mesh) -> tuple:
+    """The data-parallel axes of a mesh (pod included when present)."""
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)

@@ -1,0 +1,189 @@
+"""Roofline analysis from compiled dry-run artifacts (no hardware needed).
+
+Derives the three roofline terms per (arch × shape × mesh):
+
+    compute    = HLO_FLOPs_per_device / peak_FLOPs_per_chip
+    memory     = HLO_bytes_per_device / HBM_bandwidth
+    collective = collective_bytes_per_device / ICI_link_bandwidth
+
+``cost_analysis()`` reports *per-device* (post-SPMD) flops/bytes (verified
+empirically in this repo's probes). Collective bytes are not in
+cost_analysis; we parse the post-partitioning HLO (``compiled.as_text()``)
+and sum the per-op traffic with ring-algorithm factors:
+
+    all-reduce      2 (g-1)/g x result bytes
+    all-gather        (g-1)/g x result bytes
+    reduce-scatter    (g-1)/g x max(operand, result) bytes
+    all-to-all        (g-1)/g x result bytes
+    collective-permute          result bytes
+
+Hardware model: TPU v5e — 197 TFLOP/s bf16/chip, 819 GB/s HBM,
+~50 GB/s/link ICI (per spec in the task brief).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import re
+from typing import Dict, List, Optional
+
+__all__ = ["HW_V5E", "CollectiveStats", "parse_collectives",
+           "RooflineReport", "analyze", "model_flops"]
+
+
+@dataclasses.dataclass(frozen=True)
+class Hardware:
+    name: str
+    peak_flops: float        # per chip, bf16
+    hbm_bw: float            # bytes/s per chip
+    ici_bw: float            # bytes/s per link
+    hbm_bytes: float         # capacity per chip
+
+
+HW_V5E = Hardware(name="tpu_v5e", peak_flops=197e12, hbm_bw=819e9,
+                  ici_bw=50e9, hbm_bytes=16e9)
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16, "token": 0,
+}
+
+_COLL_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%[\w.\-]+ = (?P<result>.+?) "
+    r"(?P<op>all-reduce|all-gather|reduce-scatter|all-to-all|"
+    r"collective-permute)(?:-start)?\(", re.M)
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_V1_RE = re.compile(r"replica_groups=\{([^}]*)\}")
+
+_FACTORS = {"all-reduce": 2.0, "all-gather": 1.0, "reduce-scatter": 1.0,
+            "all-to-all": 1.0, "collective-permute": 1.0}
+
+
+def _shape_bytes(text: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(text):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    bytes_per_device: float
+    per_op: Dict[str, float]
+    counts: Dict[str, int]
+    ops: List[Dict]
+
+    def to_json(self):
+        return {"bytes_per_device": self.bytes_per_device,
+                "per_op": self.per_op, "counts": self.counts}
+
+
+def parse_collectives(hlo_text: str) -> CollectiveStats:
+    """Sum per-device collective traffic from post-SPMD HLO text."""
+    per_op: Dict[str, float] = {}
+    counts: Dict[str, int] = {}
+    ops: List[Dict] = []
+    for m in _COLL_RE.finditer(hlo_text):
+        op = m.group("op")
+        line = hlo_text[m.start():hlo_text.find("\n", m.start())]
+        if "-done" in line.split("=")[1][:40]:
+            continue  # async done op: counted at -start
+        rbytes = _shape_bytes(m.group("result"))
+        g = _group_size(line)
+        eff = (g - 1) / g if g > 1 else 0.0
+        traffic = _FACTORS[op] * eff * rbytes
+        per_op[op] = per_op.get(op, 0.0) + traffic
+        counts[op] = counts.get(op, 0) + 1
+        ops.append({"op": op, "bytes": rbytes, "group": g,
+                    "traffic": traffic})
+    return CollectiveStats(
+        bytes_per_device=sum(per_op.values()), per_op=per_op,
+        counts=counts, ops=ops)
+
+
+def _group_size(line: str) -> int:
+    m = _GROUPS_RE.search(line)
+    if m:
+        return int(m.group(2))  # [n_groups, group_size]<=[...]
+    m = _GROUPS_V1_RE.search(line)
+    if m:
+        first = m.group(1).split("}")[0].split("{")[-1]
+        ids = [x for x in first.split(",") if x.strip()]
+        return max(1, len(ids))
+    return 2
+
+
+def model_flops(n_params: int, n_active_params: int, tokens: int,
+                kind: str) -> float:
+    """Analytic 'useful' FLOPs: 6·N·D training, 2·N·D forward-only."""
+    n = n_active_params
+    return (6.0 if kind == "train" else 2.0) * n * tokens
+
+
+@dataclasses.dataclass
+class RooflineReport:
+    arch: str
+    shape: str
+    mesh: str
+    n_devices: int
+    hlo_flops_per_device: float
+    hlo_bytes_per_device: float
+    collective_bytes_per_device: float
+    t_compute: float
+    t_memory: float
+    t_collective: float
+    bottleneck: str
+    model_flops: float
+    useful_flops_ratio: float
+    peak_fraction: float
+    memory_per_device: Dict[str, float]
+    collectives: Dict
+
+    def to_json(self):
+        return dataclasses.asdict(self)
+
+    @property
+    def step_time_bound(self) -> float:
+        return max(self.t_compute, self.t_memory, self.t_collective)
+
+
+def analyze(*, arch: str, shape: str, mesh_name: str, n_devices: int,
+            cost: Dict, mem: Dict, mflops: float,
+            collective_bytes: Optional[float] = None,
+            collective_per_op: Optional[Dict[str, float]] = None,
+            hlo_text: Optional[str] = None,
+            hw: Hardware = HW_V5E) -> RooflineReport:
+    flops = float(cost.get("flops", 0.0))
+    bytes_acc = float(cost.get("bytes accessed", 0.0))
+    if collective_bytes is None:
+        coll = parse_collectives(hlo_text or "")
+        collective_bytes = coll.bytes_per_device
+        collective_per_op = coll.per_op
+    t_comp = flops / hw.peak_flops
+    t_mem = bytes_acc / hw.hbm_bw
+    t_coll = collective_bytes / hw.ici_bw
+    terms = {"compute": t_comp, "memory": t_mem, "collective": t_coll}
+    bottleneck = max(terms, key=terms.get)
+    total_hlo_flops = flops * n_devices
+    return RooflineReport(
+        arch=arch, shape=shape, mesh=mesh_name, n_devices=n_devices,
+        hlo_flops_per_device=flops, hlo_bytes_per_device=bytes_acc,
+        collective_bytes_per_device=collective_bytes,
+        t_compute=t_comp, t_memory=t_mem, t_collective=t_coll,
+        bottleneck=bottleneck, model_flops=mflops,
+        useful_flops_ratio=(mflops / total_hlo_flops
+                            if total_hlo_flops else 0.0),
+        peak_fraction=(t_comp / max(t_comp, t_mem, t_coll)
+                       if max(t_comp, t_mem, t_coll) > 0 else 0.0),
+        memory_per_device=mem,
+        collectives={"bytes_per_device": collective_bytes,
+                     "per_op": collective_per_op or {}})

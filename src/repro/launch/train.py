@@ -1,0 +1,197 @@
+"""End-to-end distributed training driver.
+
+Wires together: config -> sharded init -> data pipeline -> jitted train
+step (pjit w/ logical-rules shardings) -> metrics -> async atomic
+checkpoints -> preemption handling -> crash recovery -> straggler
+monitoring -> elastic restart. On this CPU container it runs reduced
+configs for real (examples/train_lm.py); on TPU the same driver runs the
+full configs unchanged.
+
+  python -m repro.launch.train --arch deepseek-7b --steps 100 \
+      --mesh 1x1 --reduced --batch 8 --seq 128
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import os
+import time
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config, reduced_config
+from repro.configs.base import ModelConfig
+from repro.data import DataConfig, SyntheticLM
+from repro.launch.mesh import batch_axes, make_mesh
+from repro.models import init_params
+from repro.parallel.sharding import (named_sharding, resolve_spec,
+                                     train_rules, use_rules)
+from repro.runtime import checkpoint as ckpt
+from repro.runtime.fault_tolerance import (PreemptionHandler,
+                                           StragglerMonitor,
+                                           run_with_recovery)
+from repro.train import OptConfig, init_train_state, make_train_step
+
+__all__ = ["TrainLoopConfig", "train_loop", "main"]
+
+
+@dataclasses.dataclass
+class TrainLoopConfig:
+    steps: int = 100
+    global_batch: int = 8
+    seq_len: int = 128
+    log_every: int = 10
+    ckpt_every: int = 50
+    ckpt_dir: Optional[str] = None
+    keep: int = 3
+    grad_accum: int = 1
+    seed: int = 0
+    max_restarts: int = 3
+
+
+def _shardings(cfg: ModelConfig, mesh, state_sds, rules,
+               factored: bool = False):
+    box: Dict[str, Any] = {}
+
+    def make_state(k):
+        p, d = init_params(cfg, k)
+        box["dims"] = d
+        return init_train_state(p, factored=factored)
+
+    _ = jax.eval_shape(make_state, jax.random.PRNGKey(0))
+    pdims = box["dims"]
+    from repro.train import opt_state_dims
+    state_dims = {"params": pdims,
+                  "opt": opt_state_dims(pdims, state_sds["params"],
+                                        factored)}
+    specs = resolve_spec(state_dims,
+                         jax.tree.map(lambda s: s.shape, state_sds), rules)
+    return named_sharding(specs, mesh)
+
+
+def train_loop(cfg: ModelConfig, loop: TrainLoopConfig, mesh,
+               opt_cfg: Optional[OptConfig] = None,
+               resume_step: Optional[int] = None) -> Dict[str, Any]:
+    """Run the loop; returns final metrics. Restartable + preemptible."""
+    opt_cfg = opt_cfg or OptConfig(total_steps=loop.steps,
+                                   warmup_steps=max(2, loop.steps // 20),
+                                   schedule=cfg.schedule,
+                                   factored=cfg.opt_factored)
+    rules = train_rules(mesh, fsdp=cfg.fsdp)
+    baxes = batch_axes(mesh)
+
+    def make_state(k):
+        p, _ = init_params(cfg, k)
+        return init_train_state(p, factored=opt_cfg.factored)
+
+    state_sds = jax.eval_shape(make_state, jax.random.PRNGKey(loop.seed))
+    state_sh = _shardings(cfg, mesh, state_sds, rules, opt_cfg.factored)
+    batch_dims = {"tokens": ("batch", "seq"), "labels": ("batch", "seq")}
+    batch_shapes = {"tokens": (loop.global_batch, loop.seq_len),
+                    "labels": (loop.global_batch, loop.seq_len)}
+    batch_sh = named_sharding(
+        resolve_spec(batch_dims, batch_shapes, rules), mesh)
+
+    metrics_sh = jax.tree.map(
+        lambda _: jax.sharding.NamedSharding(
+            mesh, jax.sharding.PartitionSpec()),
+        {"loss": 0, "aux_loss": 0, "tokens": 0, "grad_norm": 0})
+
+    step_fn = make_train_step(cfg, opt_cfg, grad_accum=loop.grad_accum)
+    jitted = jax.jit(step_fn, in_shardings=(state_sh, batch_sh),
+                     out_shardings=(state_sh, metrics_sh),
+                     donate_argnums=(0,))
+
+    data = SyntheticLM(DataConfig(vocab=cfg.vocab, seq_len=loop.seq_len,
+                                  global_batch=loop.global_batch,
+                                  seed=loop.seed))
+    ckpt_dir = loop.ckpt_dir
+    saver = ckpt.AsyncCheckpointer(keep=loop.keep)
+    handler = PreemptionHandler(signals=())  # installed by main()
+    monitor = StragglerMonitor(n_hosts=max(1, jax.process_count()))
+
+    # init or restore
+    start = 0
+    if resume_step is not None and ckpt_dir:
+        start, state, extra = ckpt.restore(ckpt_dir, resume_step,
+                                           template=state_sds,
+                                           shardings=state_sh)
+        data.load_state_dict(extra["data"])
+    else:
+        with use_rules(rules):
+            init_jit = jax.jit(
+                lambda k: init_train_state(init_params(cfg, k)[0],
+                                           factored=opt_cfg.factored),
+                out_shardings=state_sh)
+            state = init_jit(jax.random.PRNGKey(loop.seed))
+
+    history = []
+    metrics = {}
+    with use_rules(rules):
+        for step in range(start, loop.steps):
+            hb = data.make_batch(step)
+            batch = jax.tree.map(
+                lambda arr, sh: jax.device_put(arr, sh), hb, batch_sh)
+            t0 = time.time()
+            state, metrics = jitted(state, batch)
+            metrics = jax.tree.map(float, jax.device_get(metrics))
+            dt = (time.time() - t0) * 1e3
+            monitor.record([dt])
+            if step % loop.log_every == 0 or step == loop.steps - 1:
+                history.append({"step": step, **metrics, "ms": dt})
+                print(f"step {step:5d} loss {metrics['loss']:.4f} "
+                      f"gnorm {metrics['grad_norm']:.3f} {dt:.0f}ms")
+            if ckpt_dir and (step + 1) % loop.ckpt_every == 0:
+                saver.save(ckpt_dir, step + 1, state,
+                           extra={"data": data.state_dict()})
+            if handler.should_stop:
+                break
+    if ckpt_dir:
+        saver.wait()
+        ckpt.save(ckpt_dir, loop.steps, jax.device_get(state),
+                  extra={"data": data.state_dict()}, keep=loop.keep)
+    return {"final": metrics, "history": history, "state": state}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="deepseek-7b")
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--grad-accum", type=int, default=1)
+    ap.add_argument("--mesh", default="1x1",
+                    help="DATAxMODEL, e.g. 4x2")
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--max-restarts", type=int, default=3)
+    args = ap.parse_args()
+
+    cfg = (reduced_config(args.arch) if args.reduced
+           else get_config(args.arch))
+    data_p, model_p = (int(x) for x in args.mesh.split("x"))
+    mesh = make_mesh((data_p, model_p), ("data", "model"))
+    loop = TrainLoopConfig(steps=args.steps, global_batch=args.batch,
+                           seq_len=args.seq, ckpt_dir=args.ckpt_dir,
+                           grad_accum=args.grad_accum,
+                           max_restarts=args.max_restarts)
+
+    def run(resume):
+        out = train_loop(cfg, loop, mesh, resume_step=resume)
+        print(json.dumps(out["final"], indent=1))
+        return loop.steps
+
+    if args.ckpt_dir:
+        run_with_recovery(run, lambda: ckpt.latest_step(args.ckpt_dir),
+                          max_restarts=args.max_restarts)
+    else:
+        run(None)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,7 @@
+# Model zoo: unified transformer stack covering every assigned architecture
+# family, with MGS-quantized linears as a first-class execution mode.
+from .transformer import (decode_step, forward, init_cache, init_params,
+                          loss_fn, prefill)
+
+__all__ = ["decode_step", "forward", "init_cache", "init_params", "loss_fn",
+           "prefill"]

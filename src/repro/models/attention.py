@@ -1,0 +1,174 @@
+"""Attention: GQA/MQA/MHA, causal / sliding-window / bidirectional / cross,
+dense or online-softmax KV-chunked, with decode KV caches.
+
+One code path serves every arch in the pool: gemma3's 5:1 local:global
+pattern is a *traced* per-layer flag selecting the window mask (so the
+layer stack can still be a homogeneous ``lax.scan``), whisper's encoder
+uses ``bidirectional=True`` and its decoder passes ``cross_kv``.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from .common import ParamFactory, apply_rope
+from .linear import proj
+
+__all__ = ["attention_init", "attention_apply", "KVCache"]
+
+_NEG_INF = -1e30
+
+
+class KVCache(NamedTuple):
+    k: jnp.ndarray  # (B, S_max, KV, hd)
+    v: jnp.ndarray  # (B, S_max, KV, hd)
+
+
+def attention_init(f: ParamFactory, cfg: ModelConfig, cross: bool = False):
+    d, H, KV, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    f.normal("wq", (d, H, hd), ("embed", "heads", "head_dim"))
+    f.normal("wk", (d, KV, hd), ("embed", "kv_heads", "head_dim"))
+    f.normal("wv", (d, KV, hd), ("embed", "kv_heads", "head_dim"))
+    f.normal("wo", (H, hd, d), ("heads", "head_dim", "embed"),
+             scale=1.0 / (H * hd) ** 0.5)
+
+
+def _mask(q_pos, k_pos, *, causal: bool, window: int, is_global):
+    """(..., Tq, Tk) additive mask from position vectors."""
+    dq = q_pos[..., :, None]
+    dk = k_pos[..., None, :]
+    ok = jnp.ones(jnp.broadcast_shapes(dq.shape, dk.shape), bool)
+    if causal:
+        ok &= dk <= dq
+    if window > 0:
+        in_win = dq - dk < window
+        ok &= jnp.where(is_global, True, in_win)
+    return jnp.where(ok, 0.0, _NEG_INF)
+
+
+def _sdpa_dense(q, k, v, bias):
+    """q: (B,T,KV,G,hd)  k/v: (B,S,KV,hd)  bias: (B,1,1,T,S) or (B,T,S)."""
+    scale = q.shape[-1] ** -0.5
+    scores = jnp.einsum("btkgh,bskh->bkgts", q, k,
+                        preferred_element_type=jnp.float32) * scale
+    scores = scores + bias
+    w = jax.nn.softmax(scores.astype(jnp.float32), axis=-1).astype(q.dtype)
+    return jnp.einsum("bkgts,bskh->btkgh", w, v)
+
+
+def _sdpa_chunked(q, k, v, q_pos, k_pos, *, causal, window, is_global,
+                  chunk: int):
+    """Online-softmax attention over KV chunks (flash-style, pure lax.scan).
+
+    Keeps peak memory at O(T * chunk) instead of O(T * S) — required for
+    the 32k-prefill cells and available to training via cfg.attn_chunk.
+    """
+    B, T, KV, G, hd = q.shape
+    S = k.shape[1]
+    n_chunks = -(-S // chunk)
+    Sp = n_chunks * chunk
+    pad = Sp - S
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        k_pos = jnp.pad(k_pos, ((0, 0), (0, pad)), constant_values=2**30)
+    kc = k.reshape(B, n_chunks, chunk, KV, hd).transpose(1, 0, 2, 3, 4)
+    vc = v.reshape(B, n_chunks, chunk, KV, hd).transpose(1, 0, 2, 3, 4)
+    pc = k_pos.reshape(B, n_chunks, chunk).transpose(1, 0, 2)
+    scale = hd ** -0.5
+
+    def step(carry, xs):
+        m, l, o = carry
+        kb, vb, pb = xs
+        s = jnp.einsum("btkgh,bskh->bkgts", q, kb,
+                       preferred_element_type=jnp.float32) * scale
+        bias = _mask(q_pos, pb, causal=causal, window=window,
+                     is_global=is_global)  # (B, T, chunk)
+        s = s + bias[:, None, None]
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        alpha = jnp.exp(m - m_new)
+        p = jnp.exp(s - m_new[..., None])
+        l_new = l * alpha + jnp.sum(p, axis=-1)
+        o_new = o * alpha[..., None] + jnp.einsum(
+            "bkgts,bskh->bkgth", p.astype(q.dtype), vb).astype(jnp.float32)
+        return (m_new, l_new, o_new), None
+
+    m0 = jnp.full((B, KV, G, T), _NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, KV, G, T), jnp.float32)
+    o0 = jnp.zeros((B, KV, G, T, hd), jnp.float32)
+    # remat the chunk body: backward recomputes the (T x chunk) score tile
+    # instead of stashing one per chunk — the flash-attention memory shape.
+    (m, l, o), _ = jax.lax.scan(jax.checkpoint(step), (m0, l0, o0),
+                                (kc, vc, pc))
+    out = o / jnp.maximum(l, 1e-30)[..., None]
+    return out.transpose(0, 3, 1, 2, 4).astype(q.dtype)  # (B,T,KV,G,hd)
+
+
+def attention_apply(p, x, cfg: ModelConfig, *, positions,
+                    is_global=True, causal: bool = True,
+                    cache: Optional[KVCache] = None,
+                    cache_pos=None,
+                    cross_kv: Optional[KVCache] = None,
+                    kv_positions=None):
+    """Self- or cross-attention.
+
+    x: (B, T, d). positions: (B, T) int32 token positions of the queries.
+    cache: decode-time KV cache; new K/V are written at ``cache_pos``.
+    cross_kv: precomputed encoder K/V (whisper decoder) — overrides
+    self-attention K/V entirely.
+    Returns (out (B, T, d), new_cache | None).
+    """
+    B, T, d = x.shape
+    H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    G = H // KV
+
+    q = proj(x, p["wq"], cfg.quant)                       # (B,T,H,hd)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    q = q.reshape(B, T, KV, G, hd)
+
+    new_cache = None
+    if cross_kv is not None:
+        k, v = cross_kv.k, cross_kv.v
+        k_pos = (jnp.zeros((B, k.shape[1]), jnp.int32)
+                 + jnp.arange(k.shape[1], dtype=jnp.int32)
+                 if kv_positions is None else kv_positions)
+        causal = False
+    else:
+        k = proj(x, p["wk"], cfg.quant)                   # (B,T,KV,hd)
+        k = apply_rope(k, positions, cfg.rope_theta)
+        v = proj(x, p["wv"], cfg.quant)
+        if cache is not None:
+            # decode: write the new entries at cache_pos, attend over cache
+            k = jax.lax.dynamic_update_slice(
+                cache.k, k.astype(cache.k.dtype), (0, cache_pos, 0, 0))
+            v = jax.lax.dynamic_update_slice(
+                cache.v, v.astype(cache.v.dtype), (0, cache_pos, 0, 0))
+            new_cache = KVCache(k, v)
+            S = k.shape[1]
+            k_pos = jnp.broadcast_to(
+                jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+            # entries beyond the decode position are invalid
+            valid = k_pos <= positions[:, -1:]
+            k_pos = jnp.where(valid, k_pos, 2**30)
+        else:
+            k_pos = positions
+
+    bias_fn = lambda qp, kp: _mask(qp, kp, causal=causal, window=cfg.window,
+                                   is_global=is_global)
+    if cfg.attn_chunk and T > 1:
+        out = _sdpa_chunked(q, k.astype(q.dtype), v.astype(q.dtype),
+                            positions, k_pos, causal=causal,
+                            window=cfg.window, is_global=is_global,
+                            chunk=cfg.attn_chunk)
+    else:
+        bias = bias_fn(positions, k_pos)[:, None, None]   # (B,1,1,T,S)
+        out = _sdpa_dense(q, k.astype(q.dtype), v.astype(q.dtype), bias)
+
+    out = out.reshape(B, T, H, hd)
+    y = jnp.einsum("bthd,hdo->bto", out,
+                   p["wo"].astype(out.dtype))
+    return y, new_cache

@@ -1,0 +1,133 @@
+"""Shared model building blocks: params-with-logical-dims, norms, RoPE.
+
+Parameters are plain nested dicts of arrays (optimizer-friendly pytrees).
+Each ``init`` returns a parallel *dims* tree whose leaves are tuples of
+logical dimension names; :mod:`repro.parallel.partition` maps those names
+onto mesh axes to build PartitionSpecs. This keeps distribution concerns
+out of the model code while remaining fully explicit.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["ParamFactory", "rms_norm", "layer_norm", "rope_freqs",
+           "apply_rope", "gelu", "silu", "dtype_of"]
+
+
+def dtype_of(name: str):
+    return {"float32": jnp.float32, "bfloat16": jnp.bfloat16,
+            "float16": jnp.float16,
+            "fp8_e4m3": jnp.float8_e4m3fn,
+            "fp8_e5m2": jnp.float8_e5m2}[name]
+
+
+class ParamFactory:
+    """Creates parameter leaves while recording logical-dimension names.
+
+    Usage::
+
+        f = ParamFactory(key, dtype=jnp.float32)
+        w = f.normal("wq", (d, H, hd), ("embed", "heads", "head_dim"), scale)
+        params, dims = f.collect()
+    """
+
+    def __init__(self, key, dtype=jnp.float32):
+        self._key = key
+        self._dtype = dtype
+        self._params: Dict[str, Any] = {}
+        self._dims: Dict[str, Any] = {}
+
+    def _next(self):
+        self._key, sub = jax.random.split(self._key)
+        return sub
+
+    def normal(self, name: str, shape: Tuple[int, ...],
+               dims: Tuple[str, ...], scale: float | None = None):
+        assert len(shape) == len(dims), (name, shape, dims)
+        if scale is None:
+            scale = 1.0 / np.sqrt(shape[0])
+        w = (jax.random.normal(self._next(), shape, jnp.float32)
+             * scale).astype(self._dtype)
+        self._params[name] = w
+        self._dims[name] = dims
+        return w
+
+    def zeros(self, name: str, shape, dims):
+        assert len(shape) == len(dims), (name, shape, dims)
+        w = jnp.zeros(shape, self._dtype)
+        self._params[name] = w
+        self._dims[name] = dims
+        return w
+
+    def ones(self, name: str, shape, dims):
+        assert len(shape) == len(dims), (name, shape, dims)
+        w = jnp.ones(shape, self._dtype)
+        self._params[name] = w
+        self._dims[name] = dims
+        return w
+
+    def constant(self, name: str, value, dims):
+        value = jnp.asarray(value, self._dtype)
+        assert value.ndim == len(dims), (name, value.shape, dims)
+        self._params[name] = value
+        self._dims[name] = dims
+        return value
+
+    def child(self, name: str, params, dims):
+        """Attach a sub-module's (params, dims) under ``name``."""
+        self._params[name] = params
+        self._dims[name] = dims
+        return params
+
+    def collect(self):
+        return self._params, self._dims
+
+
+def rms_norm(x, gamma, eps: float = 1e-6):
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    return (x32 * jax.lax.rsqrt(var + eps)).astype(dt) * gamma.astype(dt)
+
+
+def layer_norm(x, gamma, beta, eps: float = 1e-6):
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    return ((x32 - mu) * jax.lax.rsqrt(var + eps)).astype(dt) * gamma.astype(
+        dt) + beta.astype(dt)
+
+
+def rope_freqs(head_dim: int, theta: float = 10000.0):
+    """Inverse frequencies for rotary embeddings (half of head_dim)."""
+    half = head_dim // 2
+    return 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+
+
+def apply_rope(x, positions, theta: float = 10000.0):
+    """x: (..., T, n_heads, head_dim); positions: (..., T) int32."""
+    head_dim = x.shape[-1]
+    half = head_dim // 2
+    freqs = rope_freqs(head_dim, theta)  # (half,)
+    ang = positions.astype(jnp.float32)[..., None] * freqs  # (..., T, half)
+    cos = jnp.cos(ang)[..., None, :]  # (..., T, 1, half)
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:2 * half]
+    rot1 = x1 * cos - x2 * sin
+    rot2 = x2 * cos + x1 * sin
+    out = jnp.concatenate([rot1, rot2, x[..., 2 * half:]], axis=-1)
+    return out.astype(x.dtype)
+
+
+def gelu(x):
+    return jax.nn.gelu(x, approximate=True)
+
+
+def silu(x):
+    return jax.nn.silu(x)

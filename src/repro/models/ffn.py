@@ -1,0 +1,29 @@
+"""Dense feed-forward blocks: SwiGLU (llama-family) or GELU MLP."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from .common import ParamFactory, gelu, silu
+from .linear import proj
+
+__all__ = ["ffn_init", "ffn_apply"]
+
+
+def ffn_init(f: ParamFactory, cfg: ModelConfig):
+    d, h = cfg.d_model, cfg.d_ff
+    if cfg.act == "silu":
+        f.normal("wg", (d, h), ("embed", "ffn"))
+        f.normal("wu", (d, h), ("embed", "ffn"))
+    else:
+        f.normal("wi", (d, h), ("embed", "ffn"))
+    f.normal("wd", (h, d), ("ffn", "embed"), scale=1.0 / h ** 0.5)
+
+
+def ffn_apply(p, x, cfg: ModelConfig):
+    if cfg.act == "silu":
+        h = silu(proj(x, p["wg"], cfg.quant)) * proj(x, p["wu"], cfg.quant)
+    else:
+        h = gelu(proj(x, p["wi"], cfg.quant))
+    return proj(h, p["wd"], cfg.quant)

@@ -1,0 +1,23 @@
+"""Quantized linear projection — every matmul in the zoo routes here.
+
+With ``quant.dtype == "none"`` this is a plain (bf16-compute, fp32-accum)
+dot. Otherwise operands are quantized per the QuantConfig and the matmul
+runs under MGS / wide / clip numerics (see quant.qmatmul) — making the
+paper's technique a first-class execution mode of the framework.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.quant import QuantConfig, qmatmul
+
+__all__ = ["proj"]
+
+
+def proj(x, w, quant: QuantConfig, out_shape_tail=None):
+    """x: (..., K) @ w: (K, *tail) -> (..., *tail)."""
+    tail = w.shape[1:]
+    w2 = w.reshape(w.shape[0], -1)
+    out = qmatmul(x, w2.astype(x.dtype), quant, out_dtype=x.dtype)
+    return out.reshape(x.shape[:-1] + tail)

@@ -1,0 +1,168 @@
+"""Mamba-1 selective SSM block (falcon-mamba, jamba's SSM sublayers).
+
+Training/prefill uses a memory-bounded *chunked* selective scan: an outer
+``lax.scan`` over time chunks carries the (B, d_inner, N) state while an
+inner ``associative_scan`` parallelizes within the chunk — the standard
+TPU-friendly formulation (the (B, T, d_inner, N) tensor is only ever
+materialized per-chunk). Decode is a single recurrence step on a carried
+(h, conv) state.
+
+MGS applicability note (DESIGN.md §Arch-applicability): the paper's
+accumulation technique applies to this block's projections (K = d_model /
+d_inner dot products, routed through quant.qmatmul); the time recurrence
+itself is a length-T *scan*, not a dot product, and the d_state=16
+contraction is too short to overflow any accumulator.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from .common import ParamFactory, silu
+from .linear import proj
+
+__all__ = ["mamba_init", "mamba_apply", "mamba_decode_step", "SSMCache"]
+
+
+class SSMCache(NamedTuple):
+    h: jnp.ndarray      # (B, d_inner, N)
+    conv: jnp.ndarray   # (B, d_conv - 1, d_inner)
+
+
+def mamba_init(f: ParamFactory, cfg: ModelConfig):
+    d, di, n, r, k = (cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.dt_rank,
+                      cfg.d_conv)
+    f.normal("wx", (d, di), ("embed", "inner"))
+    f.normal("wz", (d, di), ("embed", "inner"))
+    f.normal("conv_w", (k, di), ("conv_k", "inner"), scale=1.0 / k)
+    f.zeros("conv_b", (di,), ("inner",))
+    f.normal("wdt_down", (di, r), ("inner", "dt_rank"))
+    f.normal("wdt_up", (r, di), ("dt_rank", "inner"),
+             scale=1.0 / np.sqrt(r))
+    f.zeros("dt_bias", (di,), ("inner",))
+    f.normal("wB", (di, n), ("inner", "ssm_state"))
+    f.normal("wC", (di, n), ("inner", "ssm_state"))
+    f.constant("A_log", jnp.log(jnp.broadcast_to(
+        jnp.arange(1, n + 1, dtype=jnp.float32)[None, :], (di, n))),
+        ("inner", "ssm_state"))
+    f.ones("D", (di,), ("inner",))
+    f.normal("wo", (di, d), ("inner", "embed"), scale=1.0 / np.sqrt(di))
+
+
+def _causal_conv(u, w, b):
+    """Depthwise causal conv via k shifted adds. u: (B,T,di), w: (k,di)."""
+    k = w.shape[0]
+    T = u.shape[1]
+    up = jnp.pad(u, ((0, 0), (k - 1, 0), (0, 0)))
+    out = jnp.zeros_like(u)
+    for i in range(k):
+        out = out + w[i].astype(u.dtype) * jax.lax.dynamic_slice_in_dim(
+            up, i, T, axis=1)
+    return out + b.astype(u.dtype)
+
+
+def _ssm_inputs(p, u, cfg: ModelConfig):
+    """Per-token SSM coefficients from the conv'd activation u (B,T,di).
+
+    All *weight-bearing* projections live here so they are evaluated once
+    per layer, OUTSIDE the time-chunk scan — otherwise ZeRO-sharded
+    weights would be re-all-gathered on every chunk iteration (measured:
+    the dominant collective term of the SSM archs; see EXPERIMENTS.md
+    §Perf iteration A).
+    """
+    dt = jax.nn.softplus(
+        proj(proj(u, p["wdt_down"], cfg.quant), p["wdt_up"], cfg.quant)
+        .astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))
+    Bm = proj(u, p["wB"], cfg.quant).astype(jnp.float32)   # (B,T,N)
+    Cm = proj(u, p["wC"], cfg.quant).astype(jnp.float32)   # (B,T,N)
+    return dt, Bm, Cm
+
+
+def mamba_apply(p, x, cfg: ModelConfig, h0=None, return_state: bool = False):
+    """Full-sequence selective scan. x: (B, T, d) -> (B, T, d)."""
+    B, T, d = x.shape
+    di, n = cfg.d_inner, cfg.ssm_state
+    Q = max(1, min(cfg.ssm_chunk, T))
+    if T % Q:
+        Q = 1  # fallback for odd lengths (smoke tests)
+
+    u_raw = proj(x, p["wx"], cfg.quant)
+    z = proj(x, p["wz"], cfg.quant)
+    u = silu(_causal_conv(u_raw, p["conv_w"], p["conv_b"]))
+
+    # weight projections hoisted out of the chunk loop (see _ssm_inputs)
+    dt, Bm, Cm = _ssm_inputs(p, u, cfg)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))           # (di,N)
+    D = p["D"].astype(jnp.float32)
+
+    h_init = (jnp.zeros((B, di, n), jnp.float32) if h0 is None
+              else h0.astype(jnp.float32))
+
+    def to_chunks(t):
+        return t.reshape((B, T // Q, Q) + t.shape[2:]).transpose(
+            (1, 0, 2) + tuple(range(3, t.ndim + 1)))
+
+    def chunk_step(h, xs):
+        u_chunk, dt_c, Bm_c, Cm_c = xs                     # (B,Q,...)
+        a = jnp.exp(dt_c[..., None] * A)                   # (B,Q,di,N)
+        b = (dt_c * u_chunk.astype(jnp.float32))[..., None] \
+            * Bm_c[:, :, None, :]
+        # h_t = (prod a) h_carry + scanned b  via associative scan
+        def combine(e1, e2):
+            a1, b1 = e1
+            a2, b2 = e2
+            return a1 * a2, a2 * b1 + b2
+        A_cum, B_cum = jax.lax.associative_scan(combine, (a, b), axis=1)
+        hs = A_cum * h[:, None] + B_cum                    # (B,Q,di,N)
+        y = jnp.einsum("bqdn,bqn->bqd", hs, Cm_c)          # (B,Q,di)
+        y = y + D * u_chunk.astype(jnp.float32)
+        return hs[:, -1], y.astype(x.dtype)
+
+    # checkpoint: the backward pass recomputes the (B,Q,di,N) chunk
+    # tensors instead of stashing one per chunk (the flash-attn shape).
+    h_last, yc = jax.lax.scan(
+        jax.checkpoint(chunk_step), h_init,
+        (to_chunks(u), to_chunks(dt), to_chunks(Bm), to_chunks(Cm)))
+    y = yc.transpose(1, 0, 2, 3).reshape(B, T, di)
+    out = proj(y * silu(z), p["wo"], cfg.quant)
+    if return_state:
+        conv_tail = _conv_tail(u_raw, cfg)
+        return out, SSMCache(h=h_last.astype(x.dtype), conv=conv_tail)
+    return out
+
+
+def _conv_tail(u_raw, cfg: ModelConfig):
+    """Last (d_conv - 1) pre-conv inputs — the decode conv state."""
+    k = cfg.d_conv
+    B, T, di = u_raw.shape
+    if T >= k - 1:
+        return u_raw[:, T - (k - 1):, :]
+    pad = jnp.zeros((B, k - 1 - T, di), u_raw.dtype)
+    return jnp.concatenate([pad, u_raw], axis=1)
+
+
+def mamba_decode_step(p, x, cache: SSMCache, cfg: ModelConfig):
+    """One-token recurrence. x: (B, 1, d) -> (B, 1, d), new cache."""
+    B = x.shape[0]
+    u_raw = proj(x, p["wx"], cfg.quant)                    # (B,1,di)
+    z = proj(x, p["wz"], cfg.quant)
+    full = jnp.concatenate([cache.conv.astype(u_raw.dtype), u_raw], axis=1)
+    w = p["conv_w"].astype(u_raw.dtype)
+    u = jnp.einsum("bkd,kd->bd", full, w)[:, None, :] + p["conv_b"].astype(
+        u_raw.dtype)
+    u = silu(u)
+    dt, Bm, Cm = _ssm_inputs(p, u, cfg)                    # (B,1,...)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    a = jnp.exp(dt[..., None] * A)                         # (B,1,di,N)
+    b = (dt * u.astype(jnp.float32))[..., None] * Bm[:, :, None, :]
+    h = a[:, 0] * cache.h.astype(jnp.float32) + b[:, 0]    # (B,di,N)
+    y = jnp.einsum("bdn,bn->bd", h, Cm[:, 0])[:, None, :]
+    y = y + p["D"].astype(jnp.float32) * u.astype(jnp.float32)
+    out = proj(y.astype(x.dtype) * silu(z), p["wo"], cfg.quant)
+    new_cache = SSMCache(h=h.astype(cache.h.dtype), conv=full[:, 1:, :])
+    return out, new_cache

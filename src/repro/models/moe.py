@@ -1,0 +1,107 @@
+"""Top-k routed mixture-of-experts with GShard-style einsum dispatch.
+
+Tokens are split into groups; within each group the router's top-k
+choices claim capacity slots per expert (rank-0 choices first, earlier
+tokens first). Dispatch/combine are one-hot einsums — the classic XLA
+MoE formulation, whose resharding (tokens sharded on batch -> expert
+tensors sharded on the model axis) GSPMD lowers to all-to-alls. Over-
+capacity tokens are dropped (standard; `capacity_factor` controls slack).
+
+A switch-style load-balance auxiliary loss is returned for training.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.parallel.sharding import constrain
+from .common import ParamFactory, gelu, silu
+
+__all__ = ["moe_init", "moe_apply"]
+
+_GROUP_SIZE = 2048  # tokens per dispatch group (see DESIGN.md perf notes)
+
+
+def moe_init(f: ParamFactory, cfg: ModelConfig):
+    d, h, E = cfg.d_model, cfg.d_ff, cfg.n_experts
+    f.normal("wr", (d, E), ("embed", "experts"))
+    if cfg.act == "silu":
+        f.normal("wg", (E, d, h), ("experts", "embed", "ffn"))
+        f.normal("wu", (E, d, h), ("experts", "embed", "ffn"))
+    else:
+        f.normal("wi", (E, d, h), ("experts", "embed", "ffn"))
+    f.normal("wd", (E, h, d), ("experts", "ffn", "embed"),
+             scale=1.0 / h ** 0.5)
+
+
+def _n_groups(n_tokens: int, cfg: ModelConfig) -> int:
+    if cfg.n_groups:
+        return math.gcd(cfg.n_groups, n_tokens)
+    g = max(1, n_tokens // _GROUP_SIZE)
+    return math.gcd(g, n_tokens)
+
+
+def moe_apply(p, x, cfg: ModelConfig):
+    """x: (B, T, d) -> (y: (B, T, d), aux_loss: scalar)."""
+    B, T, d = x.shape
+    E, k = cfg.n_experts, cfg.top_k
+    N = B * T
+    G = _n_groups(N, cfg)
+    g = N // G
+    C = max(1, int(math.ceil(k * g * cfg.capacity_factor / E)))
+
+    xg = constrain(x.reshape(G, g, d), ("batch", None, None))
+    # router in operand dtype with f32 accumulation — casting xg to f32
+    # materialized (and GSPMD then gathered) a full-size f32 token copy
+    # (measured 25.8 GB/device on dbrx train; EXPERIMENTS.md §Perf F).
+    logits = constrain(
+        jnp.einsum("gtd,de->gte", xg, p["wr"].astype(xg.dtype),
+                   preferred_element_type=jnp.float32),
+        ("batch", None, None))
+    probs = jax.nn.softmax(logits, axis=-1)            # (G, g, E)
+    gates, eidx = jax.lax.top_k(probs, k)              # (G, g, k)
+    gates = gates / jnp.maximum(gates.sum(-1, keepdims=True), 1e-9)
+
+    # Load-balance aux loss (Switch): E * sum_e f_e * P_e.
+    density = jnp.mean(jax.nn.one_hot(eidx[..., 0], E, dtype=jnp.float32),
+                       axis=1)                          # (G, E)
+    aux = E * jnp.mean(jnp.sum(density * jnp.mean(probs, axis=1), axis=-1))
+
+    # Capacity assignment: rank-major then token-major priority.
+    onehot = jax.nn.one_hot(eidx, E, dtype=jnp.int32)   # (G, g, k, E)
+    rank_major = onehot.transpose(0, 2, 1, 3).reshape(G, k * g, E)
+    pos = jnp.cumsum(rank_major, axis=1) - 1            # slot per selection
+    pos = pos.reshape(G, k, g, E).transpose(0, 2, 1, 3)  # (G, g, k, E)
+    within = (pos < C) & (onehot > 0)
+
+    # dispatch/combine tensors, summed over the k choices.
+    dtype = x.dtype
+    disp = jnp.zeros((G, g, E, C), dtype)
+    comb = jnp.zeros((G, g, E, C), jnp.float32)
+    for r in range(k):
+        sel = within[:, :, r, :]                        # (G, g, E)
+        slot = jnp.clip(pos[:, :, r, :], 0, C - 1)
+        oh = jax.nn.one_hot(slot, C, dtype=jnp.float32) * sel[..., None]
+        disp = disp + oh.astype(dtype)
+        comb = comb + oh * gates[:, :, r][..., None, None]
+
+    # dispatch -> (G, E, C, d). The constraint FORCES the expert-parallel
+    # layout (groups over data, experts over model): GSPMD then lowers
+    # the dispatch as a token all-to-all. Without it the partitioner may
+    # instead all-gather every expert's weights per device — measured
+    # +13 GB/device on dbrx-132b train (EXPERIMENTS.md §Perf F).
+    ep_dims = ("groups_act", "experts_act", None, None)
+    xe = constrain(jnp.einsum("gtec,gtd->gecd", disp, xg), ep_dims)
+    if cfg.act == "silu":
+        h = silu(jnp.einsum("gecd,edf->gecf", xe, p["wg"].astype(dtype)))
+        h = h * jnp.einsum("gecd,edf->gecf", xe, p["wu"].astype(dtype))
+    else:
+        h = gelu(jnp.einsum("gecd,edf->gecf", xe, p["wi"].astype(dtype)))
+    ye = constrain(jnp.einsum("gecf,efd->gecd", h, p["wd"].astype(dtype)),
+                   ep_dims)
+    y = jnp.einsum("gtec,gecd->gtd", comb.astype(dtype), ye)
+    return y.reshape(B, T, d), aux

@@ -1,0 +1,705 @@
+"""The model zoo's unified stack: dense / MoE / sliding-window / hybrid /
+SSM / encoder-decoder / VLM decoders with scan-over-layers, KV-cache
+serving, and MGS-quantized linear layers throughout.
+
+Public API (all pure functions over plain-dict param pytrees):
+
+  init_params(cfg, key)                 -> (params, dims)
+  forward(params, cfg, batch)           -> logits (teacher-forced)
+  loss_fn(params, cfg, batch)           -> (loss, metrics)
+  init_cache(cfg, batch, max_len)       -> (cache, cache_dims)
+  prefill(params, cfg, batch, cache)    -> (last_logits, cache)
+  decode_step(params, cfg, tok, cache)  -> (logits, cache)
+
+Layer stacks are ``lax.scan`` over stacked parameters (one compiled layer
+body regardless of depth); gemma3's 5:1 local:global pattern rides the
+scan as a traced per-layer flag; jamba's 1-attention:7-mamba period is a
+scan over *groups* with the 8 sublayers unrolled inside the group body.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.parallel.sharding import constrain
+from .attention import KVCache, attention_apply, attention_init
+from .common import ParamFactory, dtype_of, rms_norm
+from .ffn import ffn_apply, ffn_init
+from .mamba import SSMCache, mamba_apply, mamba_decode_step, mamba_init
+from .moe import moe_apply, moe_init
+
+__all__ = ["init_params", "forward", "loss_fn", "init_cache", "prefill",
+           "decode_step"]
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+
+
+def _stack_init(key, n: int, one_init):
+    """vmap an init over n layer keys -> stacked params + dims w/ 'layers'."""
+    keys = jax.random.split(key, n)
+
+    def init_one(k):
+        return one_init(k)[0]
+
+    params = jax.vmap(init_one)(keys)
+    _, dims = one_init(keys[0])
+    dims = jax.tree.map(
+        lambda d: ("layers",) + d, dims,
+        is_leaf=lambda d: isinstance(d, tuple) and all(
+            isinstance(s, (str, type(None))) for s in d))
+    return params, dims
+
+
+def _dense_layer_init(cfg: ModelConfig, moe_layer: bool):
+    def init(key):
+        f = ParamFactory(key, dtype_of(cfg.param_dtype))
+        f.ones("ln1", (cfg.d_model,), ("embed",))
+        sub = ParamFactory(key, dtype_of(cfg.param_dtype))
+        attention_init(sub, cfg)
+        f.child("attn", *sub.collect())
+        f.ones("ln2", (cfg.d_model,), ("embed",))
+        sub2 = ParamFactory(jax.random.fold_in(key, 1),
+                            dtype_of(cfg.param_dtype))
+        if moe_layer:
+            moe_init(sub2, cfg)
+            f.child("moe", *sub2.collect())
+        else:
+            ffn_init(sub2, cfg)
+            f.child("ffn", *sub2.collect())
+        return f.collect()
+    return init
+
+
+def _ssm_layer_init(cfg: ModelConfig):
+    def init(key):
+        f = ParamFactory(key, dtype_of(cfg.param_dtype))
+        f.ones("ln1", (cfg.d_model,), ("embed",))
+        sub = ParamFactory(key, dtype_of(cfg.param_dtype))
+        mamba_init(sub, cfg)
+        f.child("ssm", *sub.collect())
+        return f.collect()
+    return init
+
+
+def _hybrid_group_init(cfg: ModelConfig):
+    """One jamba period: 1 attention + (attn_every - 1) mamba sublayers,
+    FFN/MoE alternating across the period (MoE on odd in-period index)."""
+    per = cfg.attn_every
+    n_moe = sum(1 for j in range(per) if (j % cfg.moe_every
+                                          == cfg.moe_offset))
+    n_ffn = per - n_moe
+
+    def init(key):
+        f = ParamFactory(key, dtype_of(cfg.param_dtype))
+        f.ones("ln_mix", (per, cfg.d_model), ("sub", "embed"))
+        f.ones("ln_ffn", (per, cfg.d_model), ("sub", "embed"))
+        sub = ParamFactory(jax.random.fold_in(key, 1),
+                           dtype_of(cfg.param_dtype))
+        attention_init(sub, cfg)
+        f.child("attn", *sub.collect())
+
+        def one_mamba(k):
+            g = ParamFactory(k, dtype_of(cfg.param_dtype))
+            mamba_init(g, cfg)
+            return g.collect()
+        mp, md = _stack_init(jax.random.fold_in(key, 2), per - 1, one_mamba)
+        md = jax.tree.map(lambda d: ("sub",) + d[1:], md,
+                          is_leaf=_is_dims)
+        f.child("ssm", mp, md)
+
+        def one_ffn(k):
+            g = ParamFactory(k, dtype_of(cfg.param_dtype))
+            ffn_init(g, cfg)
+            return g.collect()
+        fp, fd = _stack_init(jax.random.fold_in(key, 3), n_ffn, one_ffn)
+        fd = jax.tree.map(lambda d: ("sub",) + d[1:], fd, is_leaf=_is_dims)
+        f.child("ffn", fp, fd)
+
+        def one_moe(k):
+            g = ParamFactory(k, dtype_of(cfg.param_dtype))
+            moe_init(g, cfg)
+            return g.collect()
+        ep, ed = _stack_init(jax.random.fold_in(key, 4), n_moe, one_moe)
+        ed = jax.tree.map(lambda d: ("sub",) + d[1:], ed, is_leaf=_is_dims)
+        f.child("moe", ep, ed)
+        return f.collect()
+    return init
+
+
+def _is_dims(d):
+    return isinstance(d, tuple) and all(
+        isinstance(s, (str, type(None))) for s in d)
+
+
+def init_params(cfg: ModelConfig, key) -> Tuple[Dict, Dict]:
+    pdt = dtype_of(cfg.param_dtype)
+    f = ParamFactory(key, pdt)
+    f.normal("embed", (cfg.vocab, cfg.d_model), ("vocab", "embed"),
+             scale=cfg.d_model ** -0.5)
+    if not cfg.tie_embeddings:
+        f.normal("unembed", (cfg.d_model, cfg.vocab), ("embed", "vocab"))
+    f.ones("final_norm", (cfg.d_model,), ("embed",))
+
+    k_layers = jax.random.fold_in(key, 17)
+    if cfg.is_hybrid:
+        n_groups = cfg.n_layers // cfg.attn_every
+        lp, ld = _stack_init(k_layers, n_groups, _hybrid_group_init(cfg))
+        ld = jax.tree.map(lambda d: ("groups",) + d[1:], ld, is_leaf=_is_dims)
+        f.child("layers", lp, ld)
+    elif cfg.is_ssm_only:
+        lp, ld = _stack_init(k_layers, cfg.n_layers, _ssm_layer_init(cfg))
+        f.child("layers", lp, ld)
+    else:
+        moe_all = cfg.is_moe  # non-hybrid MoE archs: every layer MoE
+        lp, ld = _stack_init(k_layers, cfg.n_layers,
+                             _dense_layer_init(cfg, moe_all))
+        f.child("layers", lp, ld)
+
+    if cfg.encoder_layers:
+        ep, ed = _stack_init(jax.random.fold_in(key, 23), cfg.encoder_layers,
+                             _dense_layer_init(cfg, False))
+        f.child("encoder", ep, ed)
+        f.ones("encoder_norm", (cfg.d_model,), ("embed",))
+        # decoder cross-attention stack
+        def one_cross(k):
+            g = ParamFactory(k, pdt)
+            g.ones("ln", (cfg.d_model,), ("embed",))
+            sub = ParamFactory(jax.random.fold_in(k, 5), pdt)
+            attention_init(sub, cfg)
+            g.child("attn", *sub.collect())
+            return g.collect()
+        cp, cd = _stack_init(jax.random.fold_in(key, 29), cfg.n_layers,
+                             one_cross)
+        f.child("cross", cp, cd)
+    return f.collect()
+
+
+# ---------------------------------------------------------------------------
+# Layer bodies
+# ---------------------------------------------------------------------------
+
+
+def _dense_body(pl, x, positions, cfg: ModelConfig, is_global,
+                cache: Optional[KVCache], cache_pos, cross_kv, cross_p):
+    """One dense/moe layer. Returns (x, new_kv, aux)."""
+    h, new_kv = attention_apply(
+        pl["attn"], rms_norm(x, pl["ln1"], cfg.norm_eps), cfg,
+        positions=positions, is_global=is_global, cache=cache,
+        cache_pos=cache_pos)
+    x = constrain(x + h, ("batch", "seq", "embed_act"))
+    if cross_p is not None:
+        hc, _ = attention_apply(
+            cross_p["attn"], rms_norm(x, cross_p["ln"], cfg.norm_eps), cfg,
+            positions=positions, cross_kv=cross_kv)
+        x = x + hc
+    xn = rms_norm(x, pl["ln2"], cfg.norm_eps)
+    if "moe" in pl:
+        h, aux = moe_apply(pl["moe"], xn, cfg)
+    else:
+        h, aux = ffn_apply(pl["ffn"], xn, cfg), jnp.float32(0.0)
+    x = constrain(x + h, ("batch", "seq", "embed_act"))
+    return x, new_kv, aux
+
+
+def _hybrid_group_body(pg, x, positions, cfg: ModelConfig,
+                       attn_cache: Optional[KVCache], cache_pos,
+                       ssm_cache: Optional[SSMCache], decode: bool):
+    """One jamba period (attn + mamba sublayers, FFN/MoE alternating)."""
+    per = cfg.attn_every
+    aux_total = jnp.float32(0.0)
+    new_attn_cache = None
+    new_h, new_conv = [], []
+    i_ffn = i_moe = 0
+    for j in range(per):
+        xn = rms_norm(x, pg["ln_mix"][j], cfg.norm_eps)
+        if j == 0:
+            h, new_attn_cache = attention_apply(
+                pg["attn"], xn, cfg, positions=positions, cache=attn_cache,
+                cache_pos=cache_pos)
+        else:
+            sub = jax.tree.map(lambda a, _j=j: a[_j - 1], pg["ssm"])
+            if decode:
+                sc = SSMCache(h=ssm_cache.h[j - 1], conv=ssm_cache.conv[j - 1])
+                h, sc_new = mamba_decode_step(sub, xn, sc, cfg)
+                new_h.append(sc_new.h)
+                new_conv.append(sc_new.conv)
+            else:
+                h, sc_new = mamba_apply(sub, xn, cfg, return_state=True)
+                new_h.append(sc_new.h)
+                new_conv.append(sc_new.conv)
+        x = x + h
+        xf = rms_norm(x, pg["ln_ffn"][j], cfg.norm_eps)
+        if j % cfg.moe_every == cfg.moe_offset:
+            sub = jax.tree.map(lambda a, _i=i_moe: a[_i], pg["moe"])
+            h, aux = moe_apply(sub, xf, cfg)
+            aux_total = aux_total + aux
+            i_moe += 1
+        else:
+            sub = jax.tree.map(lambda a, _i=i_ffn: a[_i], pg["ffn"])
+            h = ffn_apply(sub, xf, cfg)
+            i_ffn += 1
+        x = constrain(x + h, ("batch", "seq", "embed_act"))
+    new_ssm = SSMCache(h=jnp.stack(new_h), conv=jnp.stack(new_conv))
+    return x, new_attn_cache, new_ssm, aux_total
+
+
+def _ssm_body(pl, x, cfg: ModelConfig, cache: Optional[SSMCache],
+              decode: bool):
+    xn = rms_norm(x, pl["ln1"], cfg.norm_eps)
+    if decode:
+        h, new_cache = mamba_decode_step(pl["ssm"], xn, cache, cfg)
+    else:
+        h, new_cache = mamba_apply(pl["ssm"], xn, cfg, return_state=True)
+    return constrain(x + h, ("batch", "seq", "embed_act")), new_cache
+
+
+# ---------------------------------------------------------------------------
+# Embedding / head
+# ---------------------------------------------------------------------------
+
+
+_KEEP_F32 = ("A_log",)  # SSM decay rates: exp() is precision-sensitive
+
+
+def _cast_params(params, cfg: ModelConfig):
+    """Cast weight matrices to the compute dtype ONCE, on their sharded
+    layout, before any layer runs. With ZeRO-3 sharding GSPMD then
+    all-gathers bf16 instead of f32 — half the per-layer collective
+    traffic (EXPERIMENTS.md §Perf iteration C). Rank<=1 leaves (norms,
+    biases) and precision-sensitive leaves stay f32.
+    """
+    cdt = dtype_of(cfg.compute_dtype)
+    if dtype_of(cfg.param_dtype) == cdt:
+        return params
+
+    def cast(path, p):
+        name = str(path[-1].key) if hasattr(path[-1], "key") else ""
+        if p.ndim >= 2 and p.dtype == jnp.float32 and name not in _KEEP_F32:
+            return p.astype(cdt)
+        return p
+
+    return jax.tree_util.tree_map_with_path(cast, params)
+
+
+def _embed_tokens(params, cfg: ModelConfig, tokens, for_train: bool = False):
+    cdt = dtype_of(cfg.compute_dtype)
+    # One-hot path only where it wins: the SP-layout (MoE) archs whose
+    # lookup-scatter gradient GSPMD materializes as full f32 (V, d)
+    # buffers, and only for model-axis-divisible vocabs (otherwise the
+    # (B, T, V) one-hot itself cannot shard — measured 780 GB/device on
+    # internvl2's 92553 vocab; EXPERIMENTS.md §Perf G).
+    if for_train and cfg.is_moe and cfg.vocab % 128 == 0:
+        # One-hot matmul lookup: its transpose is a *matmul* (sharded,
+        # SPMD-clean) instead of a scatter-add, which GSPMD materializes
+        # as multiple full f32 (V, d) buffers (~2.5 GB each on dbrx;
+        # EXPERIMENTS.md §Perf G). The one-hot is fused into the dot.
+        iota = jax.lax.broadcasted_iota(jnp.int32,
+                                        tokens.shape + (cfg.vocab,), 2)
+        onehot = (iota == tokens[..., None]).astype(cdt)
+        x = jnp.einsum("btv,vd->btd", onehot, params["embed"].astype(cdt))
+    else:
+        x = jnp.take(params["embed"], tokens, axis=0).astype(cdt)
+    return x * jnp.asarray(np.sqrt(cfg.d_model), cdt)
+
+
+def _logits(params, cfg: ModelConfig, x):
+    table = (params["embed"] if cfg.tie_embeddings
+             else params["unembed"].T)
+    out = jnp.einsum("btd,vd->btv", x, table.astype(x.dtype),
+                     preferred_element_type=jnp.float32)
+    return constrain(out, ("batch", "seq", "vocab_act"))
+
+
+def _global_flags(cfg: ModelConfig):
+    return jnp.asarray(
+        [cfg.layer_is_global_attn(i) for i in range(cfg.n_layers)], bool)
+
+
+# ---------------------------------------------------------------------------
+# Forward (teacher-forced) + loss
+# ---------------------------------------------------------------------------
+
+
+def _encode(params, cfg: ModelConfig, audio_embeds):
+    """Whisper encoder over precomputed frame embeddings (frontend stub)."""
+    cdt = dtype_of(cfg.compute_dtype)
+    x = audio_embeds.astype(cdt)
+    B, S, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None],
+                                 (B, S))
+
+    def body(x, pl):
+        h, _ = attention_apply(pl["attn"],
+                               rms_norm(x, pl["ln1"], cfg.norm_eps), cfg,
+                               positions=positions, causal=False)
+        x = x + h
+        x = x + ffn_apply(pl["ffn"], rms_norm(x, pl["ln2"], cfg.norm_eps),
+                          cfg)
+        return x, None
+
+    x, _ = jax.lax.scan(body, x, params["encoder"])
+    return rms_norm(x, params["encoder_norm"], cfg.norm_eps)
+
+
+def forward(params, cfg: ModelConfig, batch: Dict[str, Any],
+            return_features: bool = False):
+    """Teacher-forced logits. batch: tokens (B,T) [+ vision_embeds /
+    audio_embeds per family]. Returns (logits (B,T,V), aux_loss) — or
+    (features (B,T,d), aux_loss) with ``return_features`` (used by the
+    streamed cross entropy)."""
+    params = _cast_params(params, cfg)
+    tokens = batch["tokens"]
+    B, T = tokens.shape
+    x = _embed_tokens(params, cfg, tokens, for_train=True)
+    prefix = 0
+    if cfg.vision_prefix:
+        ve = batch["vision_embeds"].astype(x.dtype)
+        prefix = ve.shape[1]
+        x = jnp.concatenate([ve, x], axis=1)
+    x = constrain(x, ("batch", "seq", "embed_act"))
+    S = x.shape[1]
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None],
+                                 (B, S))
+
+    cross_kv = None
+    if cfg.encoder_layers:
+        enc = _encode(params, cfg, batch["audio_embeds"])
+
+    aux_total = jnp.float32(0.0)
+    remat = cfg.remat == "layer"
+
+    if cfg.is_hybrid:
+        def gbody(carry, pg):
+            x, aux = carry
+            x = jax.lax.optimization_barrier(x)  # keep saved carry bf16
+            x, _, _, a = _hybrid_group_body(pg, x, positions, cfg, None,
+                                            None, None, decode=False)
+            return (x, aux + a), None
+        fn = jax.checkpoint(gbody) if remat else gbody
+        (x, aux_total), _ = jax.lax.scan(fn, (x, aux_total),
+                                         params["layers"])
+    elif cfg.is_ssm_only:
+        def sbody(x, pl):
+            x = jax.lax.optimization_barrier(x)  # keep saved carry bf16
+            x, _ = _ssm_body(pl, x, cfg, None, decode=False)
+            return x, None
+        fn = jax.checkpoint(sbody) if remat else sbody
+        x, _ = jax.lax.scan(fn, x, params["layers"])
+    elif cfg.encoder_layers:
+        def dbody(x, xs):
+            pl, pc = xs
+            ck = attention_apply  # appease linters
+            # cross K/V from encoder output, per decoder layer
+            from .linear import proj as _proj
+            ckv = KVCache(
+                k=_proj(enc, pc["attn"]["wk"], cfg.quant),
+                v=_proj(enc, pc["attn"]["wv"], cfg.quant))
+            x, _, _ = _dense_body(pl, x, positions, cfg, True, None, None,
+                                  ckv, pc)
+            return x, None
+        fn = jax.checkpoint(dbody) if remat else dbody
+        x, _ = jax.lax.scan(fn, x, (params["layers"], params["cross"]))
+    else:
+        flags = _global_flags(cfg)
+
+        def body(carry, xs):
+            x, aux = carry
+            x = jax.lax.optimization_barrier(x)  # keep saved carry bf16
+            pl, isg = xs
+            x, _, a = _dense_body(pl, x, positions, cfg, isg, None, None,
+                                  None, None)
+            return (x, aux + a), None
+        fn = jax.checkpoint(body) if remat else body
+        (x, aux_total), _ = jax.lax.scan(fn, (x, aux_total),
+                                         (params["layers"], flags))
+
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    if prefix:
+        x = x[:, prefix:]
+    if return_features:
+        return x, aux_total
+    return _logits(params, cfg, x), aux_total
+
+
+_CE_CHUNK_THRESHOLD = 65536  # stream the CE over vocab chunks above this
+_CE_VCHUNK = 16384
+
+
+def _streamed_ce(x, table, labels):
+    """Cross entropy without materializing (tokens, V) logits.
+
+    Scans the (tied) embedding table in vocab chunks carrying a running
+    (max, sumexp, label-logit); the chunk body is rematerialized in the
+    backward pass, so peak memory is O(tokens x vchunk) instead of
+    O(tokens x V) — the fix that brings gemma3-27b (V=262144) train cells
+    under the HBM budget (EXPERIMENTS.md §Perf iteration B).
+    Returns per-token nll, same shape as labels.
+    """
+    B, T, D = x.shape
+    V = table.shape[0]
+    n = -(-V // _CE_VCHUNK)
+    pad = n * _CE_VCHUNK - V
+    tpad = jnp.pad(table, ((0, pad), (0, 0)))
+    chunks = tpad.reshape(n, _CE_VCHUNK, D)
+    bases = jnp.arange(n, dtype=jnp.int32) * _CE_VCHUNK
+
+    def step(carry, xs):
+        m, s, ll = carry
+        tc, base = xs
+        logits = jnp.einsum("btd,vd->btv", x, tc.astype(x.dtype),
+                            preferred_element_type=jnp.float32)
+        valid = (base + jnp.arange(_CE_VCHUNK, dtype=jnp.int32)) < V
+        logits = jnp.where(valid[None, None, :], logits, -jnp.inf)
+        m_new = jnp.maximum(m, jnp.max(logits, axis=-1))
+        alpha = jnp.exp(m - m_new)
+        s = s * alpha + jnp.sum(jnp.exp(logits - m_new[..., None]), axis=-1)
+        idx = labels - base
+        iota = jax.lax.broadcasted_iota(jnp.int32, logits.shape, 2)
+        ll = ll + jnp.sum(
+            jnp.where(iota == idx[..., None], logits, 0.0), axis=-1)
+        return (m_new, s, ll), None
+
+    m0 = jnp.full((B, T), -jnp.inf, jnp.float32)
+    s0 = jnp.zeros((B, T), jnp.float32)
+    ll0 = jnp.zeros((B, T), jnp.float32)
+    (m, s, ll), _ = jax.lax.scan(jax.checkpoint(step), (m0, s0, ll0),
+                                 (chunks, bases))
+    return (m + jnp.log(s)) - ll
+
+
+def loss_fn(params, cfg: ModelConfig, batch):
+    """Next-token cross entropy (+ MoE load-balance aux)."""
+    labels = batch["labels"]
+    mask = batch.get("loss_mask")
+    if mask is None:
+        mask = jnp.ones_like(labels, jnp.float32)
+
+    if cfg.vocab > _CE_CHUNK_THRESHOLD and cfg.tie_embeddings:
+        x, aux = forward(params, cfg, batch, return_features=True)
+        nll = _streamed_ce(x, params["embed"], labels) * mask
+    else:
+        logits, aux = forward(params, cfg, batch)
+        logits = logits.astype(jnp.float32)
+        m = jnp.max(logits, axis=-1, keepdims=True)
+        lse = m[..., 0] + jnp.log(jnp.sum(jnp.exp(logits - m), axis=-1))
+        iota = jax.lax.broadcasted_iota(jnp.int32, logits.shape, 2)
+        ll = jnp.sum(jnp.where(iota == labels[..., None], logits, 0.0),
+                     axis=-1)
+        nll = (lse - ll) * mask
+    denom = jnp.maximum(jnp.sum(mask), 1.0)
+    loss = jnp.sum(nll) / denom
+    total = loss + 0.01 * aux
+    return total, {"loss": loss, "aux_loss": aux,
+                   "tokens": jnp.sum(mask)}
+
+
+# ---------------------------------------------------------------------------
+# Serving: cache init / prefill / decode
+# ---------------------------------------------------------------------------
+
+
+def _n_attn_layers(cfg: ModelConfig) -> int:
+    if cfg.is_ssm_only:
+        return 0
+    if cfg.is_hybrid:
+        return cfg.n_layers // cfg.attn_every
+    return cfg.n_layers
+
+
+def _n_ssm_layers(cfg: ModelConfig) -> int:
+    if cfg.is_ssm_only:
+        return cfg.n_layers
+    if cfg.is_hybrid:
+        return cfg.n_layers - cfg.n_layers // cfg.attn_every
+    return 0
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int,
+               dtype=None):
+    """Allocate the serving cache + its logical dims tree.
+
+    K/V storage uses ``cfg.kv_cache_dtype`` (fp8_e4m3 = 1 byte/elem, the
+    paper's narrow-format theme applied to cache memory); SSM conv state
+    stays bf16 and the SSM recurrent state f32."""
+    kv_dtype = dtype if dtype is not None else dtype_of(cfg.kv_cache_dtype)
+    conv_dtype = dtype if dtype is not None else jnp.bfloat16
+    cache: Dict[str, Any] = {"pos": jnp.zeros((), jnp.int32)}
+    dims: Dict[str, Any] = {"pos": ()}
+    La = _n_attn_layers(cfg)
+    if La:
+        kv_shape = (La, batch, max_len, cfg.n_kv_heads, cfg.head_dim)
+        cache["k"] = jnp.zeros(kv_shape, kv_dtype)
+        cache["v"] = jnp.zeros(kv_shape, kv_dtype)
+        d = ("layers", "batch", "kv_seq", "kv_heads", "head_dim")
+        dims["k"] = d
+        dims["v"] = d
+    Lm = _n_ssm_layers(cfg)
+    if Lm:
+        if cfg.is_hybrid:
+            G, S = cfg.n_layers // cfg.attn_every, cfg.attn_every - 1
+            hshape = (G, S, batch, cfg.d_inner, cfg.ssm_state)
+            cshape = (G, S, batch, cfg.d_conv - 1, cfg.d_inner)
+            hd = ("groups", "sub", "batch", "inner", "ssm_state")
+            cd = ("groups", "sub", "batch", "conv_k", "inner")
+        else:
+            hshape = (Lm, batch, cfg.d_inner, cfg.ssm_state)
+            cshape = (Lm, batch, cfg.d_conv - 1, cfg.d_inner)
+            hd = ("layers", "batch", "inner", "ssm_state")
+            cd = ("layers", "batch", "conv_k", "inner")
+        cache["ssm_h"] = jnp.zeros(hshape, jnp.float32)
+        cache["ssm_conv"] = jnp.zeros(cshape, conv_dtype)
+        dims["ssm_h"] = hd
+        dims["ssm_conv"] = cd
+    if cfg.encoder_layers:
+        xshape = (cfg.n_layers, batch, cfg.encoder_len, cfg.n_kv_heads,
+                  cfg.head_dim)
+        cache["cross_k"] = jnp.zeros(xshape, kv_dtype)
+        cache["cross_v"] = jnp.zeros(xshape, kv_dtype)
+        xd = ("layers", "batch", "enc_seq", "kv_heads", "head_dim")
+        dims["cross_k"] = xd
+        dims["cross_v"] = xd
+    return cache, dims
+
+
+def prefill(params, cfg: ModelConfig, batch, cache):
+    """Run the prompt through the stack, filling the cache.
+
+    Returns (last-position logits (B, V), cache)."""
+    params = _cast_params(params, cfg)
+    tokens = batch["tokens"]
+    B, T = tokens.shape
+    x = _embed_tokens(params, cfg, tokens)
+    prefix = 0
+    if cfg.vision_prefix:
+        ve = batch["vision_embeds"].astype(x.dtype)
+        prefix = ve.shape[1]
+        x = jnp.concatenate([ve, x], axis=1)
+    S = x.shape[1]
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None],
+                                 (B, S))
+    x = constrain(x, ("batch", "seq", "embed_act"))
+
+    if cfg.encoder_layers:
+        enc = _encode(params, cfg, batch["audio_embeds"])
+        from .linear import proj as _proj
+        def cross_kv_one(pc):
+            return (_proj(enc, pc["attn"]["wk"], cfg.quant).astype(
+                        cache["cross_k"].dtype),
+                    _proj(enc, pc["attn"]["wv"], cfg.quant).astype(
+                        cache["cross_v"].dtype))
+        ck, cv = jax.lax.map(cross_kv_one, params["cross"])
+        cache = dict(cache, cross_k=ck, cross_v=cv)
+
+    new_cache = dict(cache)
+    if cfg.is_hybrid:
+        def gbody(x, xs):
+            pg, kc, vc = xs
+            x, akv, ssm, _ = _hybrid_group_body(
+                pg, x, positions, cfg, KVCache(kc, vc), 0, None,
+                decode=False)
+            return x, (akv.k, akv.v, ssm.h, ssm.conv)
+        x, (ks, vs, hs, convs) = jax.lax.scan(
+            gbody, x, (params["layers"], cache["k"], cache["v"]))
+        new_cache.update(k=ks, v=vs, ssm_h=hs,
+                         ssm_conv=convs.astype(cache["ssm_conv"].dtype))
+    elif cfg.is_ssm_only:
+        def sbody(x, pl):
+            x, sc = _ssm_body(pl, x, cfg, None, decode=False)
+            return x, (sc.h.astype(jnp.float32),
+                       sc.conv)
+        x, (hs, convs) = jax.lax.scan(sbody, x, params["layers"])
+        new_cache.update(ssm_h=hs,
+                         ssm_conv=convs.astype(cache["ssm_conv"].dtype))
+    elif cfg.encoder_layers:
+        def dbody(x, xs):
+            pl, pc, kc, vc, ck, cv = xs
+            x, akv, _ = _dense_body(pl, x, positions, cfg, True,
+                                    KVCache(kc, vc), 0, KVCache(ck, cv), pc)
+            return x, (akv.k, akv.v)
+        x, (ks, vs) = jax.lax.scan(
+            dbody, x, (params["layers"], params["cross"], cache["k"],
+                       cache["v"], new_cache["cross_k"],
+                       new_cache["cross_v"]))
+        new_cache.update(k=ks, v=vs)
+    else:
+        flags = _global_flags(cfg)
+        def body(x, xs):
+            pl, isg, kc, vc = xs
+            x, akv, _ = _dense_body(pl, x, positions, cfg, isg,
+                                    KVCache(kc, vc), 0, None, None)
+            return x, (akv.k, akv.v)
+        x, (ks, vs) = jax.lax.scan(
+            body, x, (params["layers"], flags, cache["k"], cache["v"]))
+        new_cache.update(k=ks, v=vs)
+
+    new_cache["pos"] = jnp.asarray(S, jnp.int32)
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    last = x[:, -1:]
+    return _logits(params, cfg, last)[:, 0], new_cache
+
+
+def decode_step(params, cfg: ModelConfig, tokens, cache):
+    """One decode step. tokens: (B, 1). Returns (logits (B, V), cache)."""
+    params = _cast_params(params, cfg)
+    B = tokens.shape[0]
+    pos = cache["pos"]
+    x = _embed_tokens(params, cfg, tokens)
+    x = constrain(x, ("batch", "seq", "embed_act"))
+    positions = jnp.broadcast_to(pos[None, None], (B, 1)).astype(jnp.int32)
+
+    new_cache = dict(cache)
+    if cfg.is_hybrid:
+        def gbody(x, xs):
+            pg, kc, vc, hc, cc = xs
+            x, akv, ssm, _ = _hybrid_group_body(
+                pg, x, positions, cfg, KVCache(kc, vc), pos,
+                SSMCache(hc, cc), decode=True)
+            return x, (akv.k, akv.v, ssm.h, ssm.conv)
+        x, (ks, vs, hs, convs) = jax.lax.scan(
+            gbody, x, (params["layers"], cache["k"], cache["v"],
+                       cache["ssm_h"], cache["ssm_conv"]))
+        new_cache.update(k=ks, v=vs, ssm_h=hs,
+                         ssm_conv=convs.astype(cache["ssm_conv"].dtype))
+    elif cfg.is_ssm_only:
+        def sbody(x, xs):
+            pl, hc, cc = xs
+            x, sc = _ssm_body(pl, x, cfg, SSMCache(hc, cc), decode=True)
+            return x, (sc.h.astype(jnp.float32), sc.conv)
+        x, (hs, convs) = jax.lax.scan(
+            sbody, x, (params["layers"], cache["ssm_h"], cache["ssm_conv"]))
+        new_cache.update(ssm_h=hs,
+                         ssm_conv=convs.astype(cache["ssm_conv"].dtype))
+    elif cfg.encoder_layers:
+        def dbody(x, xs):
+            pl, pc, kc, vc, ck, cv = xs
+            x, akv, _ = _dense_body(pl, x, positions, cfg, True,
+                                    KVCache(kc, vc), pos, KVCache(ck, cv),
+                                    pc)
+            return x, (akv.k, akv.v)
+        x, (ks, vs) = jax.lax.scan(
+            dbody, x, (params["layers"], params["cross"], cache["k"],
+                       cache["v"], cache["cross_k"], cache["cross_v"]))
+        new_cache.update(k=ks, v=vs)
+    else:
+        flags = _global_flags(cfg)
+        def body(x, xs):
+            pl, isg, kc, vc = xs
+            x, akv, _ = _dense_body(pl, x, positions, cfg, isg,
+                                    KVCache(kc, vc), pos, None, None)
+            return x, (akv.k, akv.v)
+        x, (ks, vs) = jax.lax.scan(
+            body, x, (params["layers"], flags, cache["k"], cache["v"]))
+        new_cache.update(k=ks, v=vs)
+
+    new_cache["pos"] = pos + 1
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    return _logits(params, cfg, x)[:, 0], new_cache

@@ -1,0 +1,213 @@
+"""Logical-axis sharding: rules, best-fit resolution, activation constraints.
+
+Models annotate parameters and activations with *logical* dimension names
+("batch", "heads", "ffn", "experts", ...). A ``Rules`` object maps each
+name to an ordered list of candidate mesh axes; resolution is greedy and
+divisibility-checked, so e.g. ``kv_heads=8`` on a 16-way model axis falls
+back to replication instead of crashing, and a non-divisible vocab simply
+stays unsharded while the embed dim picks up the model axis.
+
+Activation constraints are applied through a context (``use_rules``): model
+code calls :func:`constrain` unconditionally; outside a rules context it is
+an identity, so the same model runs single-device tests unchanged.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Dict, Optional, Sequence, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+__all__ = ["Rules", "TRAIN_RULES", "make_rules", "train_rules", "use_rules",
+           "constrain", "resolve_spec", "current_rules", "named_sharding"]
+
+
+class Rules:
+    """Logical dim -> ordered candidate mesh axes, with dim priorities.
+
+    Resolution is greedy over dims in *priority* order (then positional),
+    divisibility-checked, never assigning a mesh axis twice within one
+    tensor — so e.g. a KV cache prefers sharding kv_heads over kv_seq,
+    but falls back to the seq dim when head count doesn't divide.
+    """
+
+    def __init__(self, mesh: Mesh, table: Dict[str, Sequence],
+                 priority: Sequence[str] = (), name: str = "rules"):
+        self.mesh = mesh
+        self.table = dict(table)
+        self.priority = list(priority)
+        self.name = name
+
+    def axis_size(self, axis) -> int:
+        if isinstance(axis, tuple):
+            n = 1
+            for a in axis:
+                n *= self.mesh.shape[a]
+            return n
+        return self.mesh.shape[axis]
+
+    def resolve(self, dims: Tuple[Optional[str], ...],
+                shape: Optional[Tuple[int, ...]] = None) -> P:
+        used = set()
+        parts: list = [None] * len(dims)
+        names = set(self.mesh.axis_names)
+
+        def rank(i_dim):
+            i, dim = i_dim
+            try:
+                return (0, self.priority.index(dim), i)
+            except ValueError:
+                return (1, 0, i)
+
+        for i, dim in sorted(enumerate(dims), key=rank):
+            for cand in self.table.get(dim, ()):  # ordered candidates
+                flat = cand if isinstance(cand, tuple) else (cand,)
+                if any(a not in names for a in flat):
+                    continue  # axis absent from this mesh (e.g. single-pod)
+                if any(a in used for a in flat):
+                    continue
+                if shape is not None and shape[i] % self.axis_size(cand):
+                    continue
+                parts[i] = cand
+                used.update(flat)
+                break
+        while parts and parts[-1] is None:
+            parts.pop()
+        return P(*parts)
+
+
+_PRIORITY = ["batch", "experts", "vocab", "heads", "kv_heads", "ffn",
+             "inner", "embed", "kv_seq", "seq", "vocab_act"]
+
+
+def make_rules(mesh: Mesh, strategy: str = "train",
+               seq_shard_kv: bool = True, prefer_sp: bool = False,
+               shard_seq: bool = True) -> Rules:
+    """Production rule sets for the (pod?, data, model) meshes.
+
+    strategy="train" — FSDP(ZeRO-3)+SP: batch over (pod, data), sequence
+      over model (Megatron-style sequence parallelism keeps the remat
+      stash per-device bounded), every parameter fully sharded: its
+      "parallel" dim (heads/ffn/experts/vocab) over model and its embed
+      dim over (pod, data). GSPMD materializes the per-layer weight
+      all-gathers inside the scan (the ZeRO-3 schedule).
+
+    strategy="serve" — TP + weight-sharding: batch over (pod, data),
+      heads/ffn/experts over model (tensor parallelism does the work
+      split), weights additionally sharded over (pod, data) on the embed
+      dim; KV caches shard kv_heads over model when divisible, falling
+      back to kv_seq, then the data axis when the batch is tiny
+      (long_500k batch=1).
+    """
+    batch_axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    fsdp_axes = [batch_axes, "data"]
+    common = {
+        "head_dim": [], "ssm_state": [], "dt_rank": [], "conv_k": [],
+        "layers": [], "groups": [], "sub": [], "enc_seq": [],
+        "groups_act": [batch_axes, "data"],
+        "experts_act": ["model"],
+        "embed_act": [],
+        # params
+        "vocab": ["model"],
+        "heads": ["model"],
+        "kv_heads": ["model"],
+        "ffn": ["model"],
+        "experts": ["model"],
+        "inner": ["model"],
+        "embed": fsdp_axes,
+    }
+    if strategy == "train":
+        # Two training layouts (EXPERIMENTS.md §Perf E/F):
+        # * dense archs: spread the batch over every axis (pure ZeRO-3 —
+        #   attention stays local, no per-layer KV gathers; measured ~4x
+        #   peak-fraction gain on deepseek-7b vs sequence parallelism).
+        # * prefer_sp (MoE archs): batch over (pod, data) + sequence
+        #   parallelism over model. MoE dispatch needs token groups to
+        #   stay data-sharded while experts own the model axis — batch-
+        #   over-model forces a G:[256]->[16,16] reshard GSPMD can only
+        #   do by full replication (measured +25.8 GB/device on dbrx).
+        #   Their GQA KV is small (kv=8), so the SP KV gathers are cheap.
+        # The pod axis is never left idle (no redundant compute).
+        if prefer_sp:
+            batch_cands = [batch_axes, "data"]
+        elif "pod" in mesh.axis_names:
+            batch_cands = [("pod", "data", "model"), ("pod", "data"),
+                           "data"]
+        else:
+            batch_cands = [("data", "model"), "data"]
+        table = dict(common)
+        table.update({
+            "batch": batch_cands,
+            # SSM archs must not shard seq: lax.scan over time chunks
+            # forces its xs to be materialized unsharded along the scan
+            # axis, gathering the full sequence per layer (§Perf H).
+            "seq": ["model"] if shard_seq else [],
+            "vocab_act": ["model"],
+            "kv_seq": [],
+        })
+    elif strategy == "serve":
+        table = dict(common)
+        table.update({
+            "batch": [batch_axes, "data"],
+            "seq": [],
+            "vocab_act": ["model"],
+            "kv_seq": (["data", "model"] if seq_shard_kv else []),
+        })
+    else:
+        raise ValueError(f"unknown strategy {strategy!r}")
+    return Rules(mesh, table, priority=_PRIORITY, name=strategy)
+
+
+def train_rules(mesh: Mesh, fsdp: bool = True, seq_shard_kv: bool = True,
+                **_kw) -> Rules:
+    """Backward-compatible alias for make_rules(strategy='train')."""
+    return make_rules(mesh, "train", seq_shard_kv)
+
+
+TRAIN_RULES = train_rules  # alias
+
+
+_ctx = threading.local()
+
+
+def current_rules() -> Optional[Rules]:
+    return getattr(_ctx, "rules", None)
+
+
+@contextlib.contextmanager
+def use_rules(rules: Optional[Rules]):
+    prev = current_rules()
+    _ctx.rules = rules
+    try:
+        yield rules
+    finally:
+        _ctx.rules = prev
+
+
+def constrain(x, dims: Tuple[Optional[str], ...]):
+    """Apply a with_sharding_constraint from logical dims (no-op outside a
+    rules context)."""
+    rules = current_rules()
+    if rules is None:
+        return x
+    spec = rules.resolve(dims, tuple(x.shape))
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(rules.mesh, spec))
+
+
+def resolve_spec(dims_tree, shapes_tree, rules: Rules):
+    """Map a dims tree (+ matching shapes) to a PartitionSpec tree."""
+    return jax.tree.map(
+        lambda dims, shape: rules.resolve(tuple(dims), tuple(shape)),
+        dims_tree, shapes_tree,
+        is_leaf=lambda d: isinstance(d, tuple) and all(
+            isinstance(s, (str, type(None))) for s in d))
+
+
+def named_sharding(spec_tree, mesh: Mesh):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), spec_tree,
+        is_leaf=lambda s: isinstance(s, P))

@@ -1,0 +1,10 @@
+# Quantization substrate: configs, quantizers, and the qmatmul dispatch
+# that makes MGS a first-class execution mode for every linear layer.
+from .config import ACCUMS, DTYPES, QuantConfig
+from .qmatmul import qmatmul
+from .quantize import (QTensor, dequantize_int, fake_quant_fp8,
+                       fake_quant_int, quantize_fp8, quantize_int)
+
+__all__ = ["ACCUMS", "DTYPES", "QuantConfig", "qmatmul", "QTensor",
+           "dequantize_int", "fake_quant_fp8", "fake_quant_int",
+           "quantize_fp8", "quantize_int"]

@@ -1,0 +1,93 @@
+"""Quantized-execution configuration — the framework's first-class knob.
+
+A ``QuantConfig`` selects the number format of weights/activations and the
+accumulation strategy for every matmul routed through
+:mod:`repro.quant.qmatmul`. The paper's MGS is ``accum="mgs_dmac"``
+(bit-faithful) or ``accum="mgs_exact"`` (our TPU-native exact fixed-point
+variant); the baselines it compares against are ``"wide"`` (FP32
+accumulation — what H100/TPU hardware does), ``"clip"`` (saturation) and
+``"swamp"`` (sequential narrow-mantissa accumulation).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+from repro.core.formats import E4M3, E5M2, FPFormat, get_format
+
+__all__ = ["QuantConfig", "DTYPES", "ACCUMS"]
+
+DTYPES = ("none", "int8", "int5", "int4", "fp8_e4m3", "fp8_e5m2")
+ACCUMS = ("wide", "mgs_exact", "mgs_dmac", "clip", "wrap", "swamp")
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantConfig:
+    """Configuration for one quantized matmul family.
+
+    Attributes:
+      dtype: operand format (weights and activations).
+      accum: accumulation strategy (see module docstring).
+      narrow_bits: narrow accumulator width for dmac/clip emulation paths
+        (5 signed bits in the paper's FP8 evaluation, §6.2.2).
+      act_bits / weight_bits: integer operand widths for the int paths
+        (the paper sweeps 5..8, §6.2.1).
+      per_channel: per-output-channel weight scales (vs per-tensor).
+      gate_subnormal: §5.3 subnormal gating of tiny products.
+      use_kernel: route through the Pallas kernel (TPU target; tests run it
+        in interpret mode). False = pure-jnp emulation path (XLA-compiled,
+        used by the CPU dry-run).
+      block_m/n/k: Pallas tile sizes (MXU-aligned defaults).
+      flush_target: probabilistic overflow budget used by the Markov
+        planner to derive the kernel flush period; None = worst-case bound.
+    """
+
+    dtype: str = "none"
+    accum: str = "wide"
+    narrow_bits: int = 5
+    act_bits: int = 8
+    weight_bits: int = 8
+    per_channel: bool = False
+    gate_subnormal: bool = True
+    use_kernel: bool = False
+    block_m: int = 128
+    block_n: int = 128
+    block_k: int = 128
+    flush_target: Optional[float] = None
+
+    def __post_init__(self):
+        if self.dtype not in DTYPES:
+            raise ValueError(f"dtype {self.dtype!r} not in {DTYPES}")
+        if self.accum not in ACCUMS:
+            raise ValueError(f"accum {self.accum!r} not in {ACCUMS}")
+
+    @property
+    def is_fp8(self) -> bool:
+        return self.dtype.startswith("fp8")
+
+    @property
+    def is_int(self) -> bool:
+        return self.dtype.startswith("int")
+
+    @property
+    def fmt(self) -> FPFormat:
+        if not self.is_fp8:
+            raise ValueError(f"{self.dtype} has no FP format")
+        return get_format(self.dtype.split("_", 1)[1])
+
+    @property
+    def int_bits(self) -> int:
+        if not self.is_int:
+            raise ValueError(f"{self.dtype} is not an int dtype")
+        return int(self.dtype[3:])
+
+    def replace(self, **kw) -> "QuantConfig":
+        return dataclasses.replace(self, **kw)
+
+
+NONE = QuantConfig()
+FP8_MGS = QuantConfig(dtype="fp8_e4m3", accum="mgs_dmac")
+FP8_MGS_EXACT = QuantConfig(dtype="fp8_e4m3", accum="mgs_exact")
+FP8_WIDE = QuantConfig(dtype="fp8_e4m3", accum="wide")
+INT8_DMAC = QuantConfig(dtype="int8", accum="mgs_dmac")

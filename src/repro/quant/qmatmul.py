@@ -1,0 +1,113 @@
+"""Quantized matmul dispatch — every model linear layer routes through here.
+
+Given a ``QuantConfig``, ``qmatmul(x, w, cfg)`` quantizes the operands,
+runs the configured numerics, and rescales:
+
+  dtype=none                  -> plain (bf16/f32) dot, fp32 accumulation
+  fp8_* + accum=wide          -> FP8 operands, fp32 accumulation (H100/TPU
+                                 baseline the paper compares against)
+  fp8_* + accum=mgs_exact     -> exact fixed-point accumulation
+                                 (Pallas limb kernel / jnp reference)
+  fp8_* + accum=mgs_dmac      -> paper-faithful Fig. 8 numerics
+  fp8_* + accum=swamp         -> sequential narrow accumulator (failure
+                                 baseline, Fig. 3)
+  int8/int5/int4 + wide       -> integer matmul, int32 accumulation
+  int* + clip                 -> saturation arithmetic (framework default
+                                 the paper criticizes, emulation-only)
+
+The heavyweight emulation paths (mgs_dmac / swamp / clip) are evaluation
+tools — use them on layer-sized problems; the production TPU path is
+``mgs_exact`` with the Pallas kernel.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.kernels import ops as kops
+from repro.kernels import ref as kref
+from .config import QuantConfig
+from .quantize import quantize_fp8, quantize_int
+
+__all__ = ["qmatmul"]
+
+
+def qmatmul(x, w, cfg: QuantConfig, out_dtype=None):
+    """(..., K) @ (K, N) under the quantized numerics of ``cfg``."""
+    if out_dtype is None:
+        out_dtype = x.dtype
+    if cfg.dtype == "none":
+        return jnp.dot(x, w, preferred_element_type=jnp.float32).astype(
+            out_dtype)
+
+    if cfg.is_fp8:
+        fmt = cfg.fmt
+        # Product-safe scaling for the paths that round *products* back into
+        # the FP8 format (Fig. 8 hardware): scale each operand so
+        # amax -> sqrt(max_finite), guaranteeing |qx*qw| <= max_finite and
+        # hence no product saturation. The exact path performs no product
+        # re-rounding, so operands may fill the whole range (a beyond-paper
+        # accuracy advantage of the limb kernel, quantified in benchmarks).
+        if cfg.accum in ("mgs_dmac", "swamp"):
+            margin = fmt.max_finite ** -0.5
+        else:
+            margin = 1.0
+        qx = quantize_fp8(x, fmt, margin=margin)
+        qw = quantize_fp8(w, fmt, axis=0 if cfg.per_channel else None,
+                          margin=margin)
+        scale = qx.scale * qw.scale
+        if cfg.accum == "wide":
+            out = kref.wide_matmul_ref(qx.q, qw.q)
+        elif cfg.accum in ("mgs_exact", "mgs_dmac"):
+            mode = "exact" if cfg.accum == "mgs_exact" else "dmac"
+            out = kops.mgs_matmul(
+                qx.q, qw.q, fmt, mode, use_kernel=cfg.use_kernel,
+                gate_subnormal=cfg.gate_subnormal, block_m=cfg.block_m,
+                block_n=cfg.block_n, block_k=cfg.block_k)
+        elif cfg.accum == "swamp":
+            lead = qx.q.shape[:-1]
+            out = kref.swamp_matmul_ref(
+                qx.q.reshape((-1, qx.q.shape[-1])), qw.q, fmt,
+                acc_mantissa_bits=cfg.narrow_bits - 1)
+            out = out.reshape(lead + (w.shape[-1],))
+        else:
+            raise NotImplementedError(
+                f"accum={cfg.accum} for fp8 (use wide/mgs_*/swamp)")
+        return (out * scale).astype(out_dtype)
+
+    if cfg.is_int:
+        bits = cfg.int_bits
+        qx = quantize_int(x, min(bits, cfg.act_bits), symmetric=True)
+        qw = quantize_int(w, min(bits, cfg.weight_bits),
+                          axis=0 if cfg.per_channel else None, symmetric=True)
+        scale = qx.scale * qw.scale
+        if cfg.accum in ("wide", "mgs_exact", "mgs_dmac"):
+            # dMAC integer accumulation is exact == int32 accumulation; the
+            # narrow/wide split only changes the *energy*, not the value
+            # (§5.1). Stats-producing emulation lives in core.int_dmac.
+            out = jnp.dot(qx.q.astype(jnp.int8) if bits <= 8 else qx.q,
+                          qw.q.astype(jnp.int8) if bits <= 8 else qw.q,
+                          preferred_element_type=jnp.int32)
+        elif cfg.accum == "clip":
+            from repro.core.int_dmac import int_dot_clip
+            import jax
+            lead = qx.q.shape[:-1]
+            x2 = qx.q.reshape((-1, qx.q.shape[-1]))
+            f = jax.vmap(jax.vmap(
+                lambda xv, wv: int_dot_clip(xv, wv, cfg.narrow_bits)[0],
+                in_axes=(None, 1)), in_axes=(0, None))
+            out = f(x2, qw.q).reshape(lead + (w.shape[-1],))
+        elif cfg.accum == "wrap":
+            from repro.core.int_dmac import int_dot_wrap
+            import jax
+            lead = qx.q.shape[:-1]
+            x2 = qx.q.reshape((-1, qx.q.shape[-1]))
+            f = jax.vmap(jax.vmap(
+                lambda xv, wv: int_dot_wrap(xv, wv, cfg.narrow_bits),
+                in_axes=(None, 1)), in_axes=(0, None))
+            out = f(x2, qw.q).reshape(lead + (w.shape[-1],))
+        else:
+            raise NotImplementedError(f"accum={cfg.accum} for int")
+        return (out.astype(jnp.float32) * scale).astype(out_dtype)
+
+    raise ValueError(f"unhandled dtype {cfg.dtype}")

@@ -1,0 +1,97 @@
+"""Weight/activation quantizers (paper §2.1 / §2.2).
+
+Integer: uniform affine quantization with per-tensor or per-channel scales;
+weights symmetric (offset 0) per the standard practice the paper cites.
+FP8: absmax scaling into the format's dynamic range followed by RNE
+rounding (the standard FP8 recipe on H100/Gaudi2 the paper references).
+
+Quantized *values* are carried as format-exact floats (f32/bf16 holding
+exactly-representable values) plus a power-free scale — the form the MGS
+kernels consume (they re-derive mantissa/exponent bit fields internally).
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.formats import FPFormat, round_to_format
+
+__all__ = ["QTensor", "quantize_fp8", "quantize_int", "dequantize_int",
+           "fake_quant_fp8", "fake_quant_int"]
+
+
+class QTensor(NamedTuple):
+    """A quantized tensor: format-exact values + scale (+ offset for ints)."""
+
+    q: jnp.ndarray          # format-exact values (fp8 path) or int32 (int path)
+    scale: jnp.ndarray      # broadcastable scale s.t. x ≈ q * scale
+    offset: Optional[jnp.ndarray] = None  # int path zero-point (None = symmetric)
+
+
+def _absmax(x, axis):
+    m = jnp.max(jnp.abs(x), axis=axis, keepdims=axis is not None)
+    return jnp.maximum(m, jnp.finfo(jnp.float32).tiny)
+
+
+@partial(jax.jit, static_argnames=("fmt", "axis", "margin"))
+def quantize_fp8(x, fmt: FPFormat, axis: Optional[int] = None,
+                 margin: float = 1.0) -> QTensor:
+    """Scale ``x`` into ``fmt``'s range (absmax) and RNE-round.
+
+    ``axis``: reduction axis for per-channel scales (None = per-tensor).
+    ``margin``: headroom divisor (<1 leaves headroom; 1 = fill the range).
+    """
+    x = x.astype(jnp.float32)
+    amax = _absmax(x, axis)
+    scale = amax / (fmt.max_finite * margin)
+    q = round_to_format(x / scale, fmt)
+    return QTensor(q=q, scale=scale)
+
+
+@partial(jax.jit, static_argnames=("bits", "axis", "symmetric"))
+def quantize_int(x, bits: int = 8, axis: Optional[int] = None,
+                 symmetric: bool = True) -> QTensor:
+    """Uniform b-bit quantization (paper §2.1).
+
+    Symmetric: q = round(x/s), s = absmax / (2^{b-1} − 1), offset None.
+    Asymmetric: s = range / (2^b − 1), offset o = −2^{b−1} − round(min/s)
+    so that real zero maps to an integer (the paper's offset equation).
+    """
+    x = x.astype(jnp.float32)
+    if symmetric:
+        amax = _absmax(x, axis)
+        scale = amax / (2 ** (bits - 1) - 1)
+        q = jnp.clip(jnp.rint(x / scale), -(2 ** (bits - 1)),
+                     2 ** (bits - 1) - 1).astype(jnp.int32)
+        return QTensor(q=q, scale=scale)
+    xmin = jnp.min(x, axis=axis, keepdims=axis is not None)
+    xmax = jnp.max(x, axis=axis, keepdims=axis is not None)
+    scale = jnp.maximum(xmax - xmin, 1e-12) / (2**bits - 1)
+    offset = -(2 ** (bits - 1)) - jnp.rint(xmin / scale)
+    q = jnp.clip(jnp.rint(x / scale) + offset, -(2 ** (bits - 1)),
+                 2 ** (bits - 1) - 1).astype(jnp.int32)
+    return QTensor(q=q, scale=scale, offset=offset.astype(jnp.int32))
+
+
+def dequantize_int(t: QTensor):
+    """x* = s (q − o) — paper §2.1."""
+    q = t.q.astype(jnp.float32)
+    if t.offset is not None:
+        q = q - t.offset.astype(jnp.float32)
+    return q * t.scale
+
+
+def fake_quant_fp8(x, fmt: FPFormat, axis: Optional[int] = None):
+    """Quantize-dequantize (QDQ) — for accuracy studies."""
+    t = quantize_fp8(x, fmt, axis)
+    return t.q * t.scale
+
+
+def fake_quant_int(x, bits: int = 8, axis: Optional[int] = None,
+                   symmetric: bool = True):
+    t = quantize_int(x, bits, axis, symmetric)
+    return dequantize_int(t)

@@ -1,0 +1,3 @@
+from . import checkpoint, elastic, fault_tolerance
+
+__all__ = ["checkpoint", "elastic", "fault_tolerance"]

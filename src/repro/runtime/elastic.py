@@ -1,0 +1,59 @@
+"""Elastic scaling: re-mesh and re-shard on a changed device count.
+
+Checkpoints store logical (global) arrays (runtime/checkpoint.py), so
+scaling is: (1) pick a new mesh from the surviving device set, keeping the
+model axis intact (TP degree is baked into kernel-level shapes and layer
+divisibility; the data axis is the elastic one); (2) rebuild shardings
+from the same logical rules on the new mesh; (3) device_put on restore.
+The data pipeline is step-indexed (data/pipeline.py), so the token stream
+is unchanged under re-sharding.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Sequence, Tuple
+
+import jax
+from jax.sharding import Mesh
+
+__all__ = ["plan_mesh", "make_elastic_mesh", "reshard"]
+
+
+def plan_mesh(n_devices: int, model_parallel: int,
+              multi_pod_threshold: int = 256) -> Tuple[Tuple[int, ...],
+                                                       Tuple[str, ...]]:
+    """Largest usable (pod?, data, model) mesh for ``n_devices``.
+
+    Keeps the model axis fixed; data axis = largest whole multiple; excess
+    devices idle (the grace-restart protocol prefers a slightly smaller
+    healthy mesh over waiting on a straggler).
+    """
+    if n_devices < model_parallel:
+        raise ValueError(
+            f"need at least model_parallel={model_parallel} devices")
+    data = n_devices // model_parallel
+    if data * model_parallel > multi_pod_threshold and data % 2 == 0:
+        return ((data * model_parallel // multi_pod_threshold,
+                 multi_pod_threshold // model_parallel, model_parallel),
+                ("pod", "data", "model"))
+    return ((data, model_parallel), ("data", "model"))
+
+
+def make_elastic_mesh(model_parallel: int,
+                      devices: Optional[Sequence] = None,
+                      exclude: Sequence[int] = ()) -> Mesh:
+    """Build the largest healthy mesh, excluding flagged device ids."""
+    devices = list(devices if devices is not None else jax.devices())
+    healthy = [d for d in devices if d.id not in set(exclude)]
+    shape, axes = plan_mesh(len(healthy), model_parallel)
+    n = 1
+    for s in shape:
+        n *= s
+    import numpy as np
+    dev_array = np.array(healthy[:n]).reshape(shape)
+    return Mesh(dev_array, axes)
+
+
+def reshard(tree, shardings):
+    """device_put a (restored, host-resident) tree onto new shardings."""
+    return jax.tree.map(jax.device_put, tree, shardings)

@@ -1,0 +1,9 @@
+from .optimizer import (OptConfig, adamw_update, clip_by_global_norm,
+                        global_norm, init_opt_state, opt_state_dims,
+                        schedule_lr)
+from .train_step import init_train_state, make_eval_step, make_train_step
+from . import compression
+
+__all__ = ["OptConfig", "opt_state_dims", "adamw_update", "clip_by_global_norm", "global_norm",
+           "init_opt_state", "schedule_lr", "init_train_state",
+           "make_eval_step", "make_train_step", "compression"]

@@ -1,0 +1,161 @@
+"""AdamW + LR schedules, from scratch (pytree-native, shard-transparent).
+
+Optimizer state shards exactly like the parameters (the moments inherit
+the params' PartitionSpecs), so FSDP/TP configurations get sharded
+optimizer state for free — the ZeRO property.
+
+Schedules: linear-warmup cosine, and WSD (warmup-stable-decay, the
+MiniCPM schedule — the assigned minicpm-2b config selects it).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["OptConfig", "init_opt_state", "adamw_update", "schedule_lr",
+           "global_norm", "clip_by_global_norm"]
+
+
+@dataclasses.dataclass(frozen=True)
+class OptConfig:
+    lr: float = 3e-4
+    beta1: float = 0.9
+    beta2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    warmup_steps: int = 100
+    total_steps: int = 10000
+    schedule: str = "cosine"       # cosine | wsd | const
+    stable_frac: float = 0.8       # WSD: fraction of post-warmup steps at peak
+    min_lr_frac: float = 0.1
+    clip_norm: float = 1.0
+    # Adafactor-style factored second moment + bf16 momentum for >=2D
+    # leaves: 10 bytes/param -> ~2 bytes/param of optimizer state. The
+    # production answer for 100B+ models per pod (jamba-398B needs it to
+    # fit a 256-chip v5e pod — EXPERIMENTS.md §Perf H).
+    factored: bool = False
+
+
+def schedule_lr(cfg: OptConfig, step):
+    step = step.astype(jnp.float32) if hasattr(step, "astype") else float(step)
+    warm = jnp.minimum(1.0, (step + 1) / max(cfg.warmup_steps, 1))
+    t = jnp.clip((step - cfg.warmup_steps)
+                 / max(cfg.total_steps - cfg.warmup_steps, 1), 0.0, 1.0)
+    if cfg.schedule == "cosine":
+        frac = cfg.min_lr_frac + (1 - cfg.min_lr_frac) * 0.5 * (
+            1 + jnp.cos(jnp.pi * t))
+    elif cfg.schedule == "wsd":
+        # stable at peak for stable_frac, then inverse-exp decay to min
+        decay_t = jnp.clip((t - cfg.stable_frac) / max(1 - cfg.stable_frac,
+                                                       1e-6), 0.0, 1.0)
+        frac = jnp.where(t < cfg.stable_frac, 1.0,
+                         cfg.min_lr_frac ** decay_t)
+    elif cfg.schedule == "const":
+        frac = 1.0
+    else:
+        raise ValueError(cfg.schedule)
+    return cfg.lr * warm * frac
+
+
+def _is_factored_leaf(p, factored: bool) -> bool:
+    return factored and p.ndim >= 2
+
+
+def init_opt_state(params, factored: bool = False) -> Dict[str, Any]:
+    def mu_of(p):
+        return jnp.zeros(p.shape,
+                         jnp.bfloat16 if _is_factored_leaf(p, factored)
+                         else jnp.float32)
+
+    def nu_of(p):
+        if _is_factored_leaf(p, factored):
+            return {"row": jnp.zeros(p.shape[:-1], jnp.float32),
+                    "col": jnp.zeros(p.shape[:-2] + p.shape[-1:],
+                                     jnp.float32)}
+        return jnp.zeros(p.shape, jnp.float32)
+
+    return {
+        "mu": jax.tree.map(mu_of, params),
+        "nu": jax.tree.map(nu_of, params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def opt_state_dims(pdims, params_sds, factored: bool = False):
+    """Logical-dims tree matching init_opt_state's structure."""
+    def nu_dims(d, p):
+        if factored and len(p.shape) >= 2:
+            return {"row": tuple(d[:-1]),
+                    "col": tuple(d[:-2]) + (d[-1],)}
+        return d
+
+    flat_d, treedef = jax.tree_util.tree_flatten(
+        pdims, is_leaf=lambda x: isinstance(x, tuple) and all(
+            isinstance(s, (str, type(None))) for s in x))
+    flat_p = treedef.flatten_up_to(params_sds)
+    nu = treedef.unflatten([nu_dims(d, p)
+                            for d, p in zip(flat_d, flat_p)])
+    return {"mu": pdims, "nu": nu, "step": (None,)}
+
+
+def global_norm(tree):
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32)))
+              for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def clip_by_global_norm(tree, max_norm: float):
+    norm = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale).astype(
+        g.dtype), tree), norm
+
+
+def adamw_update(params, grads, state, cfg: OptConfig):
+    """One AdamW step. Decay is skipped for rank<=1 leaves (norms/biases).
+
+    With ``cfg.factored``, >=2D leaves keep Adafactor-style row/col
+    second-moment factors (v̂_ij = R_i C_j / mean(R)) and bf16 momentum.
+    """
+    step = state["step"] + 1
+    lr = schedule_lr(cfg, step)
+    b1, b2 = cfg.beta1, cfg.beta2
+    c1 = 1.0 - b1 ** step.astype(jnp.float32)
+    c2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, mu, nu):
+        g32 = g.astype(jnp.float32)
+        new_mu = (b1 * mu.astype(jnp.float32) + (1 - b1) * g32)
+        mhat = new_mu / c1
+        if isinstance(nu, dict):  # factored
+            g2 = jnp.square(g32) + 1e-30
+            row = b2 * nu["row"] + (1 - b2) * jnp.mean(g2, axis=-1)
+            col = b2 * nu["col"] + (1 - b2) * jnp.mean(g2, axis=-2)
+            vhat = (row[..., None] * col[..., None, :]
+                    / jnp.maximum(jnp.mean(row, axis=-1,
+                                           keepdims=True)[..., None],
+                                  1e-30)) / c2
+            new_nu = {"row": row, "col": col}
+        else:
+            new_nu = b2 * nu + (1 - b2) * jnp.square(g32)
+            vhat = new_nu / c2
+        delta = mhat / (jnp.sqrt(vhat) + cfg.eps)
+        if p.ndim > 1:
+            delta = delta + cfg.weight_decay * p.astype(jnp.float32)
+        return ((p.astype(jnp.float32) - lr * delta).astype(p.dtype),
+                new_mu.astype(mu.dtype), new_nu)
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_mu = treedef.flatten_up_to(state["mu"])
+    flat_nu = treedef.flatten_up_to(state["nu"])
+    out = [upd(p, g, m, n) for p, g, m, n in
+           zip(flat_p, flat_g, flat_mu, flat_nu)]
+    new_p = treedef.unflatten([o[0] for o in out])
+    new_mu = treedef.unflatten([o[1] for o in out])
+    new_nu = treedef.unflatten([o[2] for o in out])
+    return new_p, {"mu": new_mu, "nu": new_nu, "step": step}

@@ -1,0 +1,83 @@
+"""Train-step construction: loss/grad, clipping, AdamW, grad accumulation.
+
+``make_train_step`` returns a pure ``(state, batch) -> (state, metrics)``
+suitable for ``jax.jit`` with explicit in/out shardings (see
+launch/train.py and launch/dryrun.py). Remat policy lives in the model
+(cfg.remat); microbatch gradient accumulation is a ``lax.scan`` over the
+leading batch split.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import loss_fn
+from .optimizer import (OptConfig, adamw_update, clip_by_global_norm,
+                        init_opt_state)
+
+__all__ = ["init_train_state", "make_train_step", "make_eval_step"]
+
+
+def init_train_state(params, factored: bool = False) -> Dict[str, Any]:
+    return {"params": params, "opt": init_opt_state(params, factored)}
+
+
+def make_train_step(cfg: ModelConfig, opt_cfg: OptConfig,
+                    grad_accum: int = 1):
+    """Build the pure train step (jit/lower performed by the caller)."""
+
+    def grads_of(params, batch):
+        (loss, metrics), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(params, cfg, batch)
+        return loss, metrics, grads
+
+    def step_fn(state, batch):
+        params = state["params"]
+        if grad_accum > 1:
+            def micro(carry, mb):
+                acc, loss_acc, aux_acc, tok_acc = carry
+                loss, m, g = grads_of(params, mb)
+                acc = jax.tree.map(lambda a, gg: a + gg.astype(a.dtype),
+                                   acc, g)
+                return (acc, loss_acc + m["loss"], aux_acc + m["aux_loss"],
+                        tok_acc + m["tokens"]), None
+
+            # Accumulate in the param dtype: bf16-param archs (jamba,
+            # dbrx) would otherwise pay a full f32 grad buffer — for
+            # jamba-398B that is 6.2 GB/device of the 16 GB budget
+            # (EXPERIMENTS.md §Perf H). f32 params keep f32 accumulation.
+            zero = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, p.dtype if p.ndim >= 2
+                                    else jnp.float32), params)
+            mbs = jax.tree.map(
+                lambda x: x.reshape((grad_accum, x.shape[0] // grad_accum)
+                                    + x.shape[1:]), batch)
+            (gsum, loss_sum, aux_sum, tokens), _ = jax.lax.scan(
+                micro, (zero, 0.0, jnp.float32(0.0), jnp.float32(0.0)), mbs)
+            grads = jax.tree.map(lambda g: g / grad_accum, gsum)
+            loss = loss_sum / grad_accum
+            metrics = {"loss": loss, "aux_loss": aux_sum / grad_accum,
+                       "tokens": tokens}
+        else:
+            loss, metrics, grads = grads_of(params, batch)
+
+        grads, gnorm = clip_by_global_norm(grads, opt_cfg.clip_norm)
+        new_params, new_opt = adamw_update(params, grads, state["opt"],
+                                           opt_cfg)
+        metrics = dict(metrics)
+        metrics["grad_norm"] = gnorm
+        metrics["loss"] = loss
+        return {"params": new_params, "opt": new_opt}, metrics
+
+    return step_fn
+
+
+def make_eval_step(cfg: ModelConfig):
+    def eval_step(params, batch):
+        loss, metrics = loss_fn(params, cfg, batch)
+        return metrics
+    return eval_step

@@ -1,0 +1,14 @@
+"""Shared fixtures. NOTE: no XLA_FLAGS here — unit tests see 1 device;
+distributed behaviour is tested via subprocesses (test_distributed.py)."""
+
+import numpy as np
+import pytest
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)
+
+
+def pytest_configure(config):
+    config.addinivalue_line("markers", "slow: long-running test")

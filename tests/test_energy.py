@@ -1,0 +1,47 @@
+"""Calibrated dMAC energy model: reproduces Table 3 savings at the
+calibration point; sane sensitivity to overflow/skip rates."""
+
+import pytest
+
+from repro.core import energy
+
+
+def test_fp8_savings_at_calibration_point():
+    m = energy.FP8_MODEL
+    n = 1_000_000
+    s = m.savings(n_narrow=n, n_flushes=int(0.02 * n))
+    # paper: 33.6% w/o skipping
+    assert s == pytest.approx(0.336, abs=0.02)
+
+
+def test_int8_savings_at_calibration_point():
+    m = energy.INT8_MODEL
+    n = 1_000_000
+    s = m.savings(n_narrow=n, n_flushes=int(0.02 * n))
+    assert s == pytest.approx(0.154, abs=0.02)
+
+
+def test_skipping_helps():
+    m = energy.FP8_MODEL
+    n = 1_000_000
+    skip = int(0.04 * n)  # paper §5.3: ~3.9% of product pairs underflow
+    e_no = m.dmac_energy(n - skip, int(0.02 * n), skip, skipping=False)
+    e_yes = m.dmac_energy(n - skip, int(0.02 * n), skip, skipping=True)
+    assert e_yes < e_no
+
+
+def test_savings_degrade_with_overflow_rate():
+    m = energy.FP8_MODEL
+    n = 1_000_000
+    s = [m.savings(n, int(r * n)) for r in (0.0, 0.05, 0.2, 0.5)]
+    assert all(a > b for a, b in zip(s, s[1:]))
+
+
+def test_dmac_never_worse_than_conventional_at_zero_overflow():
+    for m in (energy.FP8_MODEL, energy.INT8_MODEL):
+        assert m.savings(10**6, 0) > 0.0
+
+
+def test_paper_tables_present():
+    assert "FP8 dMAC (w/ skipping)" in energy.PAPER_TABLE3
+    assert energy.PAPER_TABLE2["FP8 MAC"] == (457, 335)

@@ -1,0 +1,96 @@
+"""FP8 codec tests: cross-checked against ml_dtypes bit-for-bit."""
+
+import jax.numpy as jnp
+import ml_dtypes
+import numpy as np
+import pytest
+
+from repro.core import formats
+
+
+def test_e4m3_constants():
+    f = formats.E4M3
+    assert f.bias == 7
+    assert f.n_bins == 16
+    assert f.max_finite == 448.0
+    assert f.min_subnormal == 2.0 ** -9
+
+
+def test_e5m2_constants():
+    f = formats.E5M2
+    assert f.bias == 15
+    assert f.n_bins == 32
+    assert f.max_finite == 57344.0
+    assert f.min_subnormal == 2.0 ** -16
+
+
+@pytest.mark.parametrize("scale", [0.01, 1.0, 100.0])
+def test_round_matches_ml_dtypes(rng, scale):
+    x = (rng.normal(0, scale, 5000)).astype(np.float32)
+    ours = np.asarray(formats.round_to_format(x, formats.E4M3))
+    ref = x.astype(ml_dtypes.float8_e4m3fn).astype(np.float32)
+    np.testing.assert_array_equal(ours, ref)
+
+
+def test_round_e5m2_matches_ml_dtypes(rng):
+    x = (rng.normal(0, 10, 5000)).astype(np.float32)
+    ours = np.asarray(formats.round_to_format(x, formats.E5M2))
+    ref = x.astype(ml_dtypes.float8_e5m2).astype(np.float32)
+    # e5m2 overflow: ml_dtypes goes to inf, we saturate — compare in-range
+    mask = np.abs(x) <= formats.E5M2.max_finite
+    np.testing.assert_array_equal(ours[mask], ref[mask])
+
+
+def test_saturation_and_zero():
+    f = formats.E4M3
+    out = np.asarray(formats.round_to_format(
+        np.array([1e9, -1e9, 449.0, 0.0, -0.0], np.float32), f))
+    np.testing.assert_array_equal(np.abs(out[:3]), [448.0, 448.0, 448.0])
+    assert out[3] == 0.0 and out[4] == 0.0
+
+
+def test_subnormal_rounding():
+    f = formats.E4M3
+    # below half the smallest subnormal -> 0; above -> smallest subnormal
+    tiny = 2.0 ** -9
+    x = np.array([tiny * 0.49, tiny * 0.51, tiny, tiny * 1.5], np.float32)
+    out = np.asarray(formats.round_to_format(x, f))
+    np.testing.assert_allclose(out, [0.0, tiny, tiny, 2 * tiny])
+
+
+def test_decompose_recompose_all_values():
+    f = formats.E4M3
+    pos = formats.representable_values(f)
+    vals = np.concatenate([-pos[::-1], pos]).astype(np.float32)
+    sm, e = formats.decompose(vals, f)
+    rec = np.asarray(formats.recompose(sm, e, f))
+    np.testing.assert_array_equal(rec, vals)
+    assert int(jnp.max(jnp.abs(sm))) <= f.max_abs_sm
+    assert int(jnp.max(e)) < f.n_bins
+
+
+def test_encode_decode_bits_roundtrip():
+    f = formats.E4M3
+    pos = formats.representable_values(f)
+    vals = np.concatenate([-pos[::-1], pos]).astype(np.float32)
+    code = formats.encode_bits(vals, f)
+    assert code.dtype == jnp.uint8
+    dec = np.asarray(formats.decode_bits(code, f))
+    np.testing.assert_array_equal(dec, vals)
+
+
+def test_representable_count():
+    # E4M3: 126 positive normals + 7 subnormals + zero = 134 non-negative
+    vals = formats.representable_values(formats.E4M3)
+    assert len(vals) == 127  # unique magnitudes incl 0
+    assert vals[0] == 0.0
+    assert vals[-1] == 448.0
+
+
+def test_bf16_input_roundtrip():
+    x = jnp.asarray([0.3, -2.7, 100.0], jnp.bfloat16)
+    out = formats.round_to_format(x, formats.E4M3)
+    assert out.dtype == jnp.bfloat16
+    ref = formats.round_to_format(x.astype(jnp.float32), formats.E4M3)
+    np.testing.assert_array_equal(np.asarray(out, np.float32),
+                                  np.asarray(ref))

@@ -1,0 +1,72 @@
+"""Trip-count-corrected HLO analyzer vs known-FLOPs programs."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.launch.hlo_cost import analyze_hlo
+
+
+def _cost(fn, *sds):
+    return analyze_hlo(jax.jit(fn).lower(*sds).compile().as_text())
+
+
+def test_plain_matmul():
+    f = lambda a, b: a @ b
+    hc = _cost(f, jax.ShapeDtypeStruct((64, 128), jnp.float32),
+               jax.ShapeDtypeStruct((128, 32), jnp.float32))
+    assert hc.flops == 2 * 64 * 128 * 32
+
+
+def test_scan_multiplies_body():
+    def f(x, ws):
+        def body(c, w):
+            return jnp.tanh(c @ w), None
+        y, _ = jax.lax.scan(body, x, ws)
+        return y
+    hc = _cost(f, jax.ShapeDtypeStruct((32, 64), jnp.float32),
+               jax.ShapeDtypeStruct((9, 64, 64), jnp.float32))
+    assert hc.flops == 9 * 2 * 32 * 64 * 64
+    assert hc.max_trip == 9
+    assert hc.n_while_loops >= 1
+
+
+def test_nested_scan():
+    def f(x, ws):
+        def outer(c, w):
+            def inner(ci, _):
+                return jnp.tanh(ci @ w), None
+            c2, _ = jax.lax.scan(inner, c, None, length=5)
+            return c2, None
+        y, _ = jax.lax.scan(outer, x, ws)
+        return y
+    hc = _cost(f, jax.ShapeDtypeStruct((16, 32), jnp.float32),
+               jax.ShapeDtypeStruct((3, 32, 32), jnp.float32))
+    assert hc.flops == 3 * 5 * 2 * 16 * 32 * 32
+
+
+def test_batched_dot_flops():
+    f = lambda a, b: jnp.einsum("bij,bjk->bik", a, b)
+    hc = _cost(f, jax.ShapeDtypeStruct((4, 8, 16), jnp.float32),
+               jax.ShapeDtypeStruct((4, 16, 8), jnp.float32))
+    assert hc.flops == 4 * 2 * 8 * 16 * 8
+
+
+def test_grad_counts_both_passes():
+    def loss(w, x):
+        return jnp.sum((x @ w) ** 2)
+    f = jax.grad(loss)
+    hc = _cost(f, jax.ShapeDtypeStruct((64, 64), jnp.float32),
+               jax.ShapeDtypeStruct((32, 64), jnp.float32))
+    # fwd dot + two bwd dots (dx unused -> at least 2 total)
+    assert hc.flops >= 2 * (2 * 32 * 64 * 64)
+
+
+def test_dot_bytes_positive():
+    f = lambda a, b: a @ b
+    hc = _cost(f, jax.ShapeDtypeStruct((64, 128), jnp.bfloat16),
+               jax.ShapeDtypeStruct((128, 32), jnp.bfloat16))
+    want_bf16 = 2 * (64 * 128 + 128 * 32 + 64 * 32)
+    # the CPU backend may upcast bf16 dots to f32 (2x the bytes)
+    assert want_bf16 <= hc.dot_bytes <= 2 * want_bf16

@@ -1,0 +1,60 @@
+"""Integer dMAC: exactness, clip/wrap baselines, bitwidth accounting."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import int_dmac
+
+
+@pytest.mark.parametrize("bits,narrow", [(4, 8), (5, 10), (8, 16)])
+def test_dmac_exact(rng, bits, narrow):
+    hi = 2 ** (bits - 1) - 1
+    x = rng.integers(-hi, hi + 1, 512)
+    w = rng.integers(-hi, hi + 1, 512)
+    v, stats = int_dmac.int_dot_dmac(jnp.asarray(x), jnp.asarray(w), narrow)
+    assert int(v) == int(np.dot(x, w))
+    assert int(stats.narrow_adds) == 512
+
+
+def test_clip_loses_wrap_differs(rng):
+    x = rng.integers(-15, 16, 1024)
+    w = rng.integers(-63, 64, 1024)
+    exact = int(np.dot(x, w))
+    clipped, n_clips = int_dmac.int_dot_clip(jnp.asarray(x), jnp.asarray(w),
+                                             narrow_bits=12)
+    wrapped = int_dmac.int_dot_wrap(jnp.asarray(x), jnp.asarray(w),
+                                    narrow_bits=12)
+    assert int(n_clips) > 0
+    assert int(clipped) != exact  # saturation bias on long dots
+    lo, hi = -(1 << 11), (1 << 11) - 1
+    assert lo <= int(wrapped) <= hi
+
+
+def test_clip_exact_when_no_overflow(rng):
+    x = rng.integers(-3, 4, 64)
+    w = rng.integers(-3, 4, 64)
+    clipped, n_clips = int_dmac.int_dot_clip(jnp.asarray(x), jnp.asarray(w),
+                                             narrow_bits=20)
+    assert int(n_clips) == 0
+    assert int(clipped) == int(np.dot(x, w))
+
+
+def test_average_bits():
+    # 1000 narrow adds at 8 bits, 10 wide events at 32
+    avg = float(int_dmac.average_accumulator_bits(1000, 10, 8, 32))
+    assert 8.0 < avg < 9.0
+    # all-wide degenerate
+    assert float(int_dmac.average_accumulator_bits(0, 10, 8, 32)) == 32.0
+
+
+def test_overflow_rate_monotone_in_width(rng):
+    x = rng.integers(-15, 16, 2048)
+    w = rng.integers(-63, 64, 2048)
+    prev = None
+    for nb in (11, 12, 14, 16, 20):
+        _, stats = int_dmac.int_dot_dmac(jnp.asarray(x), jnp.asarray(w), nb)
+        r = float(stats.overflow_rate)
+        if prev is not None:
+            assert r <= prev + 1e-9
+        prev = r

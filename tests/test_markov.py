@@ -1,0 +1,77 @@
+"""Markov overflow model (§4): CLT bound, chain expectations vs
+Monte-Carlo, paper-quoted anchor values, planners."""
+
+import numpy as np
+import pytest
+
+from repro.core import markov
+
+
+def test_clt_matches_paper_anchor():
+    # Paper Fig. 4a setup: 5-bit weights sigma=5, 7-bit acts sigma=21:
+    # "~12% chance of overflow when summing 10 elements in a 10-bit acc".
+    p = markov.clt_overflow_prob(10, 10, 5 * 21)
+    assert 0.10 < float(p) < 0.15
+
+
+def test_clt_monotonicity():
+    p_k = markov.clt_overflow_prob(np.array([1, 10, 100, 1000]), 10, 105.0)
+    assert np.all(np.diff(p_k) > 0)  # longer dots overflow more
+    p_a = [float(markov.clt_overflow_prob(10, a, 105.0))
+           for a in (8, 10, 12, 14)]
+    assert all(x > y for x, y in zip(p_a, p_a[1:]))  # wider acc safer
+
+
+def test_expected_steps_matches_simulation():
+    pw = markov.gaussian_quantized_pmf(5)
+    px = markov.gaussian_quantized_pmf(7, half=True)
+    pp = markov.product_pmf(pw, px)
+    exp = markov.expected_sums_before_overflow(pp, 10)
+    sim = markov.simulate_walk(pp, 10, n_trials=2000, seed=3)
+    # standard-error tolerance
+    assert exp == pytest.approx(sim.mean(), rel=0.15)
+
+
+def test_paper_fig5_anchor():
+    # Fig. 5: "with accumulation bitwidth 10 we do not expect overflow at
+    # a summation length of about 32" (5-bit normal w, 7-bit half-normal x)
+    pw = markov.gaussian_quantized_pmf(5)
+    px = markov.gaussian_quantized_pmf(7, half=True)
+    pp = markov.product_pmf(pw, px)
+    exp = markov.expected_sums_before_overflow(pp, 10)
+    assert 20 < exp < 50
+
+
+def test_absorption_prob_consistency():
+    pw = markov.gaussian_quantized_pmf(4)
+    px = markov.gaussian_quantized_pmf(4)
+    pp = markov.product_pmf(pw, px)
+    p5 = markov.absorption_prob_after_k(pp, 8, 5)
+    p50 = markov.absorption_prob_after_k(pp, 8, 50)
+    assert 0.0 <= p5 < p50 <= 1.0
+
+
+def test_transition_matrix_stochastic():
+    pmf = markov.gaussian_quantized_pmf(4)
+    Q, r = markov.transition_matrix(pmf, 6)
+    rows = Q.sum(axis=1) + r
+    np.testing.assert_allclose(rows, 1.0, atol=1e-12)
+    assert np.all(Q >= 0) and np.all(r >= -1e-15)
+
+
+def test_planners():
+    k = markov.plan_chunk_length_clt(10, sigma_p=30.0,
+                                     target_overflow=1e-4)
+    assert k >= 1
+    # planned chunk indeed has low CLT overflow prob
+    assert markov.clt_overflow_prob(k, 10, 30.0) <= 1.2e-4
+    wc = markov.plan_chunk_length_worst_case(64 * 64, 32)
+    assert wc == (2**31 - 1) // 4096
+
+
+def test_empirical_pmf_roundtrip(rng):
+    vals = rng.integers(-5, 6, 10000)
+    pmf = markov.empirical_pmf(vals)
+    assert pmf.lo == vals.min()
+    assert pmf.probs.sum() == pytest.approx(1.0)
+    assert abs(pmf.mean - vals.mean()) < 1e-9

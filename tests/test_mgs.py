@@ -1,0 +1,125 @@
+"""MGS accumulation: exactness, equivalence of all three implementations,
+overflow statistics, and the Fig. 3 error ordering."""
+
+import jax.numpy as jnp
+import ml_dtypes
+import numpy as np
+import pytest
+
+from repro.core import formats, mgs, summation
+
+
+def _fp8(rng, n, scale=1.0):
+    x = rng.normal(0, scale, n).astype(np.float32)
+    return np.asarray(formats.round_to_format(x, formats.E4M3))
+
+
+def _oracle_dmac(x, w, gate=True):
+    """float64 oracle: exact sum of E4M3-rounded (gated) products."""
+    p = x.astype(np.float64) * w.astype(np.float64)
+    pr = p.astype(np.float32).astype(ml_dtypes.float8_e4m3fn).astype(
+        np.float64)
+    if gate:
+        pr = np.where(np.abs(p) < 2.0 ** -9, 0.0, pr)
+    return pr.sum()
+
+
+@pytest.mark.parametrize("k", [1, 7, 64, 1000])
+def test_vectorized_matches_oracle(rng, k):
+    x, w = _fp8(rng, k), _fp8(rng, k)
+    got = float(mgs.mgs_dot_exact(jnp.asarray(x), jnp.asarray(w),
+                                  formats.E4M3, "dmac"))
+    want = _oracle_dmac(x, w)
+    assert abs(got - want) <= 1e-3 * max(1.0, abs(want))
+
+
+@pytest.mark.parametrize("narrow_bits", [4, 5, 8])
+def test_dmac_scan_equals_vectorized(rng, narrow_bits):
+    """The sequential Fig.-8 emulator and the exponent-binned dataflow form
+    must agree exactly: the wide fallback loses no bits."""
+    x, w = _fp8(rng, 300), _fp8(rng, 300)
+    v_vec = float(mgs.mgs_dot_exact(jnp.asarray(x), jnp.asarray(w)))
+    v_seq, stats = mgs.mgs_dot_dmac(jnp.asarray(x), jnp.asarray(w),
+                                    formats.E4M3, narrow_bits)
+    assert float(v_seq) == pytest.approx(v_vec, abs=1e-4)
+    assert int(stats.narrow_adds) + int(stats.skipped) == 300
+    assert int(stats.bin_hits.sum()) == int(stats.narrow_adds)
+
+
+def test_exact_mode_matches_float64(rng):
+    x, w = _fp8(rng, 500), _fp8(rng, 500)
+    got = float(mgs.mgs_dot_exact(jnp.asarray(x), jnp.asarray(w),
+                                  formats.E4M3, "exact"))
+    want = float(np.sum(x.astype(np.float64) * w.astype(np.float64)))
+    assert got == pytest.approx(want, rel=1e-6)
+
+
+def test_exact_mode_more_accurate_than_dmac(rng):
+    """Beyond-paper claim: skipping the per-product re-rounding strictly
+    reduces error vs the true (unquantized-product) dot."""
+    errs_exact, errs_dmac = [], []
+    for i in range(20):
+        r = np.random.default_rng(i)
+        x, w = _fp8(r, 256), _fp8(r, 256)
+        true = float(np.sum(x.astype(np.float64) * w.astype(np.float64)))
+        ex = float(mgs.mgs_dot_exact(jnp.asarray(x), jnp.asarray(w),
+                                     formats.E4M3, "exact"))
+        dm = float(mgs.mgs_dot_exact(jnp.asarray(x), jnp.asarray(w),
+                                     formats.E4M3, "dmac"))
+        errs_exact.append(abs(ex - true))
+        errs_dmac.append(abs(dm - true))
+    assert np.mean(errs_exact) < np.mean(errs_dmac)
+
+
+def test_narrow_clipped_degrades(rng):
+    """Fig. 3: MGS restricted to narrow accumulators (no wide fallback)
+    clips and loses accuracy on long dots."""
+    x, w = _fp8(rng, 2000, 2.0), _fp8(rng, 2000, 2.0)
+    full = float(mgs.mgs_dot_exact(jnp.asarray(x), jnp.asarray(w)))
+    clipped, n_clips = mgs.mgs_dot_narrow_clipped(
+        jnp.asarray(x), jnp.asarray(w), formats.E4M3, 5)
+    assert int(n_clips) > 0
+    assert abs(float(clipped) - full) > 0
+
+
+def test_overflow_rate_decreases_with_width(rng):
+    x, w = _fp8(rng, 1000), _fp8(rng, 1000)
+    rates = []
+    for nb in (4, 6, 8, 12):
+        _, stats = mgs.mgs_dot_dmac(jnp.asarray(x), jnp.asarray(w),
+                                    formats.E4M3, nb)
+        rates.append(float(stats.overflow_rate))
+    assert all(a >= b for a, b in zip(rates, rates[1:]))
+
+
+def test_subnormal_gating_counts(rng):
+    # products of tiny values are gated (§5.3) and counted as skipped
+    x = np.full(100, 2.0 ** -5, np.float32)
+    w = np.full(100, 2.0 ** -5, np.float32)  # product 2^-10 < 2^-9
+    _, stats = mgs.mgs_dot_dmac(jnp.asarray(x), jnp.asarray(w))
+    assert int(stats.skipped) == 100
+    assert int(stats.narrow_adds) == 0
+
+
+def test_fig3_error_ordering(rng):
+    """sequential >> pairwise ~ kahan > MGS(exact) on long FP8 dots."""
+    k = 2048
+    x, w = _fp8(rng, k), _fp8(rng, k)
+    p = np.asarray(mgs.round_product(
+        jnp.asarray(x) * jnp.asarray(w), formats.E4M3, True)[0])
+    exact = p.astype(np.float64).sum()
+    acc = summation.acc_format(4)
+    e_seq = abs(float(summation.sequential_sum(jnp.asarray(p), acc)) - exact)
+    e_pw = abs(float(summation.pairwise_sum(jnp.asarray(p), acc)) - exact)
+    e_mgs = abs(float(mgs.mgs_dot_exact(jnp.asarray(x), jnp.asarray(w),
+                                        formats.E4M3, "dmac")) - exact)
+    assert e_seq > e_pw
+    assert e_mgs <= e_pw
+    assert e_mgs < 1e-3
+
+
+def test_batched_shapes(rng):
+    x = jnp.asarray(_fp8(rng, 4 * 3 * 32).reshape(4, 3, 32))
+    w = jnp.asarray(_fp8(rng, 4 * 3 * 32).reshape(4, 3, 32))
+    out = mgs.mgs_dot_exact(x, w)
+    assert out.shape == (4, 3)

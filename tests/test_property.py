@@ -1,0 +1,111 @@
+"""Hypothesis property tests on the system's numerical invariants."""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import formats, int_dmac, mgs
+from repro.quant import QuantConfig, quantize_fp8, quantize_int
+
+_fmt = formats.E4M3
+_REPR = np.concatenate([
+    -formats.representable_values(_fmt)[::-1],
+    formats.representable_values(_fmt)]).astype(np.float32)
+
+
+def fp8_arrays(min_size=1, max_size=200):
+    return st.lists(st.sampled_from(list(range(len(_REPR)))),
+                    min_size=min_size, max_size=max_size).map(
+        lambda idx: _REPR[np.asarray(idx, np.int64)])
+
+
+@settings(max_examples=40, deadline=None)
+@given(fp8_arrays(), st.integers(4, 10))
+def test_dmac_equals_vectorized_always(x, narrow_bits):
+    """Greedy narrow/wide emulator == exponent-binned exact form, for any
+    FP8 inputs and any narrow accumulator width (the central invariant:
+    the wide fallback never loses bits)."""
+    rng = np.random.default_rng(len(x))
+    w = _REPR[rng.integers(0, len(_REPR), len(x))]
+    v_vec = float(mgs.mgs_dot_exact(jnp.asarray(x), jnp.asarray(w)))
+    v_seq, _ = mgs.mgs_dot_dmac(jnp.asarray(x), jnp.asarray(w), _fmt,
+                                narrow_bits)
+    assert abs(float(v_seq) - v_vec) <= 1e-4 * max(1.0, abs(v_vec))
+
+
+@settings(max_examples=40, deadline=None)
+@given(fp8_arrays())
+def test_round_is_idempotent(x):
+    once = np.asarray(formats.round_to_format(x, _fmt))
+    twice = np.asarray(formats.round_to_format(once, _fmt))
+    np.testing.assert_array_equal(once, twice)
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.lists(st.floats(-1e4, 1e4, allow_nan=False, width=32),
+                min_size=1, max_size=100))
+def test_round_error_bounded(vals):
+    """RNE to E4M3: |x - round(x)| <= max(ulp(x)/2, subnormal quantum/2)
+    for in-range x; saturation for out-of-range."""
+    x = np.asarray(vals, np.float32)
+    r = np.asarray(formats.round_to_format(x, _fmt))
+    in_range = np.abs(x) <= _fmt.max_finite
+    ax = np.maximum(np.abs(x), 1e-30)
+    ulp = 2.0 ** (np.clip(np.floor(np.log2(ax)), -6, 8) - _fmt.mbits)
+    assert np.all(np.abs(x - r)[in_range] <= (ulp / 2 + 1e-12)[in_range])
+    assert np.all(np.abs(r[~in_range]) == _fmt.max_finite)
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.lists(st.integers(-127, 127), min_size=1, max_size=300),
+       st.integers(9, 16))
+def test_int_dmac_always_exact(xs, narrow_bits):
+    x = np.asarray(xs, np.int32)
+    rng = np.random.default_rng(len(x))
+    w = rng.integers(-127, 128, len(x)).astype(np.int32)
+    v, _ = int_dmac.int_dot_dmac(jnp.asarray(x), jnp.asarray(w),
+                                 narrow_bits=max(narrow_bits, 15))
+    assert int(v) == int(np.dot(x, w))
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.lists(st.floats(-100, 100, allow_nan=False, width=32),
+                min_size=2, max_size=64))
+def test_quantize_fp8_roundtrip_error(vals):
+    x = np.asarray(vals, np.float32)
+    if np.all(x == 0):
+        return
+    t = quantize_fp8(jnp.asarray(x), _fmt)
+    back = np.asarray(t.q * t.scale)
+    # absmax scaling: relative error bounded by half-ulp of 4-bit mantissa
+    tol = np.max(np.abs(x)) * 2.0 ** -4
+    assert np.all(np.abs(back - x) <= tol + 1e-7)
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.lists(st.floats(-50, 50, allow_nan=False, width=32),
+                min_size=2, max_size=64),
+       st.integers(4, 8), st.booleans())
+def test_quantize_int_roundtrip_error(vals, bits, symmetric):
+    x = np.asarray(vals, np.float32)
+    if np.ptp(x) == 0:
+        return
+    t = quantize_int(jnp.asarray(x), bits, symmetric=symmetric)
+    q = np.asarray(t.q, np.float32)
+    if t.offset is not None:
+        q = q - np.asarray(t.offset, np.float32)
+    back = q * np.asarray(t.scale)
+    span = np.max(np.abs(x)) if symmetric else np.ptp(x)
+    assert np.all(np.abs(back - x) <= span / (2 ** bits - 2) + 1e-6)
+
+
+@settings(max_examples=25, deadline=None)
+@given(fp8_arrays(min_size=4, max_size=128))
+def test_mgs_permutation_invariant(x):
+    """Exact accumulation is order-independent — unlike swamping sums."""
+    rng = np.random.default_rng(42)
+    w = _REPR[rng.integers(0, len(_REPR), len(x))]
+    perm = rng.permutation(len(x))
+    a = float(mgs.mgs_dot_exact(jnp.asarray(x), jnp.asarray(w)))
+    b = float(mgs.mgs_dot_exact(jnp.asarray(x[perm]), jnp.asarray(w[perm])))
+    assert a == b

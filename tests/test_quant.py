@@ -1,0 +1,104 @@
+"""Quantization substrate: scales, offsets, qmatmul dispatch numerics."""
+
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import formats
+from repro.quant import (QuantConfig, dequantize_int, qmatmul, quantize_fp8,
+                         quantize_int)
+
+
+def test_fp8_quantize_range(rng):
+    x = rng.normal(0, 7, (64, 32)).astype(np.float32)
+    t = quantize_fp8(jnp.asarray(x), formats.E4M3)
+    q = np.asarray(t.q)
+    assert np.abs(q).max() <= formats.E4M3.max_finite
+    # q values are format-exact
+    np.testing.assert_array_equal(
+        q, np.asarray(formats.round_to_format(jnp.asarray(q), formats.E4M3)))
+
+
+def test_fp8_per_channel_scales(rng):
+    x = rng.normal(0, 1, (32, 8)).astype(np.float32)
+    x[:, 3] *= 100  # one hot channel
+    t = quantize_fp8(jnp.asarray(x), formats.E4M3, axis=0)
+    assert t.scale.shape == (1, 8)
+    back = np.asarray(t.q * t.scale)
+    # per-channel scaling keeps the small channels accurate
+    rel = np.abs(back - x).max(axis=0) / (np.abs(x).max(axis=0) + 1e-9)
+    assert rel.max() < 0.07
+
+
+def test_int_asymmetric_zero_maps_to_integer(rng):
+    x = np.abs(rng.normal(0, 5, 256)).astype(np.float32)  # skewed range
+    t = quantize_int(jnp.asarray(x), bits=8, symmetric=False)
+    assert t.offset is not None
+    back = np.asarray(dequantize_int(t))
+    assert np.abs(back - x).max() <= float(t.scale) * 0.51 + 1e-6
+
+
+def test_int_paper_offset_formula(rng):
+    # o = -2^{b-1} - round(min/s) — real zero maps exactly to an integer
+    x = rng.normal(3.0, 1.0, 512).astype(np.float32)
+    x[0] = 0.0
+    t = quantize_int(jnp.asarray(x), bits=8, symmetric=False)
+    zero_q = np.asarray(jnp.rint(0.0 / t.scale) + t.offset)
+    assert zero_q == np.rint(zero_q)
+
+
+@pytest.mark.parametrize("accum", ["wide", "mgs_exact", "mgs_dmac"])
+def test_qmatmul_fp8_accuracy(rng, accum):
+    x = rng.normal(0, 1, (16, 128)).astype(np.float32)
+    w = rng.normal(0, 0.1, (128, 24)).astype(np.float32)
+    ref = x @ w
+    out = np.asarray(qmatmul(jnp.asarray(x), jnp.asarray(w),
+                             QuantConfig(dtype="fp8_e4m3", accum=accum)))
+    rel = np.abs(out - ref).max() / np.abs(ref).max()
+    assert rel < 0.08, (accum, rel)
+
+
+def test_qmatmul_swamp_much_worse(rng):
+    x = rng.normal(0, 1, (4, 2048)).astype(np.float32)
+    w = rng.normal(0, 0.1, (2048, 8)).astype(np.float32)
+    ref = x @ w
+    good = np.asarray(qmatmul(jnp.asarray(x), jnp.asarray(w),
+                              QuantConfig(dtype="fp8_e4m3",
+                                          accum="mgs_dmac")))
+    bad = np.asarray(qmatmul(jnp.asarray(x), jnp.asarray(w),
+                             QuantConfig(dtype="fp8_e4m3", accum="swamp",
+                                         narrow_bits=5)))
+    e_good = np.abs(good - ref).max() / np.abs(ref).max()
+    e_bad = np.abs(bad - ref).max() / np.abs(ref).max()
+    assert e_bad > 3 * e_good
+
+
+def test_qmatmul_int8(rng):
+    x = rng.normal(0, 1, (8, 64)).astype(np.float32)
+    w = rng.normal(0, 0.1, (64, 16)).astype(np.float32)
+    ref = x @ w
+    out = np.asarray(qmatmul(jnp.asarray(x), jnp.asarray(w),
+                             QuantConfig(dtype="int8", accum="wide")))
+    assert np.abs(out - ref).max() / np.abs(ref).max() < 0.05
+
+
+def test_qmatmul_kernel_path_matches_emulation(rng):
+    x = rng.normal(0, 1, (8, 96)).astype(np.float32)
+    w = rng.normal(0, 0.1, (96, 16)).astype(np.float32)
+    base = QuantConfig(dtype="fp8_e4m3", accum="mgs_exact",
+                       block_m=32, block_n=32, block_k=32)
+    out_ref = np.asarray(qmatmul(jnp.asarray(x), jnp.asarray(w),
+                                 dataclasses.replace(base,
+                                                     use_kernel=False)))
+    out_k = np.asarray(qmatmul(jnp.asarray(x), jnp.asarray(w),
+                               dataclasses.replace(base, use_kernel=True)))
+    np.testing.assert_allclose(out_k, out_ref, rtol=1e-6)
+
+
+def test_invalid_config_rejected():
+    with pytest.raises(ValueError):
+        QuantConfig(dtype="fp4")
+    with pytest.raises(ValueError):
+        QuantConfig(accum="magic")

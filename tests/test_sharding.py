@@ -1,0 +1,96 @@
+"""Logical-axis sharding rules: resolution, divisibility fallback,
+priorities, spec trees. (Pure logic — multi-device behaviour is covered
+by test_distributed.py subprocesses.)"""
+
+import jax
+import numpy as np
+import pytest
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.parallel.sharding import Rules, make_rules, resolve_spec
+
+
+def _mesh(shape=(4, 2), axes=("data", "model")):
+    devs = np.array([jax.devices()[0]] * int(np.prod(shape))).reshape(shape)
+    return Mesh(devs, axes)
+
+
+def test_basic_resolution():
+    mesh = _mesh()
+    rules = make_rules(mesh, "train")
+    spec = rules.resolve(("embed", "heads", "head_dim"), (64, 8, 16))
+    assert spec == P("data", "model")
+
+
+def test_divisibility_fallback():
+    mesh = _mesh()
+    rules = make_rules(mesh, "serve")
+    # kv_heads=3 does not divide model=2 -> replicated
+    spec = rules.resolve(("layers", "batch", "kv_seq", "kv_heads",
+                          "head_dim"), (4, 8, 128, 3, 16))
+    assert spec == P(None, "data", "model")  # kv_seq picks up model
+
+
+def test_priority_kv_heads_over_kv_seq():
+    mesh = _mesh()
+    rules = make_rules(mesh, "serve")
+    spec = rules.resolve(("layers", "batch", "kv_seq", "kv_heads",
+                          "head_dim"), (4, 8, 128, 4, 16))
+    # kv_heads divisible -> it wins the model axis; kv_seq left with none
+    assert spec == P(None, "data", None, "model")
+
+
+def test_batch_tuple_on_multipod():
+    mesh = _mesh((2, 2, 2), ("pod", "data", "model"))
+    rules = make_rules(mesh, "train")
+    # batch divisible by pod*data*model -> pure ZeRO-3 layout (§Perf E)
+    spec = rules.resolve(("batch", "seq"), (8, 64))
+    assert spec == P(("pod", "data", "model"))
+    # batch too small for all axes -> (pod, data) + SP over model
+    spec = rules.resolve(("batch", "seq"), (4, 64))
+    assert spec == P(("pod", "data"), "model")
+
+
+def test_missing_axis_skipped_on_single_pod():
+    mesh = _mesh()
+    rules = make_rules(mesh, "train")
+    # single-pod: batch spreads over (data, model) when divisible
+    assert rules.resolve(("batch", "seq"), (8, 64)) == P(("data", "model"))
+    # batch can't fill data x model -> data only, seq takes model (SP)
+    assert rules.resolve(("batch", "seq"), (4, 64)) == P("data", "model")
+    # MoE layout keeps batch off the model axis entirely
+    sp = make_rules(mesh, "train", prefer_sp=True)
+    assert sp.resolve(("batch", "seq"), (8, 64)) == P("data", "model")
+
+
+def test_batch_one_replicates():
+    mesh = _mesh()
+    rules = make_rules(mesh, "serve")
+    spec = rules.resolve(("batch", "kv_seq"), (1, 1024))
+    assert spec == P(None, "data")
+
+
+def test_no_axis_used_twice():
+    mesh = _mesh((4, 4), ("data", "model"))
+    rules = make_rules(mesh, "train")
+    spec = rules.resolve(("experts", "embed", "ffn"), (16, 64, 128))
+    flat = [a for part in spec for a in
+            (part if isinstance(part, tuple) else (part,)) if a]
+    assert len(flat) == len(set(flat))
+
+
+def test_resolve_spec_tree():
+    mesh = _mesh()
+    rules = make_rules(mesh, "train")
+    dims = {"w": ("embed", "ffn"), "b": ("ffn",), "step": (None,)}
+    shapes = {"w": (64, 128), "b": (128,), "step": ()}
+    specs = resolve_spec(dims, shapes, rules)
+    assert specs["w"] == P("data", "model")
+    assert specs["b"] == P("model")
+    assert specs["step"] == P()
+
+
+def test_scalar_dims_none():
+    mesh = _mesh()
+    rules = make_rules(mesh, "train")
+    assert rules.resolve((None,), ()) == P()
