@@ -1,6 +1,11 @@
 """MGS matmul kernel micro-bench: interpret-mode wall time (CPU; the TPU
 figure of merit is the structural analysis in §Roofline) plus the
-analytic MXU-pass accounting of the limb kernel."""
+analytic MXU-pass and HBM-traffic accounting of the limb kernels.
+
+The fused-vs-unfused comparison tracks ISSUE-1's bandwidth claim: the
+fused kernel streams packed FP8 codes (1 byte/elem) and decodes in VMEM,
+so its operand HBM bytes are exactly 1/3 of the pre-decomposed kernel's
+three int8 limb planes."""
 
 from __future__ import annotations
 
@@ -10,7 +15,21 @@ import numpy as np
 from repro.core import formats
 from repro.kernels import ops, ref
 from repro.kernels.mgs_matmul import worst_case_flush_period
+from repro.core.markov import plan_flush_period
 from .common import Csv, timeit
+
+
+def hbm_bytes_exact(M: int, K: int, N: int, fused: bool) -> dict:
+    """Analytic HBM traffic of one exact-mode (M,K)@(K,N) matmul.
+
+    fused: packed FP8 codes, 1 B/elem per operand.
+    unfused: 3 int8 limb planes per operand, 3 B/elem.
+    Output is f32 either way.
+    """
+    per_elem = 1 if fused else 3
+    operand = per_elem * (M * K + K * N)
+    out = 4 * M * N
+    return {"operand": operand, "out": out, "total": operand + out}
 
 
 def run(csv: Csv):
@@ -21,17 +40,33 @@ def run(csv: Csv):
             rng.normal(0, 1, (M, K)).astype(np.float32), f)))
         w = jnp.asarray(np.asarray(formats.round_to_format(
             rng.normal(0, 1, (K, N)).astype(np.float32), f)))
-        us_k = timeit(lambda: ops.mgs_matmul(x, w, f, "exact",
-                                             block_m=64, block_n=64,
-                                             block_k=128), n=3)
+        # MXU-aligned 128 tiles: interpret mode then decodes each operand
+        # tile once, matching the kernel's real per-tile work.
+        us_u = timeit(lambda: ops.mgs_matmul(x, w, f, "exact",
+                                             block_m=128, block_n=128,
+                                             block_k=128), n=5)
+        us_f = timeit(lambda: ops.mgs_matmul(x, w, f, "exact", fused=True,
+                                             block_m=128, block_n=128,
+                                             block_k=128), n=5)
         us_r = timeit(lambda: ref.mgs_matmul_ref(x, w, f, "exact"), n=3)
         us_w = timeit(lambda: ref.wide_matmul_ref(x, w), n=3)
-        csv.add(f"kernel/exact_pallas_interp/{M}x{K}x{N}", us_k,
+        bf = hbm_bytes_exact(M, K, N, fused=True)
+        bu = hbm_bytes_exact(M, K, N, fused=False)
+        csv.add(f"kernel/exact_pallas_interp/{M}x{K}x{N}", us_u,
                 f"ref_us={us_r:.0f};f32_us={us_w:.0f}")
+        csv.add(
+            f"kernel/exact_fused_interp/{M}x{K}x{N}", us_f,
+            f"unfused_us={us_u:.0f};"
+            f"hbm_operand_bytes={bf['operand']};"
+            f"hbm_operand_bytes_unfused={bu['operand']};"
+            f"operand_ratio={bf['operand'] / bu['operand']:.3f};"
+            f"hbm_total_bytes={bf['total']};"
+            f"hbm_total_bytes_unfused={bu['total']}")
     # structural accounting: the limb kernel runs 9 int8 MXU passes per
     # bf16-equivalent matmul; v5e int8 throughput ~2x bf16 -> ~4.5x
     # bf16-matmul cost for *exact* FP8 accumulation (vs inexact fp32-acc).
     csv.add("kernel/exact_limb_mxu_passes", 0.0,
             "passes=9;int8_speedup=2.0;bf16_equiv_cost=4.5")
     csv.add("kernel/flush_period_bk128", 0.0,
-            f"worst_case={worst_case_flush_period(128)}")
+            f"worst_case={worst_case_flush_period(128)};"
+            f"markov_1e6={plan_flush_period(128, target_overflow=1e-6)}")

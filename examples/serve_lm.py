@@ -3,6 +3,23 @@ primary driver is serving): batched prefill+decode of an LM with MGS
 FP8 quantized matmuls, compared against the unquantized model.
 
     PYTHONPATH=src python examples/serve_lm.py
+
+Serving with prepared weights
+-----------------------------
+Static weights are quantized + limb-decomposed exactly once per process:
+``ServeEngine`` calls ``quant.prepare_params`` at construction, replacing
+every proj-consumed weight with a ``PreparedWeight`` holding
+
+* packed FP8 codes (uint8, 1 byte/elem) — streamed by the fused kernel,
+* int8 limb planes — the pre-decomposed A/B kernel's input,
+* the cached dequant scale and observed limb statistics (which feed the
+  Markov flush planner via ``QuantConfig.flush_target``).
+
+No request ever re-quantizes a parameter; ``quant.PREP_STATS`` proves it
+(printed below). On TPU the production config is
+``quant.config.FP8_MGS_SERVE`` (fused exact kernel + in-kernel epilogue);
+on CPU this example uses the jnp emulation path, which also consumes the
+prepared planes.
 """
 
 import dataclasses
@@ -12,7 +29,7 @@ import numpy as np
 from repro.configs import reduced_config
 from repro.launch.mesh import make_mesh
 from repro.launch.serve import Request, ServeEngine
-from repro.quant import QuantConfig
+from repro.quant import PREP_STATS, QuantConfig
 
 
 def main():
@@ -32,17 +49,23 @@ def main():
     stats = engine.run(make_requests())
     print(stats)
 
-    print("\n== FP8 MGS-exact serving (same weights) ==")
+    print("\n== FP8 MGS-exact serving (same weights, prepared once) ==")
     cfg_q = dataclasses.replace(
         cfg, quant=QuantConfig(dtype="fp8_e4m3", accum="mgs_exact"))
     engine_q = ServeEngine(cfg_q, mesh, batch=4, max_len=48,
                            params=engine.params)
+    print(f"prepared weights at engine init: {PREP_STATS}")
     rng = np.random.default_rng(0)
     reqs_q = make_requests()
     stats_q = engine_q.run(reqs_q)
     print(stats_q)
+    print(f"after serving {len(reqs_q)} requests:      {PREP_STATS} "
+          "(unchanged: no per-request re-quantization)")
     print("\nNote: wall-clock on CPU reflects the *emulation*; on TPU the "
-          "limb kernel runs 9 int8 MXU passes (see benchmarks/kernel).")
+          "fused limb kernel (quant.config.FP8_MGS_SERVE) streams packed "
+          "FP8 codes (1/3 the operand HBM bytes of pre-decomposed limbs, "
+          "see benchmarks/kernel_bench.py) and fuses the scale/activation "
+          "epilogue into the matmul.")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,6 @@
+#!/usr/bin/env bash
+# Tier-1 verification — the command the ROADMAP pins and CI runs.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+python -m pytest -x -q "$@"

@@ -45,6 +45,7 @@ __all__ = [
     "recompose",
     "encode_bits",
     "decode_bits",
+    "decode_sm_e",
     "quantum_exponent",
     "representable_values",
 ]
@@ -224,15 +225,26 @@ def encode_bits(v, fmt: FPFormat = E4M3):
     return code.astype(jnp.uint8)
 
 
-@partial(jax.jit, static_argnames=("fmt", "dtype"))
-def decode_bits(code, fmt: FPFormat = E4M3, dtype=jnp.float32):
-    """Unpack integer codes produced by :func:`encode_bits`."""
+def decode_sm_e(code, fmt: FPFormat = E4M3):
+    """Unpack integer codes to (signed mantissa, exponent bin).
+
+    Pure integer bit-twiddling (no float ops), so it lowers inside Pallas
+    kernel bodies — the single source of truth for the code layout, shared
+    by :func:`decode_bits` and the fused kernel's in-VMEM decode.
+    """
     code = code.astype(jnp.int32)
     frac = code & (fmt.mant_lead - 1)
     e = (code >> fmt.mbits) & (fmt.n_bins - 1)
     sign = (code >> (fmt.ebits + fmt.mbits)) & 1
     mag = jnp.where(e > 0, frac + fmt.mant_lead, frac)
     sm = jnp.where(sign == 1, -mag, mag)
+    return sm, e
+
+
+@partial(jax.jit, static_argnames=("fmt", "dtype"))
+def decode_bits(code, fmt: FPFormat = E4M3, dtype=jnp.float32):
+    """Unpack integer codes produced by :func:`encode_bits`."""
+    sm, e = decode_sm_e(code, fmt)
     return recompose(sm, e, fmt, dtype)
 
 

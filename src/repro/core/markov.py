@@ -32,6 +32,8 @@ __all__ = [
     "absorption_prob_after_k",
     "plan_chunk_length_clt",
     "plan_chunk_length_worst_case",
+    "plan_flush_period",
+    "limb_sigma_default",
     "simulate_walk",
 ]
 
@@ -255,6 +257,63 @@ def plan_chunk_length_worst_case(max_abs_term: int, acc_bits: int) -> int:
     (max|term| = 64·64 for balanced 7-bit limbs → k ≤ 2**19 − 1 per flush).
     """
     return max(1, ((1 << (acc_bits - 1)) - 1) // max(1, max_abs_term))
+
+
+def limb_sigma_default(limb_base: int = 7) -> float:
+    """Std of a balanced base-2**b limb under the uniform assumption.
+
+    Balanced limbs of absmax-scaled operands are close to uniform over
+    [-2**(b-1), 2**(b-1) - 1]; this is the planner's stand-in when no
+    observed statistics are available (σ = sqrt((4**b − 1) / 12) ≈ 36.9
+    for the 7-bit limbs of the exact kernel).
+    """
+    n = 1 << limb_base
+    return math.sqrt((n * n - 1) / 12.0)
+
+
+def plan_flush_period(block_k: int, *, target_overflow: float | None = None,
+                      sigma_limb_x: float | None = None,
+                      sigma_limb_w: float | None = None, acc_bits: int = 32,
+                      limb_base: int = 7, n_limbs: int = 3) -> int:
+    """Markov-informed flush period for the exact kernel's class accums.
+
+    One grid K-step adds ``block_k * n_limbs`` limb products into the
+    busiest weight-class int32 register. The worst-case (deterministic,
+    overflow-impossible) period divides the register range by the maximum
+    per-step magnitude; with observed limb statistics the per-step sum is
+    a random walk of std ``sqrt(n_limbs * block_k) * σ_x σ_w``, and the
+    CLT bound (§4.1) licenses a much longer period at a negligible
+    overflow probability — fewer narrow→wide f32 combines per output tile
+    (the §5.2 amortization, extended from *alignment* work to *flush*
+    work).
+
+    ``target_overflow=None`` returns the worst-case bound (the safety
+    fallback). Otherwise the result is never shorter than the worst-case
+    bound, and whenever it exceeds it, the overflow probability of a
+    period-length chunk is <= ``target_overflow``: the register wraps if
+    any *prefix* of the chunk leaves the int32 range, so the CLT endpoint
+    bound is planned at ``target/2`` (reflection principle:
+    P(max prefix > B) <= 2 P(endpoint > B) for a symmetric walk). Pass
+    measured limb stds (e.g. ``PreparedWeight.limb_sigma``) to tighten
+    the plan; defaults assume uniform limbs (:func:`limb_sigma_default`)
+    and independence across the class's limb pairs — correlated operand
+    limbs can push the realized per-chunk probability toward the target's
+    order of magnitude, not materially past it.
+    """
+    per_step_max = block_k * n_limbs * (1 << (limb_base - 1)) ** 2
+    worst = plan_chunk_length_worst_case(per_step_max, acc_bits)
+    if target_overflow is None:
+        return worst
+    if not 0.0 < target_overflow < 1.0:
+        raise ValueError(f"target_overflow must be in (0, 1), got "
+                         f"{target_overflow}")
+    sx = limb_sigma_default(limb_base) if sigma_limb_x is None else float(
+        sigma_limb_x)
+    sw = limb_sigma_default(limb_base) if sigma_limb_w is None else float(
+        sigma_limb_w)
+    sigma_step = math.sqrt(n_limbs * block_k) * max(sx * sw, 1e-12)
+    clt = plan_chunk_length_clt(acc_bits, sigma_step, target_overflow / 2.0)
+    return max(worst, clt)
 
 
 def simulate_walk(pmf: Pmf, acc_bits: int, n_trials: int = 4096,

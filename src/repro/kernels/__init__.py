@@ -1,9 +1,13 @@
 # Pallas TPU kernels for the paper's compute hot-spot: the MGS quantized
-# matmul (exact fixed-point limb kernel + paper-faithful dmac kernel),
-# with jitted wrappers (ops) and pure-jnp oracles (ref).
+# matmul (streaming limb-fused + pre-decomposed exact fixed-point kernels,
+# paper-faithful dmac kernel), with jitted wrappers (ops) and pure-jnp
+# oracles (ref).
 from . import ops, ref
-from .mgs_matmul import (limb_decompose, mgs_matmul_dmac_pallas,
+from .mgs_matmul import (ACTIVATIONS, limb_decompose,
+                         mgs_matmul_dmac_pallas,
+                         mgs_matmul_exact_fused_pallas,
                          mgs_matmul_exact_pallas, worst_case_flush_period)
 
-__all__ = ["ops", "ref", "limb_decompose", "mgs_matmul_dmac_pallas",
+__all__ = ["ops", "ref", "ACTIVATIONS", "limb_decompose",
+           "mgs_matmul_dmac_pallas", "mgs_matmul_exact_fused_pallas",
            "mgs_matmul_exact_pallas", "worst_case_flush_period"]

@@ -1,16 +1,33 @@
 """Pallas TPU kernels for MGS quantized matmuls.
 
-Two kernels, matching the contracts in :mod:`repro.kernels.ref`:
+Three kernels, matching the contracts in :mod:`repro.kernels.ref`:
 
-``mgs_matmul_exact_kernel`` — beyond-paper TPU-native form. E4M3 operands
-are pre-decomposed (host-side elementwise op) into 20-bit fixed-point
-integers split into three balanced 7-bit limbs (int8). The kernel runs the
-9 limb-pair int8×int8→int32 contractions on the MXU, keeping 5 per-weight
-int32 accumulators resident in VMEM, and flushes them into a float32 wide
-accumulator every ``flush_period`` K-steps (the Markov/worst-case planner
-picks the period — the paper's greedy narrow/wide fallback turned into a
-deterministic schedule). One flush per period amortizes all mantissa
-alignment, exactly the paper's §5.2 insight.
+``mgs_matmul_exact_fused_kernel`` — the production serving path. Operands
+arrive as *packed* format-exact FP8 codes (``core.formats.encode_bits``,
+1 byte/element in HBM). Each tile is decoded and limb-split **in VMEM**
+(pure integer bit-twiddling, no host-side pre-decomposition), the 9
+limb-pair int8×int8→int32 contractions run on the MXU, and an optional
+fused epilogue (output scale · bias add · activation) finishes the tile so
+linear layers need no follow-up elementwise pass. Streaming the packed
+bytes instead of materialized limb planes cuts operand HBM traffic 3×
+(the §5.2 amortization argument applied to *data movement*: prep work is
+re-done per tile in fast memory rather than stored in slow memory).
+
+``mgs_matmul_exact_kernel`` — the pre-decomposed A/B baseline. E4M3
+operands are limb-decomposed host-side into 20-bit fixed-point integers
+split into three balanced 7-bit limbs (int8, 3 bytes/element in HBM);
+the kernel body is otherwise identical. Kept for benchmarking the fused
+variant's bandwidth win and as the path for callers that already hold
+limb planes (e.g. ``quant.prepared.PreparedWeight``).
+
+Both exact kernels keep 5 per-weight-class int32 accumulators resident in
+VMEM and flush them into a float32 wide accumulator every
+``flush_period`` K-steps. The period comes from either the deterministic
+``worst_case_flush_period`` (no int32 overflow possible — the default) or
+the Markov planner (``core.markov.plan_flush_period``) which uses observed
+limb statistics to lengthen the period (fewer f32 combines per output
+tile) at a provably negligible overflow probability. One flush per period
+amortizes all mantissa alignment, exactly the paper's §5.2 insight.
 
 ``mgs_matmul_dmac_kernel`` — paper-faithful Fig. 8 numerics. Product tiles
 are materialized in VMEM, RNE-rounded to E4M3 (subnormal-gated per §5.3),
@@ -20,9 +37,19 @@ int32 so the in-VMEM totals are exact — the wide-fallback path never loses
 bits, so this is bit-identical to the hardware). The 16× shift+combine
 runs once per output tile.
 
-Block shapes default to MXU-aligned (128×128) tiles; VMEM budgets:
-exact: 2·(3·bm·bk + 3·bk·bn) int8 + 5·bm·bn int32 + bm·bn f32 ≈ 0.5 MB.
-dmac:  bm·bk·bn f32 product tile dominates (32·128·32·4 = 0.5 MB).
+Memory accounting (per grid step, MXU-aligned 128×128×128 tiles):
+
+* HBM operand bytes per full (M, K) @ (K, N) matmul:
+    fused:          M·K + K·N          (packed codes, 1 B/elem)
+    pre-decomposed: 3·(M·K + K·N)      (3 int8 limb planes)
+  plus 4·M·N output bytes either way — the fused path's operand traffic
+  is exactly 1/3 of the pre-decomposed path's.
+* VMEM, fused: bm·bk + bk·bn uint8 codes + 3·(bm·bk + bk·bn) int8 decoded
+  limbs (transient) + 5·bm·bn int32 + bm·bn f32 + 2·bn f32 epilogue rows
+  ≈ 0.6 MB.
+* VMEM, pre-decomposed: 3·(bm·bk + bk·bn) int8 + 5·bm·bn int32 + bm·bn
+  f32 ≈ 0.5 MB.
+* dmac: bm·bk·bn f32 product tile dominates (32·128·32·4 = 0.5 MB).
 """
 
 from __future__ import annotations
@@ -36,12 +63,27 @@ from jax.experimental.pallas import tpu as pltpu
 
 from repro.core.formats import E4M3, FPFormat
 
-__all__ = ["mgs_matmul_exact_pallas", "mgs_matmul_dmac_pallas",
-           "limb_decompose", "worst_case_flush_period"]
+__all__ = ["mgs_matmul_exact_pallas", "mgs_matmul_exact_fused_pallas",
+           "mgs_matmul_dmac_pallas", "limb_decompose",
+           "worst_case_flush_period", "ACTIVATIONS"]
 
 _LIMB_BASE = 7
 _N_LIMBS = 3
 _N_CLASSES = 2 * _N_LIMBS - 1  # limb-weight classes a+b in [0, 4]
+
+# jax renamed TPUCompilerParams -> CompilerParams around 0.5; support both.
+_CompilerParams = getattr(pltpu, "CompilerParams", None) or getattr(
+    pltpu, "TPUCompilerParams")
+
+# Epilogue activations the fused kernel can apply in-VMEM. Must match the
+# model-layer definitions (models.common) bit-for-bit so fusing an
+# activation into the kernel is numerically transparent.
+ACTIVATIONS = {
+    "none": lambda r: r,
+    "relu": lambda r: jnp.maximum(r, 0.0),
+    "gelu": lambda r: jax.nn.gelu(r, approximate=True),
+    "silu": jax.nn.silu,
+}
 
 
 def limb_decompose(v, fmt: FPFormat = E4M3):
@@ -50,6 +92,11 @@ def limb_decompose(v, fmt: FPFormat = E4M3):
     from repro.core.formats import decompose
     sm, e = decompose(v.astype(jnp.float32), fmt)
     ix = sm << jnp.maximum(e, 1)
+    return jnp.stack(_limb_split(ix))  # (3, ...) int8
+
+
+def _limb_split(ix):
+    """Split int32 fixed-point values into 3 balanced base-128 int8 limbs."""
     half, mod = 1 << (_LIMB_BASE - 1), 1 << _LIMB_BASE
     limbs, rem = [], ix
     for _ in range(_N_LIMBS - 1):
@@ -57,7 +104,22 @@ def limb_decompose(v, fmt: FPFormat = E4M3):
         limbs.append(c.astype(jnp.int8))
         rem = (rem - c) >> _LIMB_BASE
     limbs.append(rem.astype(jnp.int8))
-    return jnp.stack(limbs)  # (3, ...) int8
+    return limbs
+
+
+def _decode_limbs(codes, fmt: FPFormat):
+    """Packed FP8 codes (uint8) -> 3 balanced int8 limbs, in-kernel.
+
+    Pure integer bit-twiddling (shifts/masks/selects), so it lowers inside
+    Pallas on TPU — this is the per-tile "prep" the fused kernel re-does in
+    VMEM instead of streaming pre-decomposed planes from HBM. The code
+    layout lives in one place (formats.decode_sm_e), shared with the
+    host-side decode_bits.
+    """
+    from repro.core.formats import decode_sm_e
+    sm, e = decode_sm_e(codes, fmt)
+    ix = sm << jnp.maximum(e, 1)
+    return _limb_split(ix)
 
 
 def worst_case_flush_period(block_k: int) -> int:
@@ -66,14 +128,35 @@ def worst_case_flush_period(block_k: int) -> int:
     Per K element, a weight class accumulates at most
     max_pairs_per_class * 64 * 64 = 3 * 4096; the int32 register is safe for
     floor((2^31 - 1) / (block_k * 12288)) grid K-steps between flushes.
+    The Markov planner (core.markov.plan_flush_period) lengthens this using
+    observed limb statistics; this bound is its safety fallback.
     """
     per_step = block_k * _N_LIMBS * (1 << (_LIMB_BASE - 1)) ** 2
     return max(1, (2**31 - 1) // per_step)
 
 
 # ---------------------------------------------------------------------------
-# exact mode
+# exact mode — shared accumulate/flush body
 # ---------------------------------------------------------------------------
+
+
+def _accumulate_classes(acc_i, lx, lw):
+    """9 limb-pair MXU contractions, accumulated per weight class a+b."""
+    for a in range(_N_LIMBS):
+        xa = lx[a]
+        for b in range(_N_LIMBS):
+            acc_i[a + b] += jax.lax.dot_general(
+                xa, lw[b], (((1,), (0,)), ((), ())),
+                preferred_element_type=jnp.int32)
+
+
+def _flush_classes(acc_i, acc_f):
+    """The "wide accumulator" add: one shift+combine per period."""
+    tot = acc_f[...]
+    for c in range(_N_CLASSES):
+        tot += acc_i[c].astype(jnp.float32) * (2.0 ** (_LIMB_BASE * c))
+    acc_f[...] = tot
+    acc_i[...] = jnp.zeros_like(acc_i)
 
 
 def _exact_kernel(lx_ref, lw_ref, o_ref, acc_i, acc_f, *, nsteps: int,
@@ -85,23 +168,11 @@ def _exact_kernel(lx_ref, lw_ref, o_ref, acc_i, acc_f, *, nsteps: int,
         acc_i[...] = jnp.zeros_like(acc_i)
         acc_f[...] = jnp.zeros_like(acc_f)
 
-    # 9 limb-pair MXU contractions, accumulated per weight class a+b.
-    for a in range(_N_LIMBS):
-        xa = lx_ref[a]
-        for b in range(_N_LIMBS):
-            wb = lw_ref[b]
-            acc_i[a + b] += jax.lax.dot_general(
-                xa, wb, (((1,), (0,)), ((), ())),
-                preferred_element_type=jnp.int32)
+    _accumulate_classes(acc_i, lx_ref, lw_ref)
 
     @pl.when((jax.lax.rem(k + 1, flush_period) == 0) | (k == nsteps - 1))
     def _flush():
-        # the "wide accumulator" add: one shift+combine per period.
-        tot = acc_f[...]
-        for c in range(_N_CLASSES):
-            tot += acc_i[c].astype(jnp.float32) * (2.0 ** (_LIMB_BASE * c))
-        acc_f[...] = tot
-        acc_i[...] = jnp.zeros_like(acc_i)
+        _flush_classes(acc_i, acc_f)
 
     @pl.when(k == nsteps - 1)
     def _done():
@@ -115,21 +186,33 @@ def _exact_kernel(lx_ref, lw_ref, o_ref, acc_i, acc_f, *, nsteps: int,
 def mgs_matmul_exact_pallas(x, w, fmt: FPFormat = E4M3, *, block_m: int = 128,
                             block_n: int = 128, block_k: int = 128,
                             flush_period: int | None = None,
-                            interpret: bool = False):
+                            w_limbs=None, interpret: bool = False):
     """Exact fixed-point FP8 matmul: out = x @ w with no accumulation error.
 
-    ``x`` (M, K) and ``w`` (K, N) hold format-exact FP8 values.
+    ``x`` (M, K) holds format-exact FP8 values; the weight operand is
+    either ``w`` (K, N) format-exact values (limb-decomposed here,
+    host-side) or ``w_limbs`` (3, K, N) int8 pre-decomposed limbs (e.g. a
+    cached ``PreparedWeight`` plane — pass ``w=None`` then).
     """
     M, K = x.shape
-    K2, N = w.shape
-    assert K == K2, (x.shape, w.shape)
+    if w_limbs is not None:
+        K2, N = w_limbs.shape[1:]
+    else:
+        K2, N = w.shape
+    assert K == K2, (x.shape, K2, N)
     Mp, Np, Kp = (_ceil(M, block_m) * block_m, _ceil(N, block_n) * block_n,
                   _ceil(K, block_k) * block_k)
     lx = limb_decompose(_pad2(x, Mp, Kp), fmt)          # (3, Mp, Kp) int8
-    lw = limb_decompose(_pad2(w, Kp, Np), fmt)          # (3, Kp, Np) int8
+    if w_limbs is not None:
+        lw = jnp.pad(w_limbs, ((0, 0), (0, Kp - K), (0, Np - N)))
+    else:
+        lw = limb_decompose(_pad2(w, Kp, Np), fmt)      # (3, Kp, Np) int8
     nsteps = Kp // block_k
     if flush_period is None:
         flush_period = worst_case_flush_period(block_k)
+    # A period beyond the grid means "flush once at the end"; clamping also
+    # keeps the in-kernel rem() in int32 range for Markov-planned periods.
+    flush_period = max(1, min(flush_period, nsteps))
     out_scale = 2.0 ** (-2 * (fmt.bias + fmt.mbits))
 
     grid = (Mp // block_m, Np // block_n, nsteps)
@@ -151,10 +234,127 @@ def mgs_matmul_exact_pallas(x, w, fmt: FPFormat = E4M3, *, block_m: int = 128,
             pltpu.VMEM((_N_CLASSES, block_m, block_n), jnp.int32),
             pltpu.VMEM((block_m, block_n), jnp.float32),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(lx, lw)
+    return out[:M, :N]
+
+
+# ---------------------------------------------------------------------------
+# exact mode — streaming limb-fused variant (packed codes in, epilogue out)
+# ---------------------------------------------------------------------------
+
+
+def _exact_fused_kernel(xc_ref, wc_ref, scale_ref, bias_ref, o_ref, acc_i,
+                        acc_f, *, nsteps: int, flush_period: int,
+                        out_scale: float, fmt: FPFormat, activation: str,
+                        has_scale: bool, has_bias: bool):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_i[...] = jnp.zeros_like(acc_i)
+        acc_f[...] = jnp.zeros_like(acc_f)
+
+    # in-VMEM decode: packed byte tiles -> balanced int8 limbs.
+    lx = _decode_limbs(xc_ref[...], fmt)
+    lw = _decode_limbs(wc_ref[...], fmt)
+    _accumulate_classes(acc_i, lx, lw)
+
+    @pl.when((jax.lax.rem(k + 1, flush_period) == 0) | (k == nsteps - 1))
+    def _flush():
+        _flush_classes(acc_i, acc_f)
+
+    @pl.when(k == nsteps - 1)
+    def _done():
+        r = acc_f[...] * out_scale
+        if has_scale:
+            r = r * scale_ref[...]        # (1, bn) broadcast row
+        if has_bias:
+            r = r + bias_ref[...]
+        o_ref[...] = ACTIVATIONS[activation](r)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("fmt", "block_m", "block_n", "block_k", "flush_period",
+                     "activation", "interpret"))
+def mgs_matmul_exact_fused_pallas(x_codes, w_codes, fmt: FPFormat = E4M3, *,
+                                  scale=None, bias=None,
+                                  activation: str = "none",
+                                  block_m: int = 128, block_n: int = 128,
+                                  block_k: int = 128,
+                                  flush_period: int | None = None,
+                                  interpret: bool = False):
+    """Streaming limb-fused exact matmul over *packed* FP8 codes.
+
+    ``x_codes`` (M, K) and ``w_codes`` (K, N) are uint8 codes from
+    :func:`repro.core.formats.encode_bits` — 1 byte/element of HBM traffic
+    vs 3 for the pre-decomposed kernel. Decode + limb-split happens per
+    tile in VMEM. The epilogue computes
+
+        out = activation(dot * out_scale * scale + bias)
+
+    with ``scale`` broadcastable to (1, N) (e.g. per-channel quantization
+    scales), ``bias`` (N,) and ``activation`` one of ``ACTIVATIONS``.
+    With scale/bias omitted and activation "none" the result is
+    bit-identical to ``mgs_matmul_exact_pallas`` / ``mgs_matmul_ref``.
+    """
+    if activation not in ACTIVATIONS:
+        raise ValueError(f"activation {activation!r} not in "
+                         f"{sorted(ACTIVATIONS)}")
+    M, K = x_codes.shape
+    K2, N = w_codes.shape
+    assert K == K2, (x_codes.shape, w_codes.shape)
+    assert x_codes.dtype == jnp.uint8 and w_codes.dtype == jnp.uint8, (
+        x_codes.dtype, w_codes.dtype)
+    Mp, Np, Kp = (_ceil(M, block_m) * block_m, _ceil(N, block_n) * block_n,
+                  _ceil(K, block_k) * block_k)
+    xc = _pad2(x_codes, Mp, Kp)   # code 0 == +0.0
+    wc = _pad2(w_codes, Kp, Np)
+    has_scale, has_bias = scale is not None, bias is not None
+    srow = jnp.zeros((1, Np), jnp.float32)
+    if has_scale:
+        srow = jnp.pad(
+            jnp.broadcast_to(jnp.asarray(scale, jnp.float32).reshape(1, -1),
+                             (1, N)), ((0, 0), (0, Np - N)))
+    brow = jnp.zeros((1, Np), jnp.float32)
+    if has_bias:
+        brow = jnp.pad(jnp.asarray(bias, jnp.float32).reshape(1, N)[:1],
+                       ((0, 0), (0, Np - N)))
+    nsteps = Kp // block_k
+    if flush_period is None:
+        flush_period = worst_case_flush_period(block_k)
+    # A period beyond the grid means "flush once at the end"; clamping also
+    # keeps the in-kernel rem() in int32 range for Markov-planned periods.
+    flush_period = max(1, min(flush_period, nsteps))
+    out_scale = 2.0 ** (-2 * (fmt.bias + fmt.mbits))
+
+    grid = (Mp // block_m, Np // block_n, nsteps)
+    kernel = functools.partial(
+        _exact_fused_kernel, nsteps=nsteps, flush_period=flush_period,
+        out_scale=out_scale, fmt=fmt, activation=activation,
+        has_scale=has_scale, has_bias=has_bias)
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_m, block_k), lambda i, j, k: (i, k)),
+            pl.BlockSpec((block_k, block_n), lambda i, j, k: (k, j)),
+            pl.BlockSpec((1, block_n), lambda i, j, k: (0, j)),
+            pl.BlockSpec((1, block_n), lambda i, j, k: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((block_m, block_n), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((Mp, Np), jnp.float32),
+        scratch_shapes=[
+            pltpu.VMEM((_N_CLASSES, block_m, block_n), jnp.int32),
+            pltpu.VMEM((block_m, block_n), jnp.float32),
+        ],
+        compiler_params=_CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(xc, wc, srow, brow)
     return out[:M, :N]
 
 
@@ -248,7 +448,7 @@ def mgs_matmul_dmac_pallas(x, w, fmt: FPFormat = E4M3,
         scratch_shapes=[
             pltpu.VMEM((fmt.n_bins, block_m, block_n), jnp.int32),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(xp, wp)

@@ -17,19 +17,24 @@ import jax
 __all__ = ["make_production_mesh", "make_mesh", "batch_axes"]
 
 
+def _mesh(shape, axes):
+    # jax >= 0.5 wants explicit axis_types; 0.4.x has no AxisType at all.
+    axis_type = getattr(getattr(jax.sharding, "AxisType", None), "Auto", None)
+    if axis_type is not None:
+        return jax.make_mesh(shape, axes,
+                             axis_types=(axis_type,) * len(axes))
+    return jax.make_mesh(shape, axes)
+
+
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes,
-        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return _mesh(shape, axes)
 
 
 def make_mesh(shape, axes):
     """Arbitrary mesh (tests, elastic restarts, reduced smoke meshes)."""
-    return jax.make_mesh(
-        tuple(shape), tuple(axes),
-        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return _mesh(tuple(shape), tuple(axes))
 
 
 def batch_axes(mesh) -> tuple:

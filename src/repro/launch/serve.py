@@ -26,6 +26,7 @@ from repro.configs.base import ModelConfig
 from repro.launch.mesh import make_mesh
 from repro.models import decode_step, init_cache, init_params, prefill
 from repro.parallel.sharding import make_rules, use_rules
+from repro.quant import prepare_params
 
 __all__ = ["ServeEngine", "Request", "main"]
 
@@ -40,7 +41,14 @@ class Request:
 
 
 class ServeEngine:
-    """Fixed-batch prefill/decode engine with greedy sampling."""
+    """Fixed-batch prefill/decode engine with greedy sampling.
+
+    Static weights are quantized + limb-decomposed exactly **once**, here
+    at engine construction (``quant.prepare_params``): every MGS matmul
+    in the request loop consumes the cached PreparedWeight planes instead
+    of re-quantizing per request. ``quant.PREP_STATS`` counts builds, so
+    monitoring (and tests) can assert the per-process-once invariant.
+    """
 
     def __init__(self, cfg: ModelConfig, mesh, batch: int, max_len: int,
                  params=None, seed: int = 0, eos_id: Optional[int] = None):
@@ -53,7 +61,7 @@ class ServeEngine:
         with use_rules(self.rules):
             if params is None:
                 params, _ = init_params(cfg, jax.random.PRNGKey(seed))
-            self.params = params
+            self.params = prepare_params(params, cfg.quant)
             self._prefill = jax.jit(
                 lambda p, b, c: prefill(p, cfg, b, c))
             self._decode = jax.jit(

@@ -15,8 +15,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.kernels.mgs_matmul import ACTIVATIONS
+
 __all__ = ["ParamFactory", "rms_norm", "layer_norm", "rope_freqs",
-           "apply_rope", "gelu", "silu", "dtype_of"]
+           "apply_rope", "gelu", "silu", "dtype_of", "ACTIVATIONS"]
 
 
 def dtype_of(name: str):
@@ -125,9 +127,12 @@ def apply_rope(x, positions, theta: float = 10000.0):
     return out.astype(x.dtype)
 
 
+# Model activations are drawn from the kernel epilogue registry
+# (kernels.mgs_matmul.ACTIVATIONS) so that fusing an activation into the
+# MGS matmul epilogue applies the *same* function the layer would have.
 def gelu(x):
-    return jax.nn.gelu(x, approximate=True)
+    return ACTIVATIONS["gelu"](x)
 
 
 def silu(x):
-    return jax.nn.silu(x)
+    return ACTIVATIONS["silu"](x)

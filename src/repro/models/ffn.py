@@ -1,11 +1,18 @@
-"""Dense feed-forward blocks: SwiGLU (llama-family) or GELU MLP."""
+"""Dense feed-forward blocks: SwiGLU (llama-family) or GELU MLP.
+
+The gate/up nonlinearity is routed through ``proj``'s ``activation``
+epilogue: on the fused exact kernel it runs inside the matmul's final
+grid step (no follow-up elementwise pass over the (tokens, d_ff)
+activation tensor); on every other path ``proj`` applies it after the
+output cast, bit-identically to the pre-fusion code.
+"""
 
 from __future__ import annotations
 
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
-from .common import ParamFactory, gelu, silu
+from .common import ParamFactory
 from .linear import proj
 
 __all__ = ["ffn_init", "ffn_apply"]
@@ -23,7 +30,8 @@ def ffn_init(f: ParamFactory, cfg: ModelConfig):
 
 def ffn_apply(p, x, cfg: ModelConfig):
     if cfg.act == "silu":
-        h = silu(proj(x, p["wg"], cfg.quant)) * proj(x, p["wu"], cfg.quant)
+        h = (proj(x, p["wg"], cfg.quant, activation="silu")
+             * proj(x, p["wu"], cfg.quant))
     else:
-        h = gelu(proj(x, p["wi"], cfg.quant))
+        h = proj(x, p["wi"], cfg.quant, activation="gelu")
     return proj(h, p["wd"], cfg.quant)

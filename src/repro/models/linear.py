@@ -4,20 +4,47 @@ With ``quant.dtype == "none"`` this is a plain (bf16-compute, fp32-accum)
 dot. Otherwise operands are quantized per the QuantConfig and the matmul
 runs under MGS / wide / clip numerics (see quant.qmatmul) — making the
 paper's technique a first-class execution mode of the framework.
+
+Weights may arrive as :class:`repro.quant.PreparedWeight` (quantized +
+limb-decomposed once at load time — the serving path), in which case the
+cached planes feed the kernel directly. ``activation`` lets layers fuse
+their nonlinearity into the matmul epilogue: on the fused exact kernel it
+runs in-kernel; on every other path it is applied here, after the output
+cast, exactly as the layer would have (so enabling fusion never changes
+non-fused numerics).
 """
 
 from __future__ import annotations
 
 import jax.numpy as jnp
 
-from repro.quant import QuantConfig, qmatmul
+from repro.kernels.mgs_matmul import ACTIVATIONS
+from repro.quant import PreparedWeight, QuantConfig, qmatmul
 
 __all__ = ["proj"]
 
 
-def proj(x, w, quant: QuantConfig, out_shape_tail=None):
-    """x: (..., K) @ w: (K, *tail) -> (..., *tail)."""
+def proj(x, w, quant: QuantConfig, out_shape_tail=None, *,
+         activation: str = "none", bias=None):
+    """x: (..., K) @ w: (K, *tail) -> (..., *tail).
+
+    ``w``: raw weight array or PreparedWeight. ``activation``/``bias``
+    form the layer epilogue (see module docstring).
+    """
+    if isinstance(w, PreparedWeight):
+        tail = w.tail
+        out = qmatmul(x, w, quant, out_dtype=x.dtype, bias=bias,
+                      activation=activation if quant.fused_exact else "none")
+        if not quant.fused_exact:
+            out = ACTIVATIONS[activation](out)
+        return out.reshape(x.shape[:-1] + tail)
     tail = w.shape[1:]
     w2 = w.reshape(w.shape[0], -1)
-    out = qmatmul(x, w2.astype(x.dtype), quant, out_dtype=x.dtype)
+    if quant.fused_exact:
+        out = qmatmul(x, w2.astype(x.dtype), quant, out_dtype=x.dtype,
+                      bias=bias, activation=activation)
+    else:
+        out = qmatmul(x, w2.astype(x.dtype), quant, out_dtype=x.dtype,
+                      bias=bias)
+        out = ACTIVATIONS[activation](out)
     return out.reshape(x.shape[:-1] + tail)

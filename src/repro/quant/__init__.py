@@ -1,10 +1,15 @@
-# Quantization substrate: configs, quantizers, and the qmatmul dispatch
-# that makes MGS a first-class execution mode for every linear layer.
+# Quantization substrate: configs, quantizers, prepared-weight cache, and
+# the qmatmul dispatch that makes MGS a first-class execution mode for
+# every linear layer.
 from .config import ACCUMS, DTYPES, QuantConfig
+from .prepared import (PREP_STATS, PreparedWeight, clear_prepared_cache,
+                       prepare_params, prepare_weight)
 from .qmatmul import qmatmul
 from .quantize import (QTensor, dequantize_int, fake_quant_fp8,
                        fake_quant_int, quantize_fp8, quantize_int)
 
 __all__ = ["ACCUMS", "DTYPES", "QuantConfig", "qmatmul", "QTensor",
            "dequantize_int", "fake_quant_fp8", "fake_quant_int",
-           "quantize_fp8", "quantize_int"]
+           "quantize_fp8", "quantize_int", "PreparedWeight",
+           "prepare_weight", "prepare_params", "PREP_STATS",
+           "clear_prepared_cache"]

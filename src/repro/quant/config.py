@@ -38,9 +38,15 @@ class QuantConfig:
       use_kernel: route through the Pallas kernel (TPU target; tests run it
         in interpret mode). False = pure-jnp emulation path (XLA-compiled,
         used by the CPU dry-run).
+      fused: exact-mode kernel variant. True streams *packed* FP8 codes
+        (1 byte/elem HBM) and decodes + limb-splits per tile in VMEM, with
+        the dequant-scale/bias/activation epilogue fused into the kernel;
+        False streams pre-decomposed int8 limb planes (3 bytes/elem, the
+        A/B baseline).
       block_m/n/k: Pallas tile sizes (MXU-aligned defaults).
       flush_target: probabilistic overflow budget used by the Markov
-        planner to derive the kernel flush period; None = worst-case bound.
+        planner (core.markov.plan_flush_period) to derive the kernel flush
+        period; None = deterministic worst-case bound.
     """
 
     dtype: str = "none"
@@ -51,6 +57,7 @@ class QuantConfig:
     per_channel: bool = False
     gate_subnormal: bool = True
     use_kernel: bool = False
+    fused: bool = False
     block_m: int = 128
     block_n: int = 128
     block_k: int = 128
@@ -82,6 +89,27 @@ class QuantConfig:
             raise ValueError(f"{self.dtype} is not an int dtype")
         return int(self.dtype[3:])
 
+    @property
+    def fp8_margin(self) -> float:
+        """Operand-scaling headroom for the fp8 paths.
+
+        Paths that round *products* back into the FP8 format (Fig. 8
+        hardware) scale each operand so amax -> sqrt(max_finite),
+        guaranteeing |qx*qw| <= max_finite and hence no product
+        saturation. The exact path performs no product re-rounding, so
+        operands may fill the whole range (a beyond-paper accuracy
+        advantage of the limb kernel, quantified in benchmarks).
+        """
+        if self.accum in ("mgs_dmac", "swamp"):
+            return self.fmt.max_finite ** -0.5
+        return 1.0
+
+    @property
+    def fused_exact(self) -> bool:
+        """True when matmuls run the streaming limb-fused exact kernel."""
+        return (self.is_fp8 and self.accum == "mgs_exact"
+                and self.use_kernel and self.fused)
+
     def replace(self, **kw) -> "QuantConfig":
         return dataclasses.replace(self, **kw)
 
@@ -89,5 +117,9 @@ class QuantConfig:
 NONE = QuantConfig()
 FP8_MGS = QuantConfig(dtype="fp8_e4m3", accum="mgs_dmac")
 FP8_MGS_EXACT = QuantConfig(dtype="fp8_e4m3", accum="mgs_exact")
+# Serving preset: streaming limb-fused kernel over packed codes with
+# prepared weights (see quant.prepared) and fused epilogues.
+FP8_MGS_SERVE = QuantConfig(dtype="fp8_e4m3", accum="mgs_exact",
+                            use_kernel=True, fused=True)
 FP8_WIDE = QuantConfig(dtype="fp8_e4m3", accum="wide")
 INT8_DMAC = QuantConfig(dtype="int8", accum="mgs_dmac")

@@ -1,0 +1,221 @@
+"""Prepared weights: quantize + limb-decompose static parameters *once*.
+
+The serving hot path must not re-quantize weights per request: a static
+weight's absmax scale, packed FP8 codes, and int8 limb planes are all
+functions of the parameter alone, so they are computed once — at load /
+checkpoint / engine-init time — and cached for the life of the process.
+``qmatmul`` then consumes the :class:`PreparedWeight` directly:
+
+* fused exact kernel: streams ``codes`` (1 byte/element of HBM traffic);
+* pre-decomposed exact kernel: streams ``limbs`` (the A/B baseline);
+* emulation / dmac fallbacks: reconstruct format-exact values from
+  ``codes`` via ``decode_bits`` (cheap elementwise, no re-rounding).
+
+``PreparedWeight`` is a registered pytree whose leaves are arrays, so a
+prepared parameter tree passes through ``jax.jit`` / ``lax.scan`` like any
+other: model code that scans stacked per-layer weights slices the codes /
+limbs / scale planes along the leading layer axis transparently.
+
+``prepare_weight`` keeps a process-level cache keyed by parameter
+identity; ``PREP_STATS`` counts builds vs cache hits so tests (and
+monitoring) can verify each weight is prepared exactly once per process.
+"""
+
+from __future__ import annotations
+
+import weakref
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.formats import FPFormat, encode_bits, decode_bits, get_format
+from repro.kernels.mgs_matmul import limb_decompose
+
+from .config import QuantConfig
+from .quantize import quantize_fp8
+
+__all__ = ["PreparedWeight", "prepare_weight", "prepare_params",
+           "PREP_STATS", "clear_prepared_cache"]
+
+# Process-level preparation accounting: ``prepared`` counts actual
+# quantize+decompose builds, ``cache_hits`` counts reuses. Serving must
+# keep ``prepared`` constant across requests.
+PREP_STATS = {"prepared": 0, "cache_hits": 0}
+
+_CACHE: dict = {}
+
+
+class PreparedWeight:
+    """A weight quantized + limb-decomposed once, in kernel-ready planes.
+
+    Array leaves (pytree children — all share any leading stack axes):
+
+    * ``codes``: packed FP8 codes (uint8), shape (*stack, K, N) — the
+      fused kernel's 1-byte/elem HBM stream, and the source for
+      :meth:`values` on the emulation paths. Always materialized.
+    * ``limbs``: balanced int8 limb planes, shape (*stack, 3, K, N) — the
+      pre-decomposed kernel's input. ``None`` unless the config actually
+      streams them (``use_kernel and not fused``): at 3 bytes/elem they
+      would otherwise sit as dead device memory next to the codes.
+    * ``scale``: dequantization scale, broadcastable to (*stack, 1, N).
+
+    Static aux data: ``fmt_name``, logical ``tail`` (the un-flattened
+    trailing dims the consuming layer reshapes back to), and
+    ``limb_sigma`` — the observed limb std feeding the Markov flush
+    planner (``core.markov.plan_flush_period``).
+    """
+
+    def __init__(self, codes, limbs, scale, fmt_name: str,
+                 tail: Tuple[int, ...], limb_sigma: Optional[float] = None):
+        self.codes = codes
+        self.limbs = limbs
+        self.scale = scale
+        self.fmt_name = fmt_name
+        self.tail = tuple(tail)
+        self.limb_sigma = limb_sigma
+
+    @property
+    def fmt(self) -> FPFormat:
+        return get_format(self.fmt_name)
+
+    @property
+    def shape(self):
+        return self.codes.shape
+
+    def values(self, dtype=jnp.float32):
+        """Format-exact weight values (for emulation / dmac fallbacks)."""
+        return decode_bits(self.codes, self.fmt, dtype)
+
+    def __repr__(self):
+        return (f"PreparedWeight(shape={tuple(self.codes.shape)}, "
+                f"fmt={self.fmt_name}, tail={self.tail}, "
+                f"limb_sigma={self.limb_sigma})")
+
+
+def _pw_flatten(pw: PreparedWeight):
+    return ((pw.codes, pw.limbs, pw.scale),
+            (pw.fmt_name, pw.tail, pw.limb_sigma))
+
+
+def _pw_unflatten(aux, children):
+    codes, limbs, scale = children
+    fmt_name, tail, limb_sigma = aux
+    return PreparedWeight(codes, limbs, scale, fmt_name, tail, limb_sigma)
+
+
+jax.tree_util.register_pytree_node(PreparedWeight, _pw_flatten, _pw_unflatten)
+
+
+def _build(w, cfg: QuantConfig, stacked: bool,
+           keep_limbs: bool) -> PreparedWeight:
+    fmt = cfg.fmt
+    w = jnp.asarray(w)
+    if stacked:
+        stack, (K, *tail) = (w.shape[:1], w.shape[1:])
+    else:
+        stack, (K, *tail) = ((), w.shape)
+    n = int(np.prod(tail)) if tail else 1
+    w2 = w.reshape(stack + (K, n)).astype(jnp.float32)
+    axis = 0 if cfg.per_channel else None
+    margin = cfg.fp8_margin
+
+    def quantize_one(wi):
+        return quantize_fp8(wi, fmt, axis=axis, margin=margin)
+
+    if stacked:
+        qt = jax.vmap(quantize_one)(w2)   # per-layer scales
+    else:
+        qt = quantize_one(w2)
+    codes = encode_bits(qt.q, fmt)
+    limbs = limb_decompose(qt.q, fmt)     # (3, *stack, K, n)
+    if stacked:
+        limbs = jnp.moveaxis(limbs, 0, 1)  # (*stack, 3, K, n)
+    # observed limb statistics feed the Markov flush planner even when the
+    # limb planes themselves are not kept resident
+    limb_sigma = float(np.std(np.asarray(limbs, np.float32)))
+    PREP_STATS["prepared"] += 1
+    return PreparedWeight(codes, limbs if keep_limbs else None, qt.scale,
+                          fmt.name, tuple(tail), limb_sigma)
+
+
+def prepare_weight(w, cfg: QuantConfig, *, stacked: bool = False,
+                   keep_limbs: Optional[bool] = None) -> PreparedWeight:
+    """Quantize + decompose ``w`` under ``cfg``, cached per process.
+
+    ``w``: (K, *tail) weight, or (L, K, *tail) stacked per-layer weights
+    (``stacked=True``) — scales/codes/limbs are then computed per layer
+    slice so ``lax.scan`` consumption matches per-layer quantization.
+
+    ``keep_limbs`` keeps the 3-byte/elem pre-decomposed planes resident;
+    default: only when ``cfg`` streams them (``use_kernel and not
+    fused``). Paths that find them missing fall back to the packed codes.
+
+    The cache is keyed on parameter identity + the quantization-relevant
+    config fields, holding the source array only weakly — dropping the
+    raw weight after preparation releases its memory. Re-preparing the
+    same array is a cache hit (counted in ``PREP_STATS``, not re-built).
+    """
+    if not cfg.is_fp8:
+        raise ValueError(f"prepare_weight requires an fp8 dtype, got "
+                         f"{cfg.dtype!r}")
+    if keep_limbs is None:
+        keep_limbs = cfg.use_kernel and not cfg.fused
+    key = (id(w), cfg.dtype, cfg.accum, cfg.per_channel, bool(stacked),
+           bool(keep_limbs))
+    hit = _CACHE.get(key)
+    if hit is not None and hit[0]() is w:
+        PREP_STATS["cache_hits"] += 1
+        return hit[1]
+    pw = _build(w, cfg, stacked, keep_limbs)
+    try:
+        # weak ref: cache validity without pinning the raw weight (the
+        # prepared planes replace it in the serving path)
+        _CACHE[key] = (weakref.ref(w), pw)
+    except TypeError:
+        _CACHE[key] = (lambda w=w: w, pw)  # non-weakrefable: hold strong
+    return pw
+
+
+def clear_prepared_cache():
+    _CACHE.clear()
+
+
+# Weights consumed via models.linear.proj, keyed by their parent module
+# child name. Other 2D+ parameters (embeddings, router/expert einsums,
+# attention output einsum, conv filters) are *not* proj-consumed and must
+# stay raw arrays.
+_PROJ_WEIGHTS = {
+    "attn": {"wq", "wk", "wv"},
+    "ffn": {"wg", "wu", "wi", "wd"},
+    "ssm": {"wx", "wz", "wdt_down", "wdt_up", "wB", "wC", "wo"},
+}
+
+# Subtrees whose leaves are stacked along a leading per-layer axis
+# (consumed via lax.scan / lax.map in models.transformer).
+_STACKED_ROOTS = {"layers", "encoder", "cross"}
+
+
+def prepare_params(params, cfg: QuantConfig):
+    """Return ``params`` with every proj-consumed weight prepared.
+
+    Walks the nested-dict parameter tree of ``models.transformer`` and
+    replaces each linear-layer weight with its :class:`PreparedWeight`
+    (leaving embeddings, norms, einsum weights, and biases untouched).
+    Stacked per-layer subtrees get per-layer-slice scales. Idempotent and
+    cache-backed: calling twice on the same tree builds nothing new.
+    """
+    if not (cfg.is_fp8 and cfg.accum in ("mgs_exact", "mgs_dmac")):
+        return params
+
+    def walk(node, path):
+        if isinstance(node, dict):
+            return {k: walk(v, path + (k,)) for k, v in node.items()}
+        if (len(path) >= 2 and path[-1] in _PROJ_WEIGHTS.get(path[-2], ())
+                and getattr(node, "ndim", 0) >= 2):
+            stacked = any(p in _STACKED_ROOTS for p in path)
+            return prepare_weight(node, cfg, stacked=stacked)
+        return node
+
+    return walk(params, ())

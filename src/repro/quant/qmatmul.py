@@ -7,7 +7,9 @@ runs the configured numerics, and rescales:
   fp8_* + accum=wide          -> FP8 operands, fp32 accumulation (H100/TPU
                                  baseline the paper compares against)
   fp8_* + accum=mgs_exact     -> exact fixed-point accumulation
-                                 (Pallas limb kernel / jnp reference)
+                                 (Pallas limb kernel / jnp reference);
+                                 cfg.fused streams packed codes with the
+                                 scale/bias/activation epilogue in-kernel
   fp8_* + accum=mgs_dmac      -> paper-faithful Fig. 8 numerics
   fp8_* + accum=swamp         -> sequential narrow accumulator (failure
                                  baseline, Fig. 3)
@@ -15,9 +17,17 @@ runs the configured numerics, and rescales:
   int* + clip                 -> saturation arithmetic (framework default
                                  the paper criticizes, emulation-only)
 
+Weights may be passed as ``quant.prepared.PreparedWeight`` — quantized +
+limb-decomposed once per process (at load/engine-init time) — in which
+case no weight quantization happens here: the serving hot path re-uses the
+cached scale / packed codes / limb planes on every call. The Markov flush
+planner kicks in when ``cfg.flush_target`` is set, using the prepared
+weight's observed limb statistics to lengthen the exact kernel's flush
+period beyond the worst-case bound.
+
 The heavyweight emulation paths (mgs_dmac / swamp / clip) are evaluation
 tools — use them on layer-sized problems; the production TPU path is
-``mgs_exact`` with the Pallas kernel.
+``mgs_exact`` with the fused Pallas kernel.
 """
 
 from __future__ import annotations
@@ -27,55 +37,90 @@ import jax.numpy as jnp
 from repro.kernels import ops as kops
 from repro.kernels import ref as kref
 from .config import QuantConfig
+from .prepared import PreparedWeight
 from .quantize import quantize_fp8, quantize_int
 
 __all__ = ["qmatmul"]
 
 
-def qmatmul(x, w, cfg: QuantConfig, out_dtype=None):
-    """(..., K) @ (K, N) under the quantized numerics of ``cfg``."""
+def _exact_flush_period(cfg: QuantConfig, w_sigma):
+    """Markov-planned flush period (static python int), or None."""
+    if cfg.flush_target is None:
+        return None
+    from repro.core.markov import plan_flush_period
+    return plan_flush_period(cfg.block_k, target_overflow=cfg.flush_target,
+                             sigma_limb_w=w_sigma)
+
+
+def qmatmul(x, w, cfg: QuantConfig, out_dtype=None, *, bias=None,
+            activation: str = "none"):
+    """(..., K) @ (K, N) under the quantized numerics of ``cfg``.
+
+    ``bias`` (N,) and ``activation`` (see kernels ACTIVATIONS) form an
+    optional epilogue ``activation(out + bias)`` applied after
+    dequantization — fused into the exact-mode kernel when
+    ``cfg.fused_exact``, a follow-up elementwise pass otherwise.
+    """
     if out_dtype is None:
         out_dtype = x.dtype
+    prepared = isinstance(w, PreparedWeight)
     if cfg.dtype == "none":
-        return jnp.dot(x, w, preferred_element_type=jnp.float32).astype(
-            out_dtype)
+        if prepared:
+            raise ValueError("PreparedWeight requires an fp8 QuantConfig")
+        out = jnp.dot(x, w, preferred_element_type=jnp.float32)
+        out = kops.apply_epilogue(out, None, bias, activation)
+        return out.astype(out_dtype)
 
     if cfg.is_fp8:
         fmt = cfg.fmt
-        # Product-safe scaling for the paths that round *products* back into
-        # the FP8 format (Fig. 8 hardware): scale each operand so
-        # amax -> sqrt(max_finite), guaranteeing |qx*qw| <= max_finite and
-        # hence no product saturation. The exact path performs no product
-        # re-rounding, so operands may fill the whole range (a beyond-paper
-        # accuracy advantage of the limb kernel, quantified in benchmarks).
-        if cfg.accum in ("mgs_dmac", "swamp"):
-            margin = fmt.max_finite ** -0.5
-        else:
-            margin = 1.0
+        if prepared and w.fmt_name != fmt.name:
+            raise ValueError(f"PreparedWeight format {w.fmt_name!r} != "
+                             f"config format {fmt.name!r}")
+        margin = cfg.fp8_margin
         qx = quantize_fp8(x, fmt, margin=margin)
-        qw = quantize_fp8(w, fmt, axis=0 if cfg.per_channel else None,
-                          margin=margin)
-        scale = qx.scale * qw.scale
-        if cfg.accum == "wide":
-            out = kref.wide_matmul_ref(qx.q, qw.q)
-        elif cfg.accum in ("mgs_exact", "mgs_dmac"):
+        if prepared:
+            w_scale = w.scale
+        else:
+            qw = quantize_fp8(w, fmt, axis=0 if cfg.per_channel else None,
+                              margin=margin)
+            w_scale = qw.scale
+        scale = qx.scale * w_scale
+        if cfg.accum in ("mgs_exact", "mgs_dmac"):
             mode = "exact" if cfg.accum == "mgs_exact" else "dmac"
+            w_arg = w if prepared else qw.q
+            if mode == "exact":
+                out = kops.mgs_matmul(
+                    qx.q, w_arg, fmt, mode, use_kernel=cfg.use_kernel,
+                    fused=cfg.fused, gate_subnormal=cfg.gate_subnormal,
+                    block_m=cfg.block_m, block_n=cfg.block_n,
+                    block_k=cfg.block_k,
+                    flush_period=_exact_flush_period(
+                        cfg, w.limb_sigma if prepared else None),
+                    scale=scale, bias=bias, activation=activation)
+                return out.astype(out_dtype)
             out = kops.mgs_matmul(
-                qx.q, qw.q, fmt, mode, use_kernel=cfg.use_kernel,
+                qx.q, w_arg, fmt, mode, use_kernel=cfg.use_kernel,
                 gate_subnormal=cfg.gate_subnormal, block_m=cfg.block_m,
                 block_n=cfg.block_n, block_k=cfg.block_k)
+        elif cfg.accum == "wide":
+            w_vals = w.values() if prepared else qw.q
+            out = kref.wide_matmul_ref(qx.q, w_vals)
         elif cfg.accum == "swamp":
+            w_vals = w.values() if prepared else qw.q
             lead = qx.q.shape[:-1]
             out = kref.swamp_matmul_ref(
-                qx.q.reshape((-1, qx.q.shape[-1])), qw.q, fmt,
+                qx.q.reshape((-1, qx.q.shape[-1])), w_vals, fmt,
                 acc_mantissa_bits=cfg.narrow_bits - 1)
-            out = out.reshape(lead + (w.shape[-1],))
+            out = out.reshape(lead + (w_vals.shape[-1],))
         else:
             raise NotImplementedError(
                 f"accum={cfg.accum} for fp8 (use wide/mgs_*/swamp)")
-        return (out * scale).astype(out_dtype)
+        out = kops.apply_epilogue(out * scale, None, bias, activation)
+        return out.astype(out_dtype)
 
     if cfg.is_int:
+        if prepared:
+            raise ValueError("PreparedWeight requires an fp8 QuantConfig")
         bits = cfg.int_bits
         qx = quantize_int(x, min(bits, cfg.act_bits), symmetric=True)
         qw = quantize_int(w, min(bits, cfg.weight_bits),
@@ -108,6 +153,8 @@ def qmatmul(x, w, cfg: QuantConfig, out_dtype=None):
             out = f(x2, qw.q).reshape(lead + (w.shape[-1],))
         else:
             raise NotImplementedError(f"accum={cfg.accum} for int")
-        return (out.astype(jnp.float32) * scale).astype(out_dtype)
+        out = kops.apply_epilogue(out.astype(jnp.float32) * scale, None, bias,
+                             activation)
+        return out.astype(out_dtype)
 
     raise ValueError(f"unhandled dtype {cfg.dtype}")

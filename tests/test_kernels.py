@@ -108,6 +108,33 @@ def test_e5m2_rejected_in_exact_mode(rng):
         ops.mgs_matmul(x, w, formats.E5M2, "exact")
 
 
+def test_dmac_honors_block_shapes_within_budget(rng):
+    """Caller block shapes within the VMEM budget are not clobbered."""
+    import warnings
+    x = jnp.asarray(_fp8(rng, (40, 64), scale=0.2))
+    w = jnp.asarray(_fp8(rng, (64, 40), scale=0.2))
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")  # any clamp warning -> failure
+        got = ops.mgs_matmul(x, w, formats.E4M3, "dmac",
+                             block_m=40, block_n=40, block_k=64)
+    want = ref.mgs_matmul_ref(x, w, formats.E4M3, "dmac")
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=0, atol=0)
+
+
+def test_dmac_warns_and_clamps_oversized_blocks(rng):
+    """Blocks implying an over-budget VMEM product tile warn (never a
+    silent clobber) and are halved until they fit."""
+    x = jnp.asarray(_fp8(rng, (16, 64), scale=0.2))
+    w = jnp.asarray(_fp8(rng, (64, 16), scale=0.2))
+    with pytest.warns(UserWarning, match="VMEM"):
+        got = ops.mgs_matmul(x, w, formats.E4M3, "dmac",
+                             block_m=256, block_n=256, block_k=256)
+    want = ref.mgs_matmul_ref(x, w, formats.E4M3, "dmac")
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=0, atol=0)
+
+
 def test_e5m2_dmac_kernel(rng):
     M, K, N = 16, 128, 16
     x = jnp.asarray(_fp8(rng, (M, K), scale=0.05, fmt=formats.E5M2))

@@ -69,6 +69,39 @@ def test_planners():
     assert wc == (2**31 - 1) // 4096
 
 
+@pytest.mark.parametrize("block_k", [8, 32, 128, 512, 4096])
+def test_plan_flush_period_safety(block_k):
+    """The MGS flush planner: worst-case fallback, never shorter than the
+    deterministic bound, and CLT-safe whenever it lengthens it."""
+    per_step_max = block_k * 3 * 64 * 64
+    worst = markov.plan_chunk_length_worst_case(per_step_max, 32)
+    # no stats -> exactly the worst-case bound
+    assert markov.plan_flush_period(block_k) == worst
+    for target in (1e-4, 1e-6, 1e-9):
+        k = markov.plan_flush_period(block_k, target_overflow=target)
+        assert k >= worst
+        if k > worst:
+            sigma_step = (3 * block_k) ** 0.5 * markov.limb_sigma_default()**2
+            assert markov.clt_overflow_prob(k, 32, sigma_step) <= target * 1.01
+
+
+def test_plan_flush_period_uses_observed_stats():
+    """Smaller observed limb stds license longer flush periods."""
+    loose = markov.plan_flush_period(128, target_overflow=1e-6)
+    tight = markov.plan_flush_period(128, target_overflow=1e-6,
+                                     sigma_limb_x=10.0, sigma_limb_w=10.0)
+    assert tight > loose
+    # heavier-than-uniform stats shrink the plan but never below worst case
+    heavy = markov.plan_flush_period(128, target_overflow=1e-6,
+                                     sigma_limb_x=64.0, sigma_limb_w=64.0)
+    assert markov.plan_flush_period(128) <= heavy <= loose
+
+
+def test_plan_flush_period_rejects_bad_target():
+    with pytest.raises(ValueError, match="target_overflow"):
+        markov.plan_flush_period(128, target_overflow=0.0)
+
+
 def test_empirical_pmf_roundtrip(rng):
     vals = rng.integers(-5, 6, 10000)
     pmf = markov.empirical_pmf(vals)

@@ -1,0 +1,289 @@
+"""Streaming fused kernel + PreparedWeight cache semantics.
+
+Covers the ISSUE-1 acceptance criteria: fused-kernel bit-identity against
+the jnp oracle and the pre-decomposed kernel (interpret mode), prepared
+weights matching per-call quantization exactly, cache-hit accounting, and
+scan-sliced stacked preparation (the transformer layer-stack layout).
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import formats
+from repro.kernels import ops, ref
+from repro.kernels.mgs_matmul import (limb_decompose,
+                                      mgs_matmul_exact_fused_pallas,
+                                      mgs_matmul_exact_pallas)
+from repro.quant import (PREP_STATS, QuantConfig, prepare_params,
+                         prepare_weight, qmatmul)
+
+_F = formats.E4M3
+_CFG = QuantConfig(dtype="fp8_e4m3", accum="mgs_exact", use_kernel=True,
+                   block_m=32, block_n=32, block_k=32)
+
+
+def _fp8(rng, shape, scale=1.0, fmt=_F):
+    x = rng.normal(0, scale, shape).astype(np.float32)
+    return np.asarray(formats.round_to_format(x, fmt))
+
+
+SHAPES = [
+    (8, 16, 8),       # tiny, single block
+    (32, 64, 32),     # one block exactly
+    (48, 300, 56),    # ragged: padding on every dim
+    (128, 257, 64),   # K just over two blocks
+    (1, 128, 1),      # degenerate M/N
+]
+
+
+# ---------------------------------------------------------------------------
+# fused kernel numerics
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("mkn", SHAPES)
+def test_fused_kernel_bit_identical_to_ref(rng, mkn):
+    M, K, N = mkn
+    x = jnp.asarray(_fp8(rng, (M, K)))
+    w = jnp.asarray(_fp8(rng, (K, N)))
+    xc = formats.encode_bits(x, _F)
+    wc = formats.encode_bits(w, _F)
+    got = mgs_matmul_exact_fused_pallas(xc, wc, _F, block_m=32, block_n=32,
+                                        block_k=64, interpret=True)
+    want = ref.mgs_matmul_ref(x, w, _F, "exact")
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("mkn", SHAPES[:3])
+def test_fused_kernel_bit_identical_to_unfused(rng, mkn):
+    M, K, N = mkn
+    x = jnp.asarray(_fp8(rng, (M, K)))
+    w = jnp.asarray(_fp8(rng, (K, N)))
+    fused = mgs_matmul_exact_fused_pallas(
+        formats.encode_bits(x, _F), formats.encode_bits(w, _F), _F,
+        block_m=32, block_n=32, block_k=64, interpret=True)
+    unfused = mgs_matmul_exact_pallas(x, w, _F, block_m=32, block_n=32,
+                                      block_k=64, interpret=True)
+    np.testing.assert_array_equal(np.asarray(fused), np.asarray(unfused))
+
+
+def test_fused_kernel_multiple_flushes(rng):
+    """Exactness must survive mid-K flushes (narrow->wide spills)."""
+    M, K, N = 8, 512, 8
+    x = jnp.asarray(_fp8(rng, (M, K)))
+    w = jnp.asarray(_fp8(rng, (K, N)))
+    got = mgs_matmul_exact_fused_pallas(
+        formats.encode_bits(x, _F), formats.encode_bits(w, _F), _F,
+        block_m=8, block_n=8, block_k=64, flush_period=2, interpret=True)
+    want = ref.mgs_matmul_ref(x, w, _F, "exact")
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-6)
+
+
+def test_fused_epilogue(rng):
+    """activation(out * scale + bias), computed in-kernel.
+
+    XLA contracts the scale-multiply + bias-add into an FMA, so parity
+    with the two-rounding host expression is ~1 ulp, not bitwise.
+    """
+    M, K, N = 16, 96, 24
+    x = jnp.asarray(_fp8(rng, (M, K)))
+    w = jnp.asarray(_fp8(rng, (K, N)))
+    xc, wc = formats.encode_bits(x, _F), formats.encode_bits(w, _F)
+    scale = jnp.asarray(rng.uniform(0.5, 2.0, (1, N)).astype(np.float32))
+    bias = jnp.asarray(rng.normal(0, 1, (N,)).astype(np.float32))
+    base = np.asarray(ref.mgs_matmul_ref(x, w, _F, "exact"))
+    for act in ("none", "relu", "gelu", "silu"):
+        got = mgs_matmul_exact_fused_pallas(
+            xc, wc, _F, scale=scale, bias=bias, activation=act,
+            block_m=32, block_n=32, block_k=32, interpret=True)
+        want = ops.apply_epilogue(
+            jnp.asarray(base) * scale, None, bias, act)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-5, atol=1e-5)
+
+
+def test_fused_rejects_unknown_activation(rng):
+    x = jnp.asarray(_fp8(rng, (8, 32)))
+    xc = formats.encode_bits(x, _F)
+    with pytest.raises(ValueError, match="activation"):
+        mgs_matmul_exact_fused_pallas(xc, xc.T, _F, activation="tanh",
+                                      interpret=True)
+
+
+def test_ops_dispatch_fused_matches_unfused(rng):
+    x = jnp.asarray(_fp8(rng, (2, 5, 96)))
+    w = jnp.asarray(_fp8(rng, (96, 24)))
+    fused = ops.mgs_matmul(x, w, _F, "exact", fused=True, block_m=32,
+                           block_n=32, block_k=32)
+    unfused = ops.mgs_matmul(x, w, _F, "exact", block_m=32, block_n=32,
+                             block_k=32)
+    assert fused.shape == (2, 5, 24)
+    np.testing.assert_array_equal(np.asarray(fused), np.asarray(unfused))
+
+
+# ---------------------------------------------------------------------------
+# PreparedWeight semantics
+# ---------------------------------------------------------------------------
+
+
+def test_prepared_matches_per_call_quantization(rng):
+    x = jnp.asarray(rng.normal(0, 1, (4, 8, 96)).astype(np.float32))
+    w = jnp.asarray(rng.normal(0, 0.1, (96, 16)).astype(np.float32))
+    pw = prepare_weight(w, _CFG)
+    for cfg in (_CFG,                                     # unfused kernel
+                dataclasses.replace(_CFG, fused=True),    # fused kernel
+                dataclasses.replace(_CFG, use_kernel=False)):  # emulation
+        raw = np.asarray(qmatmul(x, w, cfg))
+        prep = np.asarray(qmatmul(x, pw, cfg))
+        np.testing.assert_array_equal(raw, prep)
+
+
+def test_prepared_per_channel(rng):
+    cfg = dataclasses.replace(_CFG, per_channel=True, fused=True)
+    x = jnp.asarray(rng.normal(0, 1, (8, 96)).astype(np.float32))
+    w = jnp.asarray(rng.normal(0, 0.1, (96, 16)).astype(np.float32))
+    pw = prepare_weight(w, cfg)
+    np.testing.assert_array_equal(np.asarray(qmatmul(x, w, cfg)),
+                                  np.asarray(qmatmul(x, pw, cfg)))
+
+
+def test_prepare_cache_hit_semantics(rng):
+    w = jnp.asarray(rng.normal(0, 0.1, (64, 8)).astype(np.float32))
+    n0, h0 = PREP_STATS["prepared"], PREP_STATS["cache_hits"]
+    pw1 = prepare_weight(w, _CFG)
+    assert PREP_STATS["prepared"] == n0 + 1
+    pw2 = prepare_weight(w, _CFG)
+    assert pw2 is pw1                       # same object, no rebuild
+    assert PREP_STATS["prepared"] == n0 + 1
+    assert PREP_STATS["cache_hits"] == h0 + 1
+    # a different config is a different cache entry
+    pw3 = prepare_weight(w, dataclasses.replace(_CFG, per_channel=True))
+    assert pw3 is not pw1
+    assert PREP_STATS["prepared"] == n0 + 2
+    # a different (equal-valued) array is a different entry too: identity,
+    # not value, keys the cache
+    w2 = jnp.array(np.asarray(w))
+    prepare_weight(w2, _CFG)
+    assert PREP_STATS["prepared"] == n0 + 3
+
+
+def test_prepared_values_roundtrip(rng):
+    w = jnp.asarray(rng.normal(0, 0.1, (64, 8)).astype(np.float32))
+    pw = prepare_weight(w, _CFG)
+    from repro.quant import quantize_fp8
+    qt = quantize_fp8(w, _F, margin=1.0)
+    np.testing.assert_array_equal(np.asarray(pw.values()), np.asarray(qt.q))
+    np.testing.assert_allclose(np.asarray(pw.scale), np.asarray(qt.scale))
+    # limb planes reconstruct the same fixed-point integers
+    np.testing.assert_array_equal(np.asarray(pw.limbs),
+                                  np.asarray(limb_decompose(qt.q, _F)))
+
+
+def test_prepared_stacked_scan_slices(rng):
+    """Stacked (L, K, *tail) preparation == per-layer preparation."""
+    x = jnp.asarray(rng.normal(0, 1, (4, 96)).astype(np.float32))
+    ws = jnp.asarray(rng.normal(0, 0.1, (3, 96, 4, 4)).astype(np.float32))
+    pws = prepare_weight(ws, _CFG, stacked=True)
+    assert pws.codes.shape == (3, 96, 16)
+    assert pws.limbs.shape == (3, 3, 96, 16)
+    assert pws.tail == (4, 4)
+
+    def body(c, pw_slice):
+        return c, qmatmul(x, pw_slice, _CFG)
+
+    _, outs = jax.lax.scan(body, 0, pws)
+    for i in range(3):
+        want = np.asarray(qmatmul(x, ws[i].reshape(96, 16), _CFG))
+        np.testing.assert_array_equal(np.asarray(outs)[i], want)
+
+
+def test_prepare_params_converts_only_proj_weights(rng):
+    from repro.quant import PreparedWeight
+    params = {
+        "embed": jnp.zeros((32, 16)),
+        "layers": {
+            "attn": {"wq": jnp.asarray(
+                rng.normal(0, 0.1, (2, 16, 4, 4)).astype(np.float32)),
+                "wo": jnp.zeros((2, 4, 4, 16))},
+            "ffn": {"wg": jnp.asarray(
+                rng.normal(0, 0.1, (2, 16, 32)).astype(np.float32))},
+            "ln1": jnp.ones((2, 16)),
+        },
+    }
+    out = prepare_params(params, _CFG)
+    assert isinstance(out["layers"]["attn"]["wq"], PreparedWeight)
+    assert isinstance(out["layers"]["ffn"]["wg"], PreparedWeight)
+    assert out["layers"]["attn"]["wq"].codes.shape == (2, 16, 16)
+    # einsum-consumed / norm / embedding leaves stay raw arrays
+    assert not isinstance(out["layers"]["attn"]["wo"], PreparedWeight)
+    assert not isinstance(out["embed"], PreparedWeight)
+    assert not isinstance(out["layers"]["ln1"], PreparedWeight)
+    # idempotent: preparing a prepared tree builds nothing new
+    n0 = PREP_STATS["prepared"]
+    out2 = prepare_params(out, _CFG)
+    assert PREP_STATS["prepared"] == n0
+    assert out2["layers"]["attn"]["wq"] is out["layers"]["attn"]["wq"]
+    # non-mgs configs pass through untouched
+    assert prepare_params(params, QuantConfig()) is params
+
+
+def test_fused_config_prepare_drops_limb_planes(rng):
+    """A fused-config PreparedWeight keeps only the packed codes (the
+    3-byte/elem limb planes would be dead memory); consumers that want
+    limbs fall back to decoding the codes."""
+    cfg_fused = dataclasses.replace(_CFG, fused=True)
+    x = jnp.asarray(rng.normal(0, 1, (8, 96)).astype(np.float32))
+    w = jnp.asarray(rng.normal(0, 0.1, (96, 16)).astype(np.float32))
+    pw = prepare_weight(w, cfg_fused)
+    assert pw.limbs is None
+    assert pw.codes is not None
+    assert pw.limb_sigma is not None and pw.limb_sigma > 0
+    # fused consumption streams the codes
+    np.testing.assert_array_equal(np.asarray(qmatmul(x, pw, cfg_fused)),
+                                  np.asarray(qmatmul(x, w, cfg_fused)))
+    # unfused consumption of the limb-less weight falls back to values
+    np.testing.assert_array_equal(np.asarray(qmatmul(x, pw, _CFG)),
+                                  np.asarray(qmatmul(x, w, _CFG)))
+    # emulation-path prepare (use_kernel=False) also keeps codes only
+    pw_emu = prepare_weight(w, dataclasses.replace(_CFG, use_kernel=False))
+    assert pw_emu.limbs is None
+
+
+def test_prepare_cache_does_not_pin_source_weight():
+    """The cache holds the source array weakly: dropping the raw weight
+    after preparation releases it (the prepared planes replace it)."""
+    import gc
+    import weakref
+    w = jnp.ones((32, 8), jnp.float32) * 0.25
+    pw = prepare_weight(w, _CFG)
+    ref = weakref.ref(w)
+    del w
+    gc.collect()
+    assert ref() is None          # raw weight released
+    assert pw.codes is not None   # prepared planes remain valid
+
+
+def test_prepared_rejects_wrong_config(rng):
+    w = jnp.asarray(rng.normal(0, 0.1, (64, 8)).astype(np.float32))
+    pw = prepare_weight(w, _CFG)
+    x = jnp.asarray(rng.normal(0, 1, (4, 64)).astype(np.float32))
+    with pytest.raises(ValueError, match="fp8"):
+        qmatmul(x, pw, QuantConfig(dtype="int8", accum="wide"))
+    with pytest.raises(ValueError, match="fp8"):
+        prepare_weight(w, QuantConfig(dtype="int8", accum="wide"))
+
+
+def test_markov_flush_target_keeps_exactness(rng):
+    """Markov-planned (longer) flush periods must not change results on
+    layer-sized problems (class sums stay in f32-exact range)."""
+    cfg = dataclasses.replace(_CFG, fused=True, flush_target=1e-6)
+    x = jnp.asarray(rng.normal(0, 1, (8, 256)).astype(np.float32))
+    w = jnp.asarray(rng.normal(0, 0.1, (256, 16)).astype(np.float32))
+    np.testing.assert_array_equal(
+        np.asarray(qmatmul(x, w, cfg)),
+        np.asarray(qmatmul(x, w, dataclasses.replace(cfg,
+                                                     flush_target=None))))

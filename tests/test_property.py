@@ -2,7 +2,10 @@
 
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import formats, int_dmac, mgs
 from repro.quant import QuantConfig, quantize_fp8, quantize_int
@@ -97,6 +100,23 @@ def test_quantize_int_roundtrip_error(vals, bits, symmetric):
     back = q * np.asarray(t.scale)
     span = np.max(np.abs(x)) if symmetric else np.ptp(x)
     assert np.all(np.abs(back - x) <= span / (2 ** bits - 2) + 1e-6)
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.integers(1, 1 << 16), st.floats(1e-12, 0.5),
+       st.floats(0.5, 64.0), st.floats(0.5, 64.0))
+def test_flush_planner_never_exceeds_safe_bound(block_k, target, sx, sw):
+    """Markov flush planner: >= the deterministic worst-case bound, and
+    whenever it lengthens it, the CLT overflow probability of one
+    period-length chunk stays within the requested budget."""
+    from repro.core import markov
+    worst = markov.plan_flush_period(block_k)
+    k = markov.plan_flush_period(block_k, target_overflow=target,
+                                 sigma_limb_x=sx, sigma_limb_w=sw)
+    assert k >= worst >= 1
+    if k > worst:
+        sigma_step = (3 * block_k) ** 0.5 * sx * sw
+        assert markov.clt_overflow_prob(k, 32, sigma_step) <= target * 1.01
 
 
 @settings(max_examples=25, deadline=None)

@@ -86,6 +86,35 @@ def test_fp8_kv_cache_close_to_bf16(rng):
     assert rel < 0.1  # fp8 quantization noise only
 
 
+def test_quantized_serving_prepares_weights_once(rng):
+    """The serving engine quantizes+decomposes each static weight exactly
+    once per process (at engine init), never per request."""
+    from repro.quant import PREP_STATS, PreparedWeight, QuantConfig
+    cfg = dataclasses.replace(
+        reduced_config("deepseek-7b"),
+        quant=QuantConfig(dtype="fp8_e4m3", accum="mgs_exact"))
+    mesh = make_mesh((1, 1), ("data", "model"))
+    n_start = PREP_STATS["prepared"]
+    engine = ServeEngine(cfg, mesh, batch=2, max_len=32)
+    n_init = PREP_STATS["prepared"]
+    assert n_init > n_start  # proj weights were prepared at init
+    leaves = jax.tree_util.tree_leaves(
+        engine.params, is_leaf=lambda x: isinstance(x, PreparedWeight))
+    assert any(isinstance(l, PreparedWeight) for l in leaves)
+    for _ in range(2):  # serve twice: no re-preparation per request
+        reqs = [Request(rid=i, prompt=rng.integers(1, cfg.vocab, 8).astype(
+            np.int32), max_new_tokens=2) for i in range(3)]
+        engine.run(reqs)
+        assert all(len(r.out_tokens) == 2 for r in reqs)
+        assert PREP_STATS["prepared"] == n_init
+    # a second engine over the same params is pure cache hits
+    engine2 = ServeEngine(cfg, mesh, batch=2, max_len=32,
+                          params=engine.params)
+    engine2.run([Request(rid=0, prompt=rng.integers(
+        1, cfg.vocab, 8).astype(np.int32), max_new_tokens=2)])
+    assert PREP_STATS["prepared"] == n_init
+
+
 def test_summation_module_orderings(rng):
     """Low-precision summation error ordering on heavy-tailed data."""
     vals = rng.standard_t(3, 4096).astype(np.float32)
