@@ -32,10 +32,28 @@ def hbm_bytes_exact(M: int, K: int, N: int, fused: bool) -> dict:
     return {"operand": operand, "out": out, "total": operand + out}
 
 
+def decode_tiles(M: int, K: int, N: int, bm: int, bn: int, bk: int,
+                 schedule: str) -> dict:
+    """In-kernel weight-decode work (tiles decoded) of the fused kernel.
+
+    Output-stationary decodes the (bk, bn) weight tile at every grid
+    step: grid_m * grid_n * grid_k decodes. The K-resident
+    weight-stationary schedule decodes each tile once per output column
+    (the i == 0 sweep): grid_n * grid_k — a grid_m-fold reduction.
+    Activation decode work is grid_n * (grid_m * grid_k) either way.
+    """
+    gm, gn, gk = -(-M // bm), -(-N // bn), -(-K // bk)
+    w_tiles = gn * gk if schedule == "weight" else gm * gn * gk
+    return {"w_tiles": w_tiles, "x_tiles": gm * gn * gk,
+            "grid_m": gm, "reduction": gm if schedule == "weight" else 1}
+
+
 def run(csv: Csv):
     rng = np.random.default_rng(0)
     f = formats.E4M3
-    for (M, K, N) in [(64, 256, 64), (128, 512, 128)]:
+    # the last shape has grid_m = 4 so the weight-stationary schedule's
+    # grid_m-fold decode reduction is visible in the report
+    for (M, K, N) in [(64, 256, 64), (128, 512, 128), (512, 256, 128)]:
         x = jnp.asarray(np.asarray(formats.round_to_format(
             rng.normal(0, 1, (M, K)).astype(np.float32), f)))
         w = jnp.asarray(np.asarray(formats.round_to_format(
@@ -48,10 +66,16 @@ def run(csv: Csv):
         us_f = timeit(lambda: ops.mgs_matmul(x, w, f, "exact", fused=True,
                                              block_m=128, block_n=128,
                                              block_k=128), n=5)
+        us_ws = timeit(lambda: ops.mgs_matmul(x, w, f, "exact", fused=True,
+                                              schedule="weight",
+                                              block_m=128, block_n=128,
+                                              block_k=128), n=5)
         us_r = timeit(lambda: ref.mgs_matmul_ref(x, w, f, "exact"), n=3)
         us_w = timeit(lambda: ref.wide_matmul_ref(x, w), n=3)
         bf = hbm_bytes_exact(M, K, N, fused=True)
         bu = hbm_bytes_exact(M, K, N, fused=False)
+        dt_o = decode_tiles(M, K, N, 128, 128, 128, "output")
+        dt_w = decode_tiles(M, K, N, 128, 128, 128, "weight")
         csv.add(f"kernel/exact_pallas_interp/{M}x{K}x{N}", us_u,
                 f"ref_us={us_r:.0f};f32_us={us_w:.0f}")
         csv.add(
@@ -62,6 +86,15 @@ def run(csv: Csv):
             f"operand_ratio={bf['operand'] / bu['operand']:.3f};"
             f"hbm_total_bytes={bf['total']};"
             f"hbm_total_bytes_unfused={bu['total']}")
+        # ISSUE-2: K-resident weight-stationary schedule vs the PR 1
+        # fused kernel — wall time plus analytic weight-decode work.
+        csv.add(
+            f"kernel/exact_fused_ws_interp/{M}x{K}x{N}", us_ws,
+            f"output_stationary_us={us_f:.0f};"
+            f"w_decode_tiles={dt_w['w_tiles']};"
+            f"w_decode_tiles_output={dt_o['w_tiles']};"
+            f"decode_reduction={dt_w['reduction']}x;"
+            f"hbm_operand_bytes={bf['operand']}")
     # structural accounting: the limb kernel runs 9 int8 MXU passes per
     # bf16-equivalent matmul; v5e int8 throughput ~2x bf16 -> ~4.5x
     # bf16-matmul cost for *exact* FP8 accumulation (vs inexact fp32-acc).

@@ -1,0 +1,89 @@
+#!/usr/bin/env python
+"""Docs link / freshness check (scripts/ci.sh).
+
+Fails when a file under docs/ (or README.md) references something that
+no longer exists:
+
+* dotted ``repro.*`` symbol references (in backticks or import lines)
+  must resolve to an importable module / attribute chain;
+* relative markdown links must point at files that exist.
+
+Keeping this in CI means renaming or removing a public symbol forces the
+docs to move with it.
+"""
+
+from __future__ import annotations
+
+import importlib
+import pathlib
+import re
+import sys
+
+ROOT = pathlib.Path(__file__).resolve().parents[1]
+sys.path.insert(0, str(ROOT / "src"))
+
+SYMBOL = re.compile(r"\brepro(?:\.\w+)+")
+IMPORT = re.compile(r"^\s*from\s+(repro(?:\.\w+)*)\s+import\s+([\w ,]+)",
+                    re.MULTILINE)
+LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+
+
+def resolve_symbol(dotted: str) -> bool:
+    """Importable module prefix + attribute chain for the rest."""
+    parts = dotted.split(".")
+    for cut in range(len(parts), 0, -1):
+        try:
+            obj = importlib.import_module(".".join(parts[:cut]))
+        except ImportError:
+            continue
+        try:
+            for attr in parts[cut:]:
+                obj = getattr(obj, attr)
+        except AttributeError:
+            return False
+        return True
+    return False
+
+
+def check_file(path: pathlib.Path) -> list:
+    text = path.read_text()
+    errors = []
+    symbols = set(SYMBOL.findall(text))
+    # `from repro.x import NAME, ...` in doc code blocks: each imported
+    # name must resolve too, not just the module path
+    for mod, names in IMPORT.findall(text):
+        symbols.update(f"{mod}.{name.strip()}" for name in names.split(",")
+                       if name.strip())
+    for sym in sorted(symbols):
+        if not resolve_symbol(sym):
+            errors.append(f"{path.relative_to(ROOT)}: stale symbol "
+                          f"reference {sym!r}")
+    for link in sorted(set(LINK.findall(text))):
+        if "://" in link or link.startswith(("#", "mailto:")):
+            continue
+        target = (path.parent / link.split("#")[0]).resolve()
+        if not target.exists():
+            errors.append(f"{path.relative_to(ROOT)}: broken link "
+                          f"{link!r}")
+    return errors
+
+
+def main() -> int:
+    files = [ROOT / "README.md"]
+    files += sorted((ROOT / "docs").glob("**/*.md"))
+    missing = [f for f in files if not f.exists()]
+    if missing:
+        print(f"check_docs: missing {missing}", file=sys.stderr)
+        return 1
+    errors = []
+    for f in files:
+        errors += check_file(f)
+    for e in errors:
+        print(f"check_docs: {e}", file=sys.stderr)
+    if not errors:
+        print(f"check_docs: {len(files)} files OK")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

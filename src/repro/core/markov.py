@@ -299,6 +299,21 @@ def plan_flush_period(block_k: int, *, target_overflow: float | None = None,
     and independence across the class's limb pairs — correlated operand
     limbs can push the realized per-chunk probability toward the target's
     order of magnitude, not materially past it.
+
+    Args:
+      block_k: K elements accumulated per grid step (the kernel's block_k
+        tile size).
+      target_overflow: per-chunk overflow probability budget in (0, 1),
+        or ``None`` for the deterministic worst-case bound.
+      sigma_limb_x / sigma_limb_w: observed activation / weight limb
+        standard deviations; default :func:`limb_sigma_default`.
+      acc_bits: accumulator register width (int32 class registers).
+      limb_base / n_limbs: limb radix (2**limb_base) and count, matching
+        the kernel's balanced 3x7-bit scheme.
+
+    Returns:
+      The flush period in grid K-steps (static python int >= 1), safe to
+      bake into the kernel as a compile-time constant.
     """
     per_step_max = block_k * n_limbs * (1 << (limb_base - 1)) ** 2
     worst = plan_chunk_length_worst_case(per_step_max, acc_bits)

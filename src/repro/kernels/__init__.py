@@ -1,13 +1,39 @@
-# Pallas TPU kernels for the paper's compute hot-spot: the MGS quantized
-# matmul (streaming limb-fused + pre-decomposed exact fixed-point kernels,
-# paper-faithful dmac kernel), with jitted wrappers (ops) and pure-jnp
-# oracles (ref).
+"""Pallas TPU kernels for the paper's compute hot-spot: the MGS matmul.
+
+Public entry points (all jitted; tests run them in interpret mode on CPU):
+
+* :func:`mgs_matmul_exact_fused_pallas` — the production serving kernel:
+  (M, K) x (K, N) over *packed* uint8 FP8 codes (1 byte/elem HBM), decode
+  + limb-split per tile in VMEM, fused scale/bias/activation epilogue.
+  Two loop orders via ``schedule``: output-stationary ("output") and the
+  K-resident weight-stationary schedule ("weight") that caches decoded
+  weight limbs in VMEM scratch across the M-grid axis (bit-identical,
+  grid_m-fold less in-kernel weight decode work).
+* :func:`mgs_matmul_exact_pallas` — the pre-decomposed exact kernel:
+  streams 3 int8 limb planes per operand (3 bytes/elem, the A/B
+  baseline); accepts cached ``PreparedWeight`` limb planes via
+  ``w_limbs``.
+* :func:`mgs_matmul_dmac_pallas` — paper-faithful Fig. 8 numerics
+  (per-product E4M3 rounding into 16 exponent-bin accumulators).
+* :func:`limb_decompose` — (…) format-exact values -> (3, …) balanced
+  int8 limbs (host-side; the in-kernel variant lives in the kernels).
+* :func:`worst_case_flush_period` — deterministic no-overflow flush
+  period for a given ``block_k`` (the Markov planner's safety fallback).
+* ``ACTIVATIONS`` — the epilogue activation table shared with the model
+  layers (bit-for-bit identical definitions).
+
+``ops.mgs_matmul`` is the dispatching wrapper every call site routes
+through; ``ref`` holds the pure-jnp oracles the kernels are tested
+against.
+"""
 from . import ops, ref
-from .mgs_matmul import (ACTIVATIONS, limb_decompose,
+from .mgs_matmul import (ACTIVATIONS, WS_STRIPE_BUDGET_BYTES, limb_decompose,
                          mgs_matmul_dmac_pallas,
                          mgs_matmul_exact_fused_pallas,
-                         mgs_matmul_exact_pallas, worst_case_flush_period)
+                         mgs_matmul_exact_pallas, worst_case_flush_period,
+                         ws_stripe_bytes)
 
-__all__ = ["ops", "ref", "ACTIVATIONS", "limb_decompose",
-           "mgs_matmul_dmac_pallas", "mgs_matmul_exact_fused_pallas",
-           "mgs_matmul_exact_pallas", "worst_case_flush_period"]
+__all__ = ["ops", "ref", "ACTIVATIONS", "WS_STRIPE_BUDGET_BYTES",
+           "limb_decompose", "mgs_matmul_dmac_pallas",
+           "mgs_matmul_exact_fused_pallas", "mgs_matmul_exact_pallas",
+           "worst_case_flush_period", "ws_stripe_bytes"]

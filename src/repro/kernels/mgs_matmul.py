@@ -189,10 +189,20 @@ def mgs_matmul_exact_pallas(x, w, fmt: FPFormat = E4M3, *, block_m: int = 128,
                             w_limbs=None, interpret: bool = False):
     """Exact fixed-point FP8 matmul: out = x @ w with no accumulation error.
 
-    ``x`` (M, K) holds format-exact FP8 values; the weight operand is
-    either ``w`` (K, N) format-exact values (limb-decomposed here,
-    host-side) or ``w_limbs`` (3, K, N) int8 pre-decomposed limbs (e.g. a
-    cached ``PreparedWeight`` plane — pass ``w=None`` then).
+    Args:
+      x: (M, K) format-exact FP8 values (``quant.quantize_fp8``).
+      w: (K, N) format-exact weight values (limb-decomposed here,
+        host-side), or ``None`` when ``w_limbs`` is given.
+      fmt: narrow-exponent FP8 format (E4M3 default).
+      block_m / block_n / block_k: Pallas tile sizes.
+      flush_period: K-grid steps between narrow->wide flushes (``None`` =
+        :func:`worst_case_flush_period`).
+      w_limbs: (3, K, N) int8 pre-decomposed limb planes (e.g. a cached
+        ``quant.prepared.PreparedWeight.limbs`` plane).
+      interpret: run in Pallas interpret mode (CPU tests).
+
+    Returns:
+      (M, N) float32 fixed-point-exact ``x @ w``.
     """
     M, K = x.shape
     if w_limbs is not None:
@@ -246,6 +256,16 @@ def mgs_matmul_exact_pallas(x, w, fmt: FPFormat = E4M3, *, block_m: int = 128,
 # ---------------------------------------------------------------------------
 
 
+def _epilogue(r, scale_ref, bias_ref, activation: str, has_scale: bool,
+              has_bias: bool):
+    """Fused output epilogue: activation(r * scale + bias), in-VMEM."""
+    if has_scale:
+        r = r * scale_ref[...]            # (1, bn) broadcast row
+    if has_bias:
+        r = r + bias_ref[...]
+    return ACTIVATIONS[activation](r)
+
+
 def _exact_fused_kernel(xc_ref, wc_ref, scale_ref, bias_ref, o_ref, acc_i,
                         acc_f, *, nsteps: int, flush_period: int,
                         out_scale: float, fmt: FPFormat, activation: str,
@@ -268,42 +288,123 @@ def _exact_fused_kernel(xc_ref, wc_ref, scale_ref, bias_ref, o_ref, acc_i,
 
     @pl.when(k == nsteps - 1)
     def _done():
-        r = acc_f[...] * out_scale
-        if has_scale:
-            r = r * scale_ref[...]        # (1, bn) broadcast row
-        if has_bias:
-            r = r + bias_ref[...]
-        o_ref[...] = ACTIVATIONS[activation](r)
+        o_ref[...] = _epilogue(acc_f[...] * out_scale, scale_ref, bias_ref,
+                               activation, has_scale, has_bias)
+
+
+def _exact_fused_ws_kernel(xc_ref, wc_ref, scale_ref, bias_ref, o_ref,
+                           w_limbs, acc_i, acc_f, *, nsteps: int,
+                           flush_period: int, out_scale: float,
+                           fmt: FPFormat, activation: str, has_scale: bool,
+                           has_bias: bool):
+    """K-resident weight-stationary schedule: grid (j, i, k).
+
+    The output-stationary kernel re-decodes the (bk, bn) weight tile at
+    every (i, j, k) step — the same tile ``grid_m`` times. Here the i
+    (M-grid) axis sits *outside* the K loop: the i == 0 sweep decodes
+    each weight K-tile once into the K-resident ``w_limbs`` VMEM scratch
+    (3 limb planes x the whole padded K stripe of output column j), and
+    every later i row reuses the cached limbs — in-kernel weight decode
+    work drops ``grid_m``-fold. Accumulator/flush/epilogue logic is
+    identical to the output-stationary kernel, so results are
+    bit-identical.
+    """
+    i = pl.program_id(1)
+    k = pl.program_id(2)
+
+    @pl.when(i == 0)
+    def _decode_w():
+        lw = _decode_limbs(wc_ref[...], fmt)
+        for b in range(_N_LIMBS):
+            w_limbs[k, b] = lw[b]
+
+    @pl.when(k == 0)
+    def _init():
+        acc_i[...] = jnp.zeros_like(acc_i)
+        acc_f[...] = jnp.zeros_like(acc_f)
+
+    lx = _decode_limbs(xc_ref[...], fmt)
+    lw = [w_limbs[k, b] for b in range(_N_LIMBS)]
+    _accumulate_classes(acc_i, lx, lw)
+
+    @pl.when((jax.lax.rem(k + 1, flush_period) == 0) | (k == nsteps - 1))
+    def _flush():
+        _flush_classes(acc_i, acc_f)
+
+    @pl.when(k == nsteps - 1)
+    def _done():
+        o_ref[...] = _epilogue(acc_f[...] * out_scale, scale_ref, bias_ref,
+                               activation, has_scale, has_bias)
+
+
+# VMEM budget for the weight-stationary kernel's K-resident decoded limb
+# stripe (3 int8 planes x Kp x block_n). Above this the schedule cannot
+# co-reside with the accumulators on real TPUs (~16 MB VMEM/core).
+WS_STRIPE_BUDGET_BYTES = 8 << 20
+
+
+def ws_stripe_bytes(K: int, block_n: int, block_k: int) -> int:
+    """VMEM bytes of the weight-stationary K-resident limb stripe.
+
+    The single size formula shared by the kernel-side hard check and the
+    ops-side warn-and-fallback, so the two can never disagree.
+    """
+    Kp = -(-K // block_k) * block_k
+    return _N_LIMBS * Kp * block_n
 
 
 @functools.partial(
     jax.jit,
     static_argnames=("fmt", "block_m", "block_n", "block_k", "flush_period",
-                     "activation", "interpret"))
+                     "activation", "schedule", "interpret"))
 def mgs_matmul_exact_fused_pallas(x_codes, w_codes, fmt: FPFormat = E4M3, *,
                                   scale=None, bias=None,
                                   activation: str = "none",
                                   block_m: int = 128, block_n: int = 128,
                                   block_k: int = 128,
                                   flush_period: int | None = None,
+                                  schedule: str = "output",
                                   interpret: bool = False):
     """Streaming limb-fused exact matmul over *packed* FP8 codes.
 
-    ``x_codes`` (M, K) and ``w_codes`` (K, N) are uint8 codes from
-    :func:`repro.core.formats.encode_bits` — 1 byte/element of HBM traffic
-    vs 3 for the pre-decomposed kernel. Decode + limb-split happens per
-    tile in VMEM. The epilogue computes
+    Args:
+      x_codes: (M, K) uint8 packed codes
+        (:func:`repro.core.formats.encode_bits`) — 1 byte/element of HBM
+        traffic vs 3 for the pre-decomposed kernel.
+      w_codes: (K, N) uint8 packed weight codes (e.g. a cached
+        ``quant.prepared.PreparedWeight.codes`` plane).
+      fmt: operand FP8 format (narrow-exponent; E4M3 default).
+      scale: optional dequant scale broadcastable to (1, N) (e.g.
+        per-channel quantization scales), fused into the epilogue.
+      bias: optional (N,) bias row, fused into the epilogue.
+      activation: one of ``ACTIVATIONS``, fused into the epilogue.
+      block_m / block_n / block_k: Pallas tile sizes (MXU-aligned
+        defaults).
+      flush_period: K-grid steps between narrow->wide accumulator
+        flushes; ``None`` = deterministic
+        :func:`worst_case_flush_period`, or a Markov-planned period from
+        :func:`repro.core.markov.plan_flush_period`.
+      schedule: ``"output"`` (output-stationary — decode both operand
+        tiles every grid step) or ``"weight"`` (K-resident
+        weight-stationary — cache the decoded weight limb stripe in VMEM
+        across the M-grid axis, cutting in-kernel weight decode work
+        ``grid_m``-fold; VMEM cost 3·Kp·block_n bytes, guarded by
+        ``WS_STRIPE_BUDGET_BYTES``).
+      interpret: run in Pallas interpret mode (CPU tests).
 
-        out = activation(dot * out_scale * scale + bias)
-
-    with ``scale`` broadcastable to (1, N) (e.g. per-channel quantization
-    scales), ``bias`` (N,) and ``activation`` one of ``ACTIVATIONS``.
-    With scale/bias omitted and activation "none" the result is
-    bit-identical to ``mgs_matmul_exact_pallas`` / ``mgs_matmul_ref``.
+    Returns:
+      (M, N) float32 ``activation(x @ w * out_scale * scale + bias)``.
+      Decode + limb-split happens per tile in VMEM; with scale/bias
+      omitted and activation "none" the result is bit-identical to
+      ``mgs_matmul_exact_pallas`` / ``mgs_matmul_ref`` under either
+      schedule.
     """
     if activation not in ACTIVATIONS:
         raise ValueError(f"activation {activation!r} not in "
                          f"{sorted(ACTIVATIONS)}")
+    if schedule not in ("output", "weight"):
+        raise ValueError(f"schedule {schedule!r} not in ('output', "
+                         f"'weight')")
     M, K = x_codes.shape
     K2, N = w_codes.shape
     assert K == K2, (x_codes.shape, w_codes.shape)
@@ -331,14 +432,45 @@ def mgs_matmul_exact_fused_pallas(x_codes, w_codes, fmt: FPFormat = E4M3, *,
     flush_period = max(1, min(flush_period, nsteps))
     out_scale = 2.0 ** (-2 * (fmt.bias + fmt.mbits))
 
-    grid = (Mp // block_m, Np // block_n, nsteps)
-    kernel = functools.partial(
-        _exact_fused_kernel, nsteps=nsteps, flush_period=flush_period,
-        out_scale=out_scale, fmt=fmt, activation=activation,
-        has_scale=has_scale, has_bias=has_bias)
+    kw = dict(nsteps=nsteps, flush_period=flush_period, out_scale=out_scale,
+              fmt=fmt, activation=activation, has_scale=has_scale,
+              has_bias=has_bias)
+    if schedule == "weight":
+        stripe_bytes = ws_stripe_bytes(K, block_n, block_k)
+        if stripe_bytes > WS_STRIPE_BUDGET_BYTES:
+            raise ValueError(
+                f"weight-stationary schedule needs a "
+                f"{stripe_bytes / 2**20:.1f} MB K-resident limb stripe "
+                f"(3 x Kp={Kp} x block_n={block_n}) > "
+                f"{WS_STRIPE_BUDGET_BYTES / 2**20:.0f} MB VMEM budget; "
+                f"use schedule='output' for this shape")
+        # j outer, i middle, k inner: the i == 0 sweep decodes each weight
+        # K-tile once into the K-resident scratch; later rows reuse it.
+        out = pl.pallas_call(
+            functools.partial(_exact_fused_ws_kernel, **kw),
+            grid=(Np // block_n, Mp // block_m, nsteps),
+            in_specs=[
+                pl.BlockSpec((block_m, block_k), lambda j, i, k: (i, k)),
+                pl.BlockSpec((block_k, block_n), lambda j, i, k: (k, j)),
+                pl.BlockSpec((1, block_n), lambda j, i, k: (0, j)),
+                pl.BlockSpec((1, block_n), lambda j, i, k: (0, j)),
+            ],
+            out_specs=pl.BlockSpec((block_m, block_n),
+                                   lambda j, i, k: (i, j)),
+            out_shape=jax.ShapeDtypeStruct((Mp, Np), jnp.float32),
+            scratch_shapes=[
+                pltpu.VMEM((nsteps, _N_LIMBS, block_k, block_n), jnp.int8),
+                pltpu.VMEM((_N_CLASSES, block_m, block_n), jnp.int32),
+                pltpu.VMEM((block_m, block_n), jnp.float32),
+            ],
+            compiler_params=_CompilerParams(
+                dimension_semantics=("parallel", "arbitrary", "arbitrary")),
+            interpret=interpret,
+        )(xc, wc, srow, brow)
+        return out[:M, :N]
     out = pl.pallas_call(
-        kernel,
-        grid=grid,
+        functools.partial(_exact_fused_kernel, **kw),
+        grid=(Mp // block_m, Np // block_n, nsteps),
         in_specs=[
             pl.BlockSpec((block_m, block_k), lambda i, j, k: (i, k)),
             pl.BlockSpec((block_k, block_n), lambda i, j, k: (k, j)),

@@ -27,10 +27,11 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.formats import E4M3, FPFormat, encode_bits
+from . import mgs_matmul as _mm
 from . import ref as _ref
 from .mgs_matmul import (ACTIVATIONS, mgs_matmul_dmac_pallas,
                          mgs_matmul_exact_fused_pallas,
-                         mgs_matmul_exact_pallas)
+                         mgs_matmul_exact_pallas, ws_stripe_bytes)
 
 __all__ = ["mgs_matmul", "apply_epilogue"]
 
@@ -79,11 +80,39 @@ def apply_epilogue(out, scale, bias, activation: str):
     return ACTIVATIONS[activation](out)
 
 
+def _fused_schedule(schedule: str, K: int, block_n: int,
+                    block_k: int) -> str:
+    """Validate/downgrade the fused-kernel schedule for this shape.
+
+    The weight-stationary schedule keeps a 3 x Kp x block_n int8 decoded
+    limb stripe resident in VMEM; shapes whose stripe exceeds the budget
+    fall back to the output-stationary schedule with a warning (never
+    silently, and never an error — the schedules are bit-identical).
+    """
+    if schedule != "weight":
+        return schedule
+    stripe = ws_stripe_bytes(K, block_n, block_k)
+    # read the budget off the kernel module (one binding) so the hard
+    # check in mgs_matmul_exact_fused_pallas can never disagree
+    budget = _mm.WS_STRIPE_BUDGET_BYTES
+    if stripe > budget:
+        warnings.warn(
+            f"weight-stationary schedule: K={K}, block_n={block_n} needs "
+            f"a {stripe / 2**20:.1f} MB K-resident limb stripe (> "
+            f"{budget / 2**20:.0f} MB VMEM budget); "
+            "falling back to the output-stationary schedule "
+            "(bit-identical, grid_m x more in-kernel weight decode).",
+            stacklevel=3)
+        return "output"
+    return schedule
+
+
 def mgs_matmul(x, w, fmt: FPFormat = E4M3, mode: str = "exact", *,
                use_kernel: bool = True, fused: bool = False,
                gate_subnormal: bool = True, block_m: int = 128,
                block_n: int = 128, block_k: int = 128,
-               flush_period: int | None = None, scale=None, bias=None,
+               flush_period: int | None = None, schedule: str = "output",
+               scale=None, bias=None,
                activation: str = "none", interpret: bool | None = None):
     """MGS quantized matmul: (..., K) @ (K, N) with MGS numerics.
 
@@ -96,6 +125,9 @@ def mgs_matmul(x, w, fmt: FPFormat = E4M3, mode: str = "exact", *,
     ``scale``/``bias``/``activation`` (exact mode only) apply
     ``activation(out * scale + bias)`` — inside the kernel when
     ``fused=True``, as a follow-up elementwise pass otherwise.
+    ``schedule`` selects the fused kernel's loop order ("output" /
+    "weight" — see ``mgs_matmul_exact_fused_pallas``); oversized
+    weight-stationary stripes fall back to "output" with a warning.
     """
     if interpret is None:
         interpret = _default_interpret()
@@ -126,7 +158,9 @@ def mgs_matmul(x, w, fmt: FPFormat = E4M3, mode: str = "exact", *,
         out = mgs_matmul_exact_fused_pallas(
             xc, wc, fmt, scale=scale, bias=bias, activation=activation,
             block_m=block_m, block_n=block_n, block_k=block_k,
-            flush_period=flush_period, interpret=interpret)
+            flush_period=flush_period,
+            schedule=_fused_schedule(schedule, K, block_n, block_k),
+            interpret=interpret)
     elif mode == "exact":
         # prepared weights without resident limb planes (built for a fused
         # config) fall back to decoding values from the packed codes

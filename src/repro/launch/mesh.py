@@ -14,7 +14,8 @@ from __future__ import annotations
 
 import jax
 
-__all__ = ["make_production_mesh", "make_mesh", "batch_axes"]
+__all__ = ["make_production_mesh", "make_mesh", "make_serve_mesh",
+           "batch_axes"]
 
 
 def _mesh(shape, axes):
@@ -35,6 +36,27 @@ def make_production_mesh(*, multi_pod: bool = False):
 def make_mesh(shape, axes):
     """Arbitrary mesh (tests, elastic restarts, reduced smoke meshes)."""
     return _mesh(tuple(shape), tuple(axes))
+
+
+def make_serve_mesh(model_parallel: int | None = None):
+    """(data, model) serving mesh over every visible device.
+
+    Args:
+      model_parallel: size of the model (tensor-parallel) axis; default
+        all devices (pure TP — the layout the serve rules expect for
+        single-host serving). Must divide the device count; the remainder
+        becomes the data axis.
+
+    Returns:
+      A ``("data", "model")`` mesh of shape
+      ``(device_count // model_parallel, model_parallel)``.
+    """
+    n = jax.device_count()
+    mp = model_parallel if model_parallel is not None else n
+    if mp < 1 or n % mp:
+        raise ValueError(f"model_parallel={mp} does not divide the "
+                         f"{n} visible devices")
+    return _mesh((n // mp, mp), ("data", "model"))
 
 
 def batch_axes(mesh) -> tuple:

@@ -4,10 +4,13 @@ A minimal but real engine: requests enter a queue, get batched (padded to
 the compiled batch size), prefilled into a shared KV cache, then decoded
 step-by-step with per-slot completion tracking and slot reuse. On this
 container it serves reduced configs (examples/serve_lm.py); on TPU the
-identical driver serves the full configs under the TP mesh.
+identical driver serves the full configs under the TP mesh. On a
+multi-device mesh the prepared-weight planes are built directly into
+their sharded layout (see docs/serving.md) — ``--mesh auto`` serves
+pure-TP over every visible device.
 
   python -m repro.launch.serve --arch deepseek-7b --reduced \
-      --batch 4 --prompt-len 32 --max-new 16
+      --batch 4 --prompt-len 32 --max-new 16 --mesh auto
 """
 
 from __future__ import annotations
@@ -20,15 +23,40 @@ from typing import Any, Dict, List, Optional
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import NamedSharding
 
 from repro.configs import get_config, reduced_config
 from repro.configs.base import ModelConfig
-from repro.launch.mesh import make_mesh
-from repro.models import decode_step, init_cache, init_params, prefill
+from repro.launch.mesh import make_mesh, make_serve_mesh
+from repro.models import (decode_step, init_cache, init_params, param_dims,
+                          prefill)
 from repro.parallel.sharding import make_rules, use_rules
-from repro.quant import prepare_params
+from repro.quant import PreparedWeight, prepare_params
 
 __all__ = ["ServeEngine", "Request", "main"]
+
+
+def _place_raw_leaves(params, dims, rules):
+    """device_put every raw array leaf onto its resolved mesh layout.
+
+    PreparedWeight subtrees are skipped — their planes were already built
+    into their sharded layout by ``prepare_params``.
+    """
+
+    def walk(node, dnode):
+        if isinstance(node, PreparedWeight):
+            return node
+        if isinstance(node, dict):
+            return {k: walk(v, dnode.get(k) if isinstance(dnode, dict)
+                            else None)
+                    for k, v in node.items()}
+        if not (isinstance(dnode, tuple) and hasattr(node, "shape")
+                and len(dnode) == getattr(node, "ndim", -1)):
+            return node
+        spec = rules.resolve(dnode, tuple(node.shape))
+        return jax.device_put(node, NamedSharding(rules.mesh, spec))
+
+    return walk(params, dims)
 
 
 @dataclasses.dataclass
@@ -48,20 +76,38 @@ class ServeEngine:
     in the request loop consumes the cached PreparedWeight planes instead
     of re-quantizing per request. ``quant.PREP_STATS`` counts builds, so
     monitoring (and tests) can assert the per-process-once invariant.
+
+    On a multi-device ``mesh`` the engine prepares each weight *directly
+    into its sharded layout*: plane PartitionSpecs are derived from the
+    weight's logical dims (``parallel.sharding.prepared_specs`` — codes
+    and limb planes inherit the weight's (in, out) layout, per-channel
+    scales follow the out dim), and the remaining raw parameters
+    (embeddings, norms, einsum weights) are placed by the same serve
+    rules. The MGS accumulator discipline is untouched by distribution:
+    sharded serving is bit-identical to the single-device fused path.
     """
 
     def __init__(self, cfg: ModelConfig, mesh, batch: int, max_len: int,
-                 params=None, seed: int = 0, eos_id: Optional[int] = None):
+                 params=None, dims=None, seed: int = 0,
+                 eos_id: Optional[int] = None):
         self.cfg = cfg
         self.mesh = mesh
         self.batch = batch
         self.max_len = max_len
         self.eos_id = eos_id
         self.rules = make_rules(mesh, "serve")
+        multi = int(np.prod(tuple(mesh.shape.values()))) > 1
         with use_rules(self.rules):
             if params is None:
-                params, _ = init_params(cfg, jax.random.PRNGKey(seed))
-            self.params = prepare_params(params, cfg.quant)
+                params, dims = init_params(cfg, jax.random.PRNGKey(seed))
+            elif dims is None and multi:
+                dims = param_dims(cfg)
+            self.params = prepare_params(
+                params, cfg.quant, dims=dims,
+                rules=self.rules if multi else None)
+            if multi and dims is not None:
+                self.params = _place_raw_leaves(self.params, dims,
+                                                self.rules)
             self._prefill = jax.jit(
                 lambda p, b, c: prefill(p, cfg, b, c))
             self._decode = jax.jit(
@@ -126,13 +172,18 @@ def main():
     ap.add_argument("--n-requests", type=int, default=8)
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--max-new", type=int, default=16)
-    ap.add_argument("--mesh", default="1x1")
+    ap.add_argument("--mesh", default="1x1",
+                    help='"DATAxMODEL" (e.g. 2x4) or "auto" (pure TP '
+                         "over every visible device)")
     args = ap.parse_args()
 
     cfg = (reduced_config(args.arch) if args.reduced
            else get_config(args.arch))
-    data_p, model_p = (int(x) for x in args.mesh.split("x"))
-    mesh = make_mesh((data_p, model_p), ("data", "model"))
+    if args.mesh == "auto":
+        mesh = make_serve_mesh()   # every visible device, pure TP
+    else:
+        data_p, model_p = (int(x) for x in args.mesh.split("x"))
+        mesh = make_mesh((data_p, model_p), ("data", "model"))
     rng = np.random.default_rng(0)
     reqs = [Request(rid=i,
                     prompt=rng.integers(1, cfg.vocab,

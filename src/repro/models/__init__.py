@@ -1,7 +1,7 @@
 # Model zoo: unified transformer stack covering every assigned architecture
 # family, with MGS-quantized linears as a first-class execution mode.
 from .transformer import (decode_step, forward, init_cache, init_params,
-                          loss_fn, prefill)
+                          loss_fn, param_dims, prefill)
 
 __all__ = ["decode_step", "forward", "init_cache", "init_params", "loss_fn",
-           "prefill"]
+           "param_dims", "prefill"]

@@ -34,8 +34,8 @@ from .ffn import ffn_apply, ffn_init
 from .mamba import SSMCache, mamba_apply, mamba_decode_step, mamba_init
 from .moe import moe_apply, moe_init
 
-__all__ = ["init_params", "forward", "loss_fn", "init_cache", "prefill",
-           "decode_step"]
+__all__ = ["init_params", "param_dims", "forward", "loss_fn", "init_cache",
+           "prefill", "decode_step"]
 
 
 # ---------------------------------------------------------------------------
@@ -181,6 +181,30 @@ def init_params(cfg: ModelConfig, key) -> Tuple[Dict, Dict]:
                              one_cross)
         f.child("cross", cp, cd)
     return f.collect()
+
+
+def param_dims(cfg: ModelConfig) -> Dict:
+    """Logical-dims tree of ``init_params(cfg, ·)`` without allocating.
+
+    Traces the init abstractly (``jax.eval_shape``) and captures the dims
+    side output — for parameters that arrive externally (checkpoint load),
+    where the serving/sharding path still needs every weight's logical
+    dims (e.g. to derive sharded PreparedWeight plane layouts) but
+    materializing a second parameter tree would waste device memory.
+
+    Returns:
+      A nested dict mirroring the ``init_params`` parameter tree, with a
+      tuple of logical dim names (or ``None``) per array leaf.
+    """
+    captured = {}
+
+    def trace(key):
+        params, dims = init_params(cfg, key)
+        captured["dims"] = dims
+        return params
+
+    jax.eval_shape(trace, jax.random.PRNGKey(0))
+    return captured["dims"]
 
 
 # ---------------------------------------------------------------------------

@@ -10,6 +10,11 @@ stays unsharded while the embed dim picks up the model axis.
 Activation constraints are applied through a context (``use_rules``): model
 code calls :func:`constrain` unconditionally; outside a rules context it is
 an identity, so the same model runs single-device tests unchanged.
+
+Prepared-weight serving (:mod:`repro.quant.prepared`) derives the mesh
+layout of each weight's kernel-ready planes from the same logical dims via
+:func:`prepared_specs` / :func:`prepared_plane_dims` (see the section at
+the bottom of this module).
 """
 
 from __future__ import annotations
@@ -22,7 +27,8 @@ import jax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 __all__ = ["Rules", "TRAIN_RULES", "make_rules", "train_rules", "use_rules",
-           "constrain", "resolve_spec", "current_rules", "named_sharding"]
+           "constrain", "resolve_spec", "current_rules", "named_sharding",
+           "prepared_plane_dims", "prepared_specs"]
 
 
 class Rules:
@@ -67,12 +73,21 @@ class Rules:
                 flat = cand if isinstance(cand, tuple) else (cand,)
                 if any(a not in names for a in flat):
                     continue  # axis absent from this mesh (e.g. single-pod)
-                if any(a in used for a in flat):
+                # canonical form: drop size-1 mesh axes (they shard
+                # nothing) and emit a bare axis instead of a 1-tuple —
+                # P(("data",)) and P("data") shard identically, and a
+                # spec free of degenerate axes is comparable to
+                # hand-written specs and emits no spurious partitioner
+                # work on collapsed meshes. (The single-pod batch_axes
+                # tuple used to leak through here as ('data',).)
+                eff = tuple(a for a in flat if self.mesh.shape[a] > 1)
+                if any(a in used for a in eff):
                     continue
-                if shape is not None and shape[i] % self.axis_size(cand):
+                if shape is not None and shape[i] % self.axis_size(eff):
                     continue
-                parts[i] = cand
-                used.update(flat)
+                if eff:
+                    parts[i] = eff[0] if len(eff) == 1 else eff
+                    used.update(eff)
                 break
         while parts and parts[-1] is None:
             parts.pop()
@@ -189,11 +204,22 @@ def use_rules(rules: Optional[Rules]):
 
 def constrain(x, dims: Tuple[Optional[str], ...]):
     """Apply a with_sharding_constraint from logical dims (no-op outside a
-    rules context)."""
+    rules context).
+
+    A spec that resolves fully replicated is skipped entirely: it
+    constrains nothing, and the dangling sharding custom-call would still
+    run the SPMD partitioner pipeline over the op — which on some
+    backends perturbs fusion decisions (and hence low-order float bits)
+    for no layout benefit. Skipping it keeps replicated mesh programs
+    bit-identical to their single-device compilation — the property the
+    sharded serving tests pin down.
+    """
     rules = current_rules()
     if rules is None:
         return x
     spec = rules.resolve(dims, tuple(x.shape))
+    if not any(part is not None for part in spec):
+        return x
     return jax.lax.with_sharding_constraint(
         x, NamedSharding(rules.mesh, spec))
 
@@ -211,3 +237,99 @@ def named_sharding(spec_tree, mesh: Mesh):
     return jax.tree.map(
         lambda s: NamedSharding(mesh, s), spec_tree,
         is_leaf=lambda s: isinstance(s, P))
+
+
+# ---------------------------------------------------------------------------
+# PreparedWeight plane specs
+# ---------------------------------------------------------------------------
+#
+# A ``quant.prepared.PreparedWeight`` stores a (*stack, K, *tail) weight as
+# three kernel-ready planes whose trailing output axes are *flattened*:
+#
+#   codes  (*stack, K, n)        packed FP8 codes, n = prod(tail)
+#   limbs  (*stack, 3, K, n)     balanced int8 limb planes (optional)
+#   scale  (*stack, 1, n) | (*stack,)   per-channel | per-tensor scales
+#
+# The planes must live on the mesh exactly where the owning weight's
+# logical dims put them: the K axis keeps the weight's input dim (e.g.
+# "embed" -> the FSDP axes), the flattened output axis inherits the
+# *leading* tail dim (e.g. ("heads", "head_dim") -> the "heads" mesh
+# axes, with divisibility checked against the head count so a shard
+# always covers whole heads), and per-channel scales follow the output
+# axis. The helpers below derive those dims and resolve them through the
+# same greedy, divisibility-checked machinery as every other parameter.
+
+
+def prepared_plane_dims(w_dims: Tuple[Optional[str], ...], rules: Rules, *,
+                        stacked: bool = False):
+    """Logical dims of a PreparedWeight's planes from the raw weight's dims.
+
+    Args:
+      w_dims: the owning weight's logical dims, ``(*stack, in, *tail)`` —
+        e.g. ``("layers", "embed", "heads", "head_dim")`` for a stacked
+        attention projection.
+      rules: the active :class:`Rules` (its priority order picks which
+        tail dim names the flattened output axis).
+      stacked: whether the weight carries a leading per-layer stack axis
+        (exactly one, matching ``prepare_weight(stacked=True)``).
+
+    Returns:
+      ``(codes_dims, limbs_dims, out_dim)``: dims tuples for the codes
+      and limbs planes, and the logical name chosen for the flattened
+      output axis. Only the *leading* tail dim may name it: a chunk of
+      the flattened axis then covers whole trailing slices (e.g. whole
+      heads), so the plane layout stays aligned with the raw weight's.
+      ``None`` when the leading tail dim has no mesh candidates.
+    """
+    n_stack = 1 if stacked else 0
+    stack_dims = tuple(w_dims[:n_stack])
+    in_dim = w_dims[n_stack]
+    tail_dims = tuple(w_dims[n_stack + 1:])
+    out_dim = None
+    if tail_dims and tail_dims[0] is not None and rules.table.get(
+            tail_dims[0]):
+        out_dim = tail_dims[0]
+    codes_dims = stack_dims + (in_dim, out_dim)
+    limbs_dims = stack_dims + (None, in_dim, out_dim)  # 3-limb axis local
+    return codes_dims, limbs_dims, out_dim
+
+
+def prepared_specs(w_dims: Tuple[Optional[str], ...],
+                   w_shape: Tuple[int, ...], rules: Rules, *,
+                   stacked: bool = False, per_channel: bool = False):
+    """PartitionSpecs for a PreparedWeight's planes.
+
+    Args:
+      w_dims / w_shape: logical dims and shape of the *raw* weight,
+        ``(*stack, K, *tail)`` (shape before flattening — the flattened
+        plane shapes are derived here).
+      rules: active sharding rules. Divisibility is checked against the
+        *leading tail dim's size* (e.g. the head count), not the
+        flattened output size: a mesh axis that does not divide it falls
+        back to replication exactly like the raw weight would, and a
+        shard of the flattened axis always covers whole trailing slices
+        (never a partial head).
+      stacked: leading per-layer stack axis present.
+      per_channel: whether the scale plane is per-output-channel,
+        shape ``(*stack, 1, n)`` (else per-tensor, shape ``(*stack,)``).
+
+    Returns:
+      ``(codes_spec, limbs_spec, scale_spec)`` PartitionSpecs, shaped for
+      the corresponding plane ranks (specs over the flattened ``n`` axis
+      — an axis dividing the leading tail dim also divides ``n``).
+    """
+    n_stack = 1 if stacked else 0
+    stack_shape = tuple(int(s) for s in w_shape[:n_stack])
+    K = int(w_shape[n_stack])
+    tail = tuple(int(s) for s in w_shape[n_stack + 1:])
+    out_size = tail[0] if tail else 1
+    codes_dims, limbs_dims, out_dim = prepared_plane_dims(
+        w_dims, rules, stacked=stacked)
+    codes_spec = rules.resolve(codes_dims, stack_shape + (K, out_size))
+    limbs_spec = rules.resolve(limbs_dims, stack_shape + (3, K, out_size))
+    if per_channel:
+        scale_spec = rules.resolve(tuple(w_dims[:n_stack]) + (None, out_dim),
+                                   stack_shape + (1, out_size))
+    else:
+        scale_spec = rules.resolve(tuple(w_dims[:n_stack]), stack_shape)
+    return codes_spec, limbs_spec, scale_spec

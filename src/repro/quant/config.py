@@ -16,10 +16,11 @@ from typing import Optional
 
 from repro.core.formats import E4M3, E5M2, FPFormat, get_format
 
-__all__ = ["QuantConfig", "DTYPES", "ACCUMS"]
+__all__ = ["QuantConfig", "DTYPES", "ACCUMS", "SCHEDULES"]
 
 DTYPES = ("none", "int8", "int5", "int4", "fp8_e4m3", "fp8_e5m2")
 ACCUMS = ("wide", "mgs_exact", "mgs_dmac", "clip", "wrap", "swamp")
+SCHEDULES = ("output", "weight")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -43,6 +44,13 @@ class QuantConfig:
         the dequant-scale/bias/activation epilogue fused into the kernel;
         False streams pre-decomposed int8 limb planes (3 bytes/elem, the
         A/B baseline).
+      schedule: fused-kernel loop order. "output" (default) is
+        output-stationary: both operand tiles are decoded at every grid
+        step. "weight" is the K-resident weight-stationary schedule: the
+        decoded weight limb stripe is cached in VMEM scratch across the
+        M-grid axis, cutting in-kernel weight decode work grid_m-fold
+        (bit-identical results; falls back to "output" with a warning
+        when the stripe exceeds the VMEM budget).
       block_m/n/k: Pallas tile sizes (MXU-aligned defaults).
       flush_target: probabilistic overflow budget used by the Markov
         planner (core.markov.plan_flush_period) to derive the kernel flush
@@ -58,6 +66,7 @@ class QuantConfig:
     gate_subnormal: bool = True
     use_kernel: bool = False
     fused: bool = False
+    schedule: str = "output"
     block_m: int = 128
     block_n: int = 128
     block_k: int = 128
@@ -68,6 +77,9 @@ class QuantConfig:
             raise ValueError(f"dtype {self.dtype!r} not in {DTYPES}")
         if self.accum not in ACCUMS:
             raise ValueError(f"accum {self.accum!r} not in {ACCUMS}")
+        if self.schedule not in SCHEDULES:
+            raise ValueError(f"schedule {self.schedule!r} not in "
+                             f"{SCHEDULES}")
 
     @property
     def is_fp8(self) -> bool:

@@ -19,6 +19,15 @@ limbs / scale planes along the leading layer axis transparently.
 ``prepare_weight`` keeps a process-level cache keyed by parameter
 identity; ``PREP_STATS`` counts builds vs cache hits so tests (and
 monitoring) can verify each weight is prepared exactly once per process.
+
+On a multi-device mesh the planes are built **directly into their sharded
+layout**: pass ``shardings`` (one :class:`jax.sharding.NamedSharding` per
+plane, usually derived via :func:`repro.parallel.sharding.prepared_specs`)
+and the quantize+decompose computation is jitted with those
+``out_shardings`` — no full replicated copy of the planes ever
+materializes, and re-preparation on the same mesh is a cache hit like any
+other. ``prepare_params(..., dims=..., rules=...)`` derives the plane
+shardings from each weight's logical dims automatically.
 """
 
 from __future__ import annotations
@@ -108,8 +117,8 @@ def _pw_unflatten(aux, children):
 jax.tree_util.register_pytree_node(PreparedWeight, _pw_flatten, _pw_unflatten)
 
 
-def _build(w, cfg: QuantConfig, stacked: bool,
-           keep_limbs: bool) -> PreparedWeight:
+def _build(w, cfg: QuantConfig, stacked: bool, keep_limbs: bool,
+           shardings=None) -> PreparedWeight:
     fmt = cfg.fmt
     w = jnp.asarray(w)
     if stacked:
@@ -117,45 +126,81 @@ def _build(w, cfg: QuantConfig, stacked: bool,
     else:
         stack, (K, *tail) = ((), w.shape)
     n = int(np.prod(tail)) if tail else 1
-    w2 = w.reshape(stack + (K, n)).astype(jnp.float32)
     axis = 0 if cfg.per_channel else None
     margin = cfg.fp8_margin
 
-    def quantize_one(wi):
-        return quantize_fp8(wi, fmt, axis=axis, margin=margin)
+    def compute(wr):
+        w2 = wr.reshape(stack + (K, n)).astype(jnp.float32)
 
-    if stacked:
-        qt = jax.vmap(quantize_one)(w2)   # per-layer scales
+        def quantize_one(wi):
+            return quantize_fp8(wi, fmt, axis=axis, margin=margin)
+
+        qt = (jax.vmap(quantize_one)(w2) if stacked   # per-layer scales
+              else quantize_one(w2))
+        codes = encode_bits(qt.q, fmt)
+        limbs = limb_decompose(qt.q, fmt)     # (3, *stack, K, n)
+        if stacked:
+            limbs = jnp.moveaxis(limbs, 0, 1)  # (*stack, 3, K, n)
+        # observed limb statistics feed the Markov flush planner even when
+        # the limb planes themselves are not kept resident — and when they
+        # are not, the plane is not a jit output, so XLA fuses the
+        # decompose into the std reduction instead of materializing a
+        # 3-byte/elem buffer that would be dropped immediately.
+        sigma = jnp.std(limbs.astype(jnp.float32))
+        if keep_limbs:
+            return codes, limbs, qt.scale, sigma
+        return codes, qt.scale, sigma
+
+    limbs = None
+    if shardings is not None:
+        # build straight into the mesh layout: the planes come out of the
+        # jit already sharded — never materialized replicated-then-moved.
+        codes_sh, limbs_sh, scale_sh = shardings
+        if keep_limbs:
+            out_sh = (codes_sh, limbs_sh, scale_sh, None)
+            codes, limbs, scale, sigma = jax.jit(
+                compute, out_shardings=out_sh)(w)
+        else:
+            codes, scale, sigma = jax.jit(
+                compute, out_shardings=(codes_sh, scale_sh, None))(w)
+    elif keep_limbs:
+        codes, limbs, scale, sigma = compute(w)
     else:
-        qt = quantize_one(w2)
-    codes = encode_bits(qt.q, fmt)
-    limbs = limb_decompose(qt.q, fmt)     # (3, *stack, K, n)
-    if stacked:
-        limbs = jnp.moveaxis(limbs, 0, 1)  # (*stack, 3, K, n)
-    # observed limb statistics feed the Markov flush planner even when the
-    # limb planes themselves are not kept resident
-    limb_sigma = float(np.std(np.asarray(limbs, np.float32)))
+        codes, scale, sigma = compute(w)
     PREP_STATS["prepared"] += 1
-    return PreparedWeight(codes, limbs if keep_limbs else None, qt.scale,
-                          fmt.name, tuple(tail), limb_sigma)
+    return PreparedWeight(codes, limbs, scale, fmt.name, tuple(tail),
+                          float(sigma))
 
 
 def prepare_weight(w, cfg: QuantConfig, *, stacked: bool = False,
-                   keep_limbs: Optional[bool] = None) -> PreparedWeight:
+                   keep_limbs: Optional[bool] = None,
+                   shardings=None) -> PreparedWeight:
     """Quantize + decompose ``w`` under ``cfg``, cached per process.
 
-    ``w``: (K, *tail) weight, or (L, K, *tail) stacked per-layer weights
-    (``stacked=True``) — scales/codes/limbs are then computed per layer
-    slice so ``lax.scan`` consumption matches per-layer quantization.
+    Args:
+      w: ``(K, *tail)`` weight, or ``(L, K, *tail)`` stacked per-layer
+        weights (``stacked=True``) — scales/codes/limbs are then computed
+        per layer slice so ``lax.scan`` consumption matches per-layer
+        quantization.
+      cfg: quantization config; must be an fp8 dtype.
+      stacked: treat the leading axis as a per-layer stack.
+      keep_limbs: keep the 3-byte/elem pre-decomposed planes resident;
+        default: only when ``cfg`` streams them (``use_kernel and not
+        fused``). Paths that find them missing fall back to the packed
+        codes.
+      shardings: optional ``(codes, limbs, scale)`` triple of
+        :class:`jax.sharding.NamedSharding` (see
+        :func:`repro.parallel.sharding.prepared_specs`). When given, the
+        planes are built directly into that mesh layout via jit
+        ``out_shardings`` — the once-per-process build is also the
+        placement, with no replicate-then-reshard step.
 
-    ``keep_limbs`` keeps the 3-byte/elem pre-decomposed planes resident;
-    default: only when ``cfg`` streams them (``use_kernel and not
-    fused``). Paths that find them missing fall back to the packed codes.
-
-    The cache is keyed on parameter identity + the quantization-relevant
-    config fields, holding the source array only weakly — dropping the
-    raw weight after preparation releases its memory. Re-preparing the
-    same array is a cache hit (counted in ``PREP_STATS``, not re-built).
+    Returns:
+      The cached :class:`PreparedWeight`. The cache is keyed on parameter
+      identity + the quantization-relevant config fields + the plane
+      shardings, holding the source array only weakly — dropping the raw
+      weight after preparation releases its memory. Re-preparing the same
+      array is a cache hit (counted in ``PREP_STATS``, not re-built).
     """
     if not cfg.is_fp8:
         raise ValueError(f"prepare_weight requires an fp8 dtype, got "
@@ -163,12 +208,13 @@ def prepare_weight(w, cfg: QuantConfig, *, stacked: bool = False,
     if keep_limbs is None:
         keep_limbs = cfg.use_kernel and not cfg.fused
     key = (id(w), cfg.dtype, cfg.accum, cfg.per_channel, bool(stacked),
-           bool(keep_limbs))
+           bool(keep_limbs),
+           None if shardings is None else tuple(shardings))
     hit = _CACHE.get(key)
     if hit is not None and hit[0]() is w:
         PREP_STATS["cache_hits"] += 1
         return hit[1]
-    pw = _build(w, cfg, stacked, keep_limbs)
+    pw = _build(w, cfg, stacked, keep_limbs, shardings)
     try:
         # weak ref: cache validity without pinning the raw weight (the
         # prepared planes replace it in the serving path)
@@ -197,7 +243,7 @@ _PROJ_WEIGHTS = {
 _STACKED_ROOTS = {"layers", "encoder", "cross"}
 
 
-def prepare_params(params, cfg: QuantConfig):
+def prepare_params(params, cfg: QuantConfig, *, dims=None, rules=None):
     """Return ``params`` with every proj-consumed weight prepared.
 
     Walks the nested-dict parameter tree of ``models.transformer`` and
@@ -205,17 +251,45 @@ def prepare_params(params, cfg: QuantConfig):
     (leaving embeddings, norms, einsum weights, and biases untouched).
     Stacked per-layer subtrees get per-layer-slice scales. Idempotent and
     cache-backed: calling twice on the same tree builds nothing new.
+
+    Args:
+      params: nested-dict parameter tree (``models.init_params``).
+      cfg: quantization config; non-MGS configs pass through untouched.
+      dims: matching logical-dims tree (``init_params``'s second return /
+        ``models.param_dims``). Optional; required for sharded builds.
+      rules: :class:`repro.parallel.sharding.Rules` for the serving mesh.
+        When both ``dims`` and ``rules`` are given, each weight's plane
+        shardings are derived from its logical dims
+        (:func:`repro.parallel.sharding.prepared_specs`) and the planes
+        are built directly into the mesh layout.
+
+    Returns:
+      The parameter tree with proj weights replaced by PreparedWeights.
     """
     if not (cfg.is_fp8 and cfg.accum in ("mgs_exact", "mgs_dmac")):
         return params
+    shard = dims is not None and rules is not None
+    if shard:
+        from jax.sharding import NamedSharding
+        from repro.parallel.sharding import prepared_specs
 
-    def walk(node, path):
+    def walk(node, dnode, path):
         if isinstance(node, dict):
-            return {k: walk(v, path + (k,)) for k, v in node.items()}
+            return {k: walk(v, dnode.get(k) if isinstance(dnode, dict)
+                            else None, path + (k,))
+                    for k, v in node.items()}
         if (len(path) >= 2 and path[-1] in _PROJ_WEIGHTS.get(path[-2], ())
                 and getattr(node, "ndim", 0) >= 2):
             stacked = any(p in _STACKED_ROOTS for p in path)
-            return prepare_weight(node, cfg, stacked=stacked)
+            shardings = None
+            if shard and isinstance(dnode, tuple) and len(dnode) == node.ndim:
+                specs = prepared_specs(dnode, node.shape, rules,
+                                       stacked=stacked,
+                                       per_channel=cfg.per_channel)
+                shardings = tuple(NamedSharding(rules.mesh, s)
+                                  for s in specs)
+            return prepare_weight(node, cfg, stacked=stacked,
+                                  shardings=shardings)
         return node
 
-    return walk(params, ())
+    return walk(params, dims, ())

@@ -96,6 +96,7 @@ def qmatmul(x, w, cfg: QuantConfig, out_dtype=None, *, bias=None,
                     block_k=cfg.block_k,
                     flush_period=_exact_flush_period(
                         cfg, w.limb_sigma if prepared else None),
+                    schedule=cfg.schedule,
                     scale=scale, bias=bias, activation=activation)
                 return out.astype(out_dtype)
             out = kops.mgs_matmul(

@@ -12,3 +12,6 @@ def rng():
 
 def pytest_configure(config):
     config.addinivalue_line("markers", "slow: long-running test")
+    config.addinivalue_line(
+        "markers", "multidevice: runs natively only under the forced-"
+        "multi-device CI shard (XLA_FLAGS host device count >= 8)")

@@ -114,6 +114,69 @@ def test_fused_rejects_unknown_activation(rng):
                                       interpret=True)
 
 
+@pytest.mark.parametrize("mkn", SHAPES)
+def test_weight_stationary_bit_identical(rng, mkn):
+    """The K-resident weight-stationary schedule caches decoded weight
+    limbs across the M-grid axis; results must stay bit-identical to the
+    output-stationary kernel and the jnp oracle."""
+    M, K, N = mkn
+    x = jnp.asarray(_fp8(rng, (M, K)))
+    w = jnp.asarray(_fp8(rng, (K, N)))
+    xc, wc = formats.encode_bits(x, _F), formats.encode_bits(w, _F)
+    ws = mgs_matmul_exact_fused_pallas(xc, wc, _F, block_m=32, block_n=32,
+                                       block_k=64, schedule="weight",
+                                       interpret=True)
+    want = ref.mgs_matmul_ref(x, w, _F, "exact")
+    np.testing.assert_array_equal(np.asarray(ws), np.asarray(want))
+
+
+def test_weight_stationary_epilogue_and_flush(rng):
+    """Schedules agree bit-for-bit with mid-K flushes + fused epilogue."""
+    M, K, N = 64, 512, 24
+    x = jnp.asarray(_fp8(rng, (M, K)))
+    w = jnp.asarray(_fp8(rng, (K, N)))
+    xc, wc = formats.encode_bits(x, _F), formats.encode_bits(w, _F)
+    scale = jnp.asarray(rng.uniform(0.5, 2.0, (1, N)).astype(np.float32))
+    bias = jnp.asarray(rng.normal(0, 1, (N,)).astype(np.float32))
+    for act in ("none", "gelu"):
+        kw = dict(scale=scale, bias=bias, activation=act, block_m=16,
+                  block_n=8, block_k=64, flush_period=2, interpret=True)
+        ws = mgs_matmul_exact_fused_pallas(xc, wc, _F, schedule="weight",
+                                           **kw)
+        os_ = mgs_matmul_exact_fused_pallas(xc, wc, _F, **kw)
+        np.testing.assert_array_equal(np.asarray(ws), np.asarray(os_))
+
+
+def test_weight_stationary_config_and_fallback(rng, monkeypatch):
+    """cfg.schedule plumbs through qmatmul; oversized K-resident stripes
+    fall back to the output schedule with a warning, never an error."""
+    import warnings
+
+    cfg_ws = dataclasses.replace(_CFG, fused=True, schedule="weight")
+    x = jnp.asarray(rng.normal(0, 1, (64, 96)).astype(np.float32))
+    w = jnp.asarray(rng.normal(0, 0.1, (96, 16)).astype(np.float32))
+    np.testing.assert_array_equal(
+        np.asarray(qmatmul(x, w, cfg_ws)),
+        np.asarray(qmatmul(x, w, dataclasses.replace(cfg_ws,
+                                                     schedule="output"))))
+    with pytest.raises(ValueError, match="schedule"):
+        dataclasses.replace(_CFG, schedule="diagonal")
+    from repro.kernels import mgs_matmul as mm, ops
+    monkeypatch.setattr(mm, "WS_STRIPE_BUDGET_BYTES", 1024)
+    xb = jnp.asarray(_fp8(rng, (8, 96)))
+    wb = jnp.asarray(_fp8(rng, (96, 8)))
+    with warnings.catch_warnings(record=True) as rec:
+        warnings.simplefilter("always")
+        out = ops.mgs_matmul(xb, wb, _F, "exact", fused=True,
+                             schedule="weight", block_m=8, block_n=32,
+                             block_k=32)
+    assert any("weight-stationary" in str(r.message) for r in rec)
+    np.testing.assert_array_equal(
+        np.asarray(out),
+        np.asarray(ops.mgs_matmul(xb, wb, _F, "exact", fused=True,
+                                  block_m=8, block_n=32, block_k=32)))
+
+
 def test_ops_dispatch_fused_matches_unfused(rng):
     x = jnp.asarray(_fp8(rng, (2, 5, 96)))
     w = jnp.asarray(_fp8(rng, (96, 24)))

@@ -1,0 +1,192 @@
+"""Sharded prepared-weight serving (ISSUE-2).
+
+Multi-device behaviour runs in subprocesses with forced host devices
+(per the project rule, the main pytest process sees exactly 1 device).
+A few tests are additionally marked ``multidevice`` and run natively in
+the forced-8-device CI shard (scripts/ci.sh) where jax.device_count()
+is already 8 at import time.
+"""
+
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+_SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+def _run(code: str, devices: int = 8, timeout: int = 420):
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
+    env["PYTHONPATH"] = _SRC + os.pathsep + env.get("PYTHONPATH", "")
+    out = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                         capture_output=True, text=True, timeout=timeout,
+                         env=env)
+    assert out.returncode == 0, out.stderr[-4000:]
+    return out.stdout
+
+
+_SETUP = """
+    import dataclasses, json
+    import jax, jax.numpy as jnp, numpy as np
+    from repro.configs import reduced_config
+    from repro.launch.mesh import make_mesh, make_serve_mesh
+    from repro.launch.serve import Request, ServeEngine
+    from repro.models import init_cache, init_params
+    from repro.quant import PREP_STATS, QuantConfig
+
+    cfg = reduced_config("deepseek-7b")
+    cfg = dataclasses.replace(cfg, quant=QuantConfig(
+        dtype="fp8_e4m3", accum="mgs_exact", use_kernel=True, fused=True,
+        block_m=32, block_n=32, block_k=32))
+    params, dims = init_params(cfg, jax.random.PRNGKey(0))
+"""
+
+
+def test_sharded_fused_matmul_bit_identical_to_single_device():
+    """The sharded fused MGS matmul == the single-device reference, bit
+    for bit: sharded prepared planes feed the same kernel, and the
+    accumulator discipline survives distribution unchanged."""
+    out = _run(_SETUP + """
+    from jax.sharding import NamedSharding
+    from repro.parallel.sharding import make_rules, prepared_specs
+    from repro.quant import prepare_weight, qmatmul
+    from repro.kernels import ref
+    from repro.core import formats
+
+    qc = cfg.quant
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(0, 1, (4, 8, 96)).astype(np.float32))
+    w = jnp.asarray(rng.normal(0, 0.1, (96, 8, 16)).astype(np.float32))
+
+    mesh = make_serve_mesh()                       # (1, 8) pure TP
+    rules = make_rules(mesh, "serve")
+    specs = prepared_specs(("embed", "heads", "head_dim"), w.shape, rules)
+    sh = tuple(NamedSharding(mesh, s) for s in specs)
+    pw_sharded = prepare_weight(w, qc, shardings=sh)
+    pw_local = prepare_weight(jnp.array(np.asarray(w)), qc)
+
+    got = jax.jit(lambda x, pw: qmatmul(x, pw, qc))(x, pw_sharded)
+    want = qmatmul(x, pw_local, qc)
+    print(json.dumps({
+        "ndev": jax.device_count(),
+        "plane_sharded": len(pw_sharded.codes.sharding.device_set) > 1,
+        "bitwise": bool((np.asarray(got) == np.asarray(want)).all())}))
+    """)
+    res = json.loads(out.strip().splitlines()[-1])
+    assert res["ndev"] == 8
+    assert res["plane_sharded"]
+    assert res["bitwise"]
+
+
+@pytest.mark.slow
+def test_sharded_serve_engine_bit_identical_logits():
+    """ISSUE-2 acceptance: an 8-device sharded ServeEngine with prepared
+    weights produces bit-identical logits (and greedy tokens) to the
+    single-device fused path."""
+    out = _run(_SETUP + """
+    rng = np.random.default_rng(0)
+    prompt = rng.integers(1, cfg.vocab, 8).astype(np.int32)
+    toks = jnp.asarray(np.stack([prompt, prompt]))
+    from repro.parallel.sharding import use_rules
+
+    def engine_logits(mesh):
+        e = ServeEngine(cfg, mesh, batch=2, max_len=16, params=params,
+                        dims=dims)
+        reqs = [Request(rid=0, prompt=prompt, max_new_tokens=4)]
+        e.run(reqs)
+        cache, _ = init_cache(cfg, 2, 16)
+        with use_rules(e.rules):
+            lg, _ = e._prefill(e.params, {"tokens": toks}, cache)
+        return e, np.asarray(lg), reqs[0].out_tokens
+
+    e1, lg1, toks1 = engine_logits(make_mesh((1, 1), ("data", "model")))
+    e8, lg8, toks8 = engine_logits(make_serve_mesh())
+    pw = e8.params["layers"]["ffn"]["wg"]
+    print(json.dumps({
+        "ndev": jax.device_count(),
+        "codes_sharded": len(pw.codes.sharding.device_set) == 8,
+        "logits_bitwise": bool((lg1 == lg8).all()),
+        "tokens_equal": toks1 == toks8}))
+    """, timeout=560)
+    res = json.loads(out.strip().splitlines()[-1])
+    assert res["ndev"] == 8
+    assert res["codes_sharded"]
+    assert res["logits_bitwise"]
+    assert res["tokens_equal"]
+
+
+@pytest.mark.slow
+def test_sharded_engine_prepares_once_per_process():
+    """The once-per-process PreparedWeight invariant holds on a mesh:
+    serving more requests (or rebuilding the engine on the same params)
+    builds nothing new."""
+    out = _run(_SETUP + """
+    mesh = make_serve_mesh()
+    e = ServeEngine(cfg, mesh, batch=2, max_len=16, params=params,
+                    dims=dims)
+    n0 = PREP_STATS["prepared"]
+    rng = np.random.default_rng(0)
+    reqs = [Request(rid=i, prompt=rng.integers(1, cfg.vocab, 8).astype(
+        np.int32), max_new_tokens=3) for i in range(4)]
+    e.run(reqs)
+    n1 = PREP_STATS["prepared"]
+    e2 = ServeEngine(cfg, mesh, batch=2, max_len=16, params=params,
+                     dims=dims)
+    n2 = PREP_STATS["prepared"]
+    print(json.dumps({"run_builds": n1 - n0, "rebuild_builds": n2 - n1,
+                      "hits": PREP_STATS["cache_hits"] > 0}))
+    """, timeout=560)
+    res = json.loads(out.strip().splitlines()[-1])
+    assert res["run_builds"] == 0
+    assert res["rebuild_builds"] == 0
+    assert res["hits"]
+
+
+# ---------------------------------------------------------------------------
+# native multi-device tests (the forced-8-device CI shard)
+# ---------------------------------------------------------------------------
+
+
+def _native_device_count():
+    import jax
+    return jax.device_count()
+
+
+@pytest.mark.multidevice
+@pytest.mark.skipif(_native_device_count() < 8,
+                    reason="needs XLA_FLAGS forced >= 8 host devices "
+                           "(scripts/ci.sh multi-device shard)")
+def test_native_sharded_prepare_matches_local():
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+    from jax.sharding import NamedSharding
+
+    from repro.launch.mesh import make_serve_mesh
+    from repro.parallel.sharding import make_rules, prepared_specs
+    from repro.quant import QuantConfig, prepare_weight
+
+    qc = QuantConfig(dtype="fp8_e4m3", accum="mgs_exact", use_kernel=True,
+                     fused=True, per_channel=True)
+    rng = np.random.default_rng(0)
+    w = jnp.asarray(rng.normal(0, 0.1, (2, 64, 8, 16)).astype(np.float32))
+    mesh = make_serve_mesh()
+    rules = make_rules(mesh, "serve")
+    specs = prepared_specs(("layers", "embed", "heads", "head_dim"),
+                           w.shape, rules, stacked=True, per_channel=True)
+    sh = tuple(NamedSharding(mesh, s) for s in specs)
+    pw = prepare_weight(w, qc, stacked=True, shardings=sh)
+    pw_local = prepare_weight(jnp.array(np.asarray(w)), qc, stacked=True)
+    assert len(pw.codes.sharding.device_set) > 1
+    np.testing.assert_array_equal(np.asarray(pw.codes),
+                                  np.asarray(pw_local.codes))
+    np.testing.assert_array_equal(np.asarray(pw.scale),
+                                  np.asarray(pw_local.scale))
+    # limb_sigma is a statistical planner input, not a kernel plane: the
+    # sharded jit may group the f32 std reduction differently
+    assert abs(pw.limb_sigma - pw_local.limb_sigma) < 1e-3 * abs(
+        pw_local.limb_sigma)
