@@ -34,26 +34,34 @@ def hbm_bytes_exact(M: int, K: int, N: int, fused: bool) -> dict:
 
 def decode_tiles(M: int, K: int, N: int, bm: int, bn: int, bk: int,
                  schedule: str) -> dict:
-    """In-kernel weight-decode work (tiles decoded) of the fused kernel.
+    """In-kernel operand-decode work (tiles decoded) of the fused kernel.
 
-    Output-stationary decodes the (bk, bn) weight tile at every grid
-    step: grid_m * grid_n * grid_k decodes. The K-resident
-    weight-stationary schedule decodes each tile once per output column
-    (the i == 0 sweep): grid_n * grid_k — a grid_m-fold reduction.
-    Activation decode work is grid_n * (grid_m * grid_k) either way.
+    Output-stationary decodes both operand tiles at every grid step:
+    grid_m * grid_n * grid_k decodes each. The K-resident
+    weight-stationary schedule decodes each weight tile once per output
+    column (the i == 0 sweep): grid_n * grid_k — a grid_m-fold weight
+    reduction. The symmetric activation-stationary schedule decodes each
+    activation K-tile once per output row (the j == 0 sweep):
+    grid_m * grid_k — a grid_n-fold activation reduction (wide-N layers
+    such as the logits head).
     """
     gm, gn, gk = -(-M // bm), -(-N // bn), -(-K // bk)
     w_tiles = gn * gk if schedule == "weight" else gm * gn * gk
-    return {"w_tiles": w_tiles, "x_tiles": gm * gn * gk,
-            "grid_m": gm, "reduction": gm if schedule == "weight" else 1}
+    x_tiles = gm * gk if schedule == "activation" else gm * gn * gk
+    reduction = {"weight": gm, "activation": gn}.get(schedule, 1)
+    return {"w_tiles": w_tiles, "x_tiles": x_tiles,
+            "grid_m": gm, "grid_n": gn, "reduction": reduction}
 
 
 def run(csv: Csv):
     rng = np.random.default_rng(0)
     f = formats.E4M3
-    # the last shape has grid_m = 4 so the weight-stationary schedule's
-    # grid_m-fold decode reduction is visible in the report
-    for (M, K, N) in [(64, 256, 64), (128, 512, 128), (512, 256, 128)]:
+    # (512, 256, 128) has grid_m = 4 so the weight-stationary schedule's
+    # grid_m-fold decode reduction is visible in the report; the wide-N
+    # (128, 256, 512) shape (grid_n = 4) does the same for the
+    # activation-stationary schedule (the logits-head shape class)
+    for (M, K, N) in [(64, 256, 64), (128, 512, 128), (512, 256, 128),
+                      (128, 256, 512)]:
         x = jnp.asarray(np.asarray(formats.round_to_format(
             rng.normal(0, 1, (M, K)).astype(np.float32), f)))
         w = jnp.asarray(np.asarray(formats.round_to_format(
@@ -68,6 +76,10 @@ def run(csv: Csv):
                                              block_k=128), n=5)
         us_ws = timeit(lambda: ops.mgs_matmul(x, w, f, "exact", fused=True,
                                               schedule="weight",
+                                              block_m=128, block_n=128,
+                                              block_k=128), n=5)
+        us_as = timeit(lambda: ops.mgs_matmul(x, w, f, "exact", fused=True,
+                                              schedule="activation",
                                               block_m=128, block_n=128,
                                               block_k=128), n=5)
         us_r = timeit(lambda: ref.mgs_matmul_ref(x, w, f, "exact"), n=3)
@@ -94,6 +106,16 @@ def run(csv: Csv):
             f"w_decode_tiles={dt_w['w_tiles']};"
             f"w_decode_tiles_output={dt_o['w_tiles']};"
             f"decode_reduction={dt_w['reduction']}x;"
+            f"hbm_operand_bytes={bf['operand']}")
+        # ISSUE-3: K-resident activation-stationary schedule — the
+        # symmetric twin, cutting activation decode grid_n-fold.
+        dt_a = decode_tiles(M, K, N, 128, 128, 128, "activation")
+        csv.add(
+            f"kernel/exact_fused_as_interp/{M}x{K}x{N}", us_as,
+            f"output_stationary_us={us_f:.0f};"
+            f"x_decode_tiles={dt_a['x_tiles']};"
+            f"x_decode_tiles_output={dt_o['x_tiles']};"
+            f"decode_reduction={dt_a['reduction']}x;"
             f"hbm_operand_bytes={bf['operand']}")
     # structural accounting: the limb kernel runs 9 int8 MXU passes per
     # bf16-equivalent matmul; v5e int8 throughput ~2x bf16 -> ~4.5x

@@ -9,10 +9,15 @@ export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 # suite so it is reachable while known seed failures keep tier-1 red.)
 python scripts/check_docs.py
 
-# Forced-multi-device shard: the native sharded-serving tests need >= 8
+# Forced-multi-device shards: the native sharded-serving tests need >= 8
 # logical devices at jax init, and the project rule keeps the main
-# pytest process at exactly 1 device — so they run as a separate shard.
+# pytest process at exactly 1 device — so they run as separate shards.
+# Pure-TP shard (PR 2): sharded prepared planes on the model axis.
 XLA_FLAGS="--xla_force_host_platform_device_count=8" \
     python -m pytest -x -q -m multidevice tests/test_sharded_serving.py
+# FSDP (data > 1) shard (ISSUE-3): data-axis-sharded prepared planes,
+# pinning the cross-mesh qeinsum bit-identity on a pure data mesh.
+XLA_FLAGS="--xla_force_host_platform_device_count=8" \
+    python -m pytest -x -q -m multidevice tests/test_qeinsum.py
 
 python -m pytest -x -q "$@"

@@ -292,39 +292,52 @@ def _exact_fused_kernel(xc_ref, wc_ref, scale_ref, bias_ref, o_ref, acc_i,
                                activation, has_scale, has_bias)
 
 
-def _exact_fused_ws_kernel(xc_ref, wc_ref, scale_ref, bias_ref, o_ref,
-                           w_limbs, acc_i, acc_f, *, nsteps: int,
-                           flush_period: int, out_scale: float,
-                           fmt: FPFormat, activation: str, has_scale: bool,
-                           has_bias: bool):
-    """K-resident weight-stationary schedule: grid (j, i, k).
+def _exact_fused_stationary_kernel(xc_ref, wc_ref, scale_ref, bias_ref,
+                                   o_ref, limbs, acc_i, acc_f, *,
+                                   cache_weight: bool, nsteps: int,
+                                   flush_period: int, out_scale: float,
+                                   fmt: FPFormat, activation: str,
+                                   has_scale: bool, has_bias: bool):
+    """One K-resident stationary kernel body for both cached operands.
 
-    The output-stationary kernel re-decodes the (bk, bn) weight tile at
-    every (i, j, k) step — the same tile ``grid_m`` times. Here the i
-    (M-grid) axis sits *outside* the K loop: the i == 0 sweep decodes
-    each weight K-tile once into the K-resident ``w_limbs`` VMEM scratch
-    (3 limb planes x the whole padded K stripe of output column j), and
-    every later i row reuses the cached limbs — in-kernel weight decode
-    work drops ``grid_m``-fold. Accumulator/flush/epilogue logic is
-    identical to the output-stationary kernel, so results are
-    bit-identical.
+    The output-stationary kernel re-decodes both operand tiles at every
+    grid step. The stationary schedules put the *other* operand's grid
+    axis at ``program_id(1)``, so its first sweep (``pid == 0``) decodes
+    each K-tile of the cached operand once into the K-resident ``limbs``
+    VMEM scratch (3 limb planes x the whole padded K stripe) and every
+    later sweep reuses it:
+
+    * ``cache_weight=True`` — weight-stationary, grid (j, i, k): the
+      i == 0 sweep caches the weight stripe of output column j; weight
+      decode work drops ``grid_m``-fold.
+    * ``cache_weight=False`` — activation-stationary, grid (i, j, k):
+      the j == 0 sweep caches the activation stripe of output row i;
+      activation decode work drops ``grid_n``-fold (wide-N layers such
+      as the logits head).
+
+    Accumulator/flush/epilogue logic is identical to the
+    output-stationary kernel, so results are bit-identical.
     """
-    i = pl.program_id(1)
+    sweep = pl.program_id(1)
     k = pl.program_id(2)
+    cached_ref = wc_ref if cache_weight else xc_ref
 
-    @pl.when(i == 0)
-    def _decode_w():
-        lw = _decode_limbs(wc_ref[...], fmt)
-        for b in range(_N_LIMBS):
-            w_limbs[k, b] = lw[b]
+    @pl.when(sweep == 0)
+    def _decode_cached():
+        lc = _decode_limbs(cached_ref[...], fmt)
+        for a in range(_N_LIMBS):
+            limbs[k, a] = lc[a]
 
     @pl.when(k == 0)
     def _init():
         acc_i[...] = jnp.zeros_like(acc_i)
         acc_f[...] = jnp.zeros_like(acc_f)
 
-    lx = _decode_limbs(xc_ref[...], fmt)
-    lw = [w_limbs[k, b] for b in range(_N_LIMBS)]
+    cached = [limbs[k, a] for a in range(_N_LIMBS)]
+    if cache_weight:
+        lx, lw = _decode_limbs(xc_ref[...], fmt), cached
+    else:
+        lx, lw = cached, _decode_limbs(wc_ref[...], fmt)
     _accumulate_classes(acc_i, lx, lw)
 
     @pl.when((jax.lax.rem(k + 1, flush_period) == 0) | (k == nsteps - 1))
@@ -337,20 +350,24 @@ def _exact_fused_ws_kernel(xc_ref, wc_ref, scale_ref, bias_ref, o_ref,
                                activation, has_scale, has_bias)
 
 
-# VMEM budget for the weight-stationary kernel's K-resident decoded limb
-# stripe (3 int8 planes x Kp x block_n). Above this the schedule cannot
-# co-reside with the accumulators on real TPUs (~16 MB VMEM/core).
+# VMEM budget for a stationary schedule's K-resident decoded limb stripe
+# (3 int8 planes x Kp x block_n for "weight", x block_m for
+# "activation"). Above this the schedule cannot co-reside with the
+# accumulators on real TPUs (~16 MB VMEM/core).
 WS_STRIPE_BUDGET_BYTES = 8 << 20
 
 
-def ws_stripe_bytes(K: int, block_n: int, block_k: int) -> int:
-    """VMEM bytes of the weight-stationary K-resident limb stripe.
+def ws_stripe_bytes(K: int, block: int, block_k: int) -> int:
+    """VMEM bytes of a K-resident decoded limb stripe.
 
-    The single size formula shared by the kernel-side hard check and the
-    ops-side warn-and-fallback, so the two can never disagree.
+    ``block`` is the non-K tile edge the stripe spans: ``block_n`` for
+    the weight-stationary schedule, ``block_m`` for the
+    activation-stationary one. The single size formula shared by the
+    kernel-side hard check and the ops-side warn-and-fallback, so the
+    two can never disagree.
     """
     Kp = -(-K // block_k) * block_k
-    return _N_LIMBS * Kp * block_n
+    return _N_LIMBS * Kp * block
 
 
 @functools.partial(
@@ -385,11 +402,15 @@ def mgs_matmul_exact_fused_pallas(x_codes, w_codes, fmt: FPFormat = E4M3, *,
         :func:`worst_case_flush_period`, or a Markov-planned period from
         :func:`repro.core.markov.plan_flush_period`.
       schedule: ``"output"`` (output-stationary — decode both operand
-        tiles every grid step) or ``"weight"`` (K-resident
+        tiles every grid step), ``"weight"`` (K-resident
         weight-stationary — cache the decoded weight limb stripe in VMEM
         across the M-grid axis, cutting in-kernel weight decode work
-        ``grid_m``-fold; VMEM cost 3·Kp·block_n bytes, guarded by
-        ``WS_STRIPE_BUDGET_BYTES``).
+        ``grid_m``-fold; VMEM cost 3·Kp·block_n bytes) or
+        ``"activation"`` (K-resident activation-stationary — cache the
+        decoded x limb stripe across the N-grid axis, cutting activation
+        decode work ``grid_n``-fold for wide-N layers; VMEM cost
+        3·Kp·block_m bytes). Stationary stripes are guarded by
+        ``WS_STRIPE_BUDGET_BYTES``.
       interpret: run in Pallas interpret mode (CPU tests).
 
     Returns:
@@ -402,9 +423,9 @@ def mgs_matmul_exact_fused_pallas(x_codes, w_codes, fmt: FPFormat = E4M3, *,
     if activation not in ACTIVATIONS:
         raise ValueError(f"activation {activation!r} not in "
                          f"{sorted(ACTIVATIONS)}")
-    if schedule not in ("output", "weight"):
+    if schedule not in ("output", "weight", "activation"):
         raise ValueError(f"schedule {schedule!r} not in ('output', "
-                         f"'weight')")
+                         f"'weight', 'activation')")
     M, K = x_codes.shape
     K2, N = w_codes.shape
     assert K == K2, (x_codes.shape, w_codes.shape)
@@ -435,31 +456,51 @@ def mgs_matmul_exact_fused_pallas(x_codes, w_codes, fmt: FPFormat = E4M3, *,
     kw = dict(nsteps=nsteps, flush_period=flush_period, out_scale=out_scale,
               fmt=fmt, activation=activation, has_scale=has_scale,
               has_bias=has_bias)
-    if schedule == "weight":
-        stripe_bytes = ws_stripe_bytes(K, block_n, block_k)
+    if schedule in ("weight", "activation"):
+        cache_weight = schedule == "weight"
+        block = block_n if cache_weight else block_m
+        stripe_bytes = ws_stripe_bytes(K, block, block_k)
         if stripe_bytes > WS_STRIPE_BUDGET_BYTES:
             raise ValueError(
-                f"weight-stationary schedule needs a "
+                f"{schedule}-stationary schedule needs a "
                 f"{stripe_bytes / 2**20:.1f} MB K-resident limb stripe "
-                f"(3 x Kp={Kp} x block_n={block_n}) > "
+                f"(3 x Kp={Kp} x {block}) > "
                 f"{WS_STRIPE_BUDGET_BYTES / 2**20:.0f} MB VMEM budget; "
                 f"use schedule='output' for this shape")
-        # j outer, i middle, k inner: the i == 0 sweep decodes each weight
-        # K-tile once into the K-resident scratch; later rows reuse it.
+        # the cached operand's stripe is decoded on the first sweep of
+        # the OTHER operand's grid axis, which therefore sits at grid
+        # position 1: weight-stationary runs (j, i, k) — the i == 0
+        # sweep caches the weight stripe of column j; activation-
+        # stationary runs (i, j, k) — the j == 0 sweep caches the
+        # activation stripe of row i.
+        if cache_weight:
+            grid = (Np // block_n, Mp // block_m, nsteps)
+            x_map = lambda j, i, k: (i, k)
+            w_map = lambda j, i, k: (k, j)
+            row_map = lambda j, i, k: (0, j)
+            out_map = lambda j, i, k: (i, j)
+            stripe_shape = (nsteps, _N_LIMBS, block_k, block_n)
+        else:
+            grid = (Mp // block_m, Np // block_n, nsteps)
+            x_map = lambda i, j, k: (i, k)
+            w_map = lambda i, j, k: (k, j)
+            row_map = lambda i, j, k: (0, j)
+            out_map = lambda i, j, k: (i, j)
+            stripe_shape = (nsteps, _N_LIMBS, block_m, block_k)
         out = pl.pallas_call(
-            functools.partial(_exact_fused_ws_kernel, **kw),
-            grid=(Np // block_n, Mp // block_m, nsteps),
+            functools.partial(_exact_fused_stationary_kernel,
+                              cache_weight=cache_weight, **kw),
+            grid=grid,
             in_specs=[
-                pl.BlockSpec((block_m, block_k), lambda j, i, k: (i, k)),
-                pl.BlockSpec((block_k, block_n), lambda j, i, k: (k, j)),
-                pl.BlockSpec((1, block_n), lambda j, i, k: (0, j)),
-                pl.BlockSpec((1, block_n), lambda j, i, k: (0, j)),
+                pl.BlockSpec((block_m, block_k), x_map),
+                pl.BlockSpec((block_k, block_n), w_map),
+                pl.BlockSpec((1, block_n), row_map),
+                pl.BlockSpec((1, block_n), row_map),
             ],
-            out_specs=pl.BlockSpec((block_m, block_n),
-                                   lambda j, i, k: (i, j)),
+            out_specs=pl.BlockSpec((block_m, block_n), out_map),
             out_shape=jax.ShapeDtypeStruct((Mp, Np), jnp.float32),
             scratch_shapes=[
-                pltpu.VMEM((nsteps, _N_LIMBS, block_k, block_n), jnp.int8),
+                pltpu.VMEM(stripe_shape, jnp.int8),
                 pltpu.VMEM((_N_CLASSES, block_m, block_n), jnp.int32),
                 pltpu.VMEM((block_m, block_n), jnp.float32),
             ],

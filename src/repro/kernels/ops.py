@@ -80,28 +80,34 @@ def apply_epilogue(out, scale, bias, activation: str):
     return ACTIVATIONS[activation](out)
 
 
-def _fused_schedule(schedule: str, K: int, block_n: int,
+def _fused_schedule(schedule: str, K: int, block_m: int, block_n: int,
                     block_k: int) -> str:
     """Validate/downgrade the fused-kernel schedule for this shape.
 
-    The weight-stationary schedule keeps a 3 x Kp x block_n int8 decoded
-    limb stripe resident in VMEM; shapes whose stripe exceeds the budget
-    fall back to the output-stationary schedule with a warning (never
-    silently, and never an error — the schedules are bit-identical).
+    The stationary schedules keep a 3 x Kp x block int8 decoded limb
+    stripe resident in VMEM ("weight": block_n across the M-grid axis;
+    "activation": block_m across the N-grid axis); shapes whose stripe
+    exceeds the budget fall back to the output-stationary schedule with a
+    warning (never silently, and never an error — the schedules are
+    bit-identical).
     """
-    if schedule != "weight":
+    if schedule not in ("weight", "activation"):
         return schedule
-    stripe = ws_stripe_bytes(K, block_n, block_k)
+    block = block_n if schedule == "weight" else block_m
+    stripe = ws_stripe_bytes(K, block, block_k)
     # read the budget off the kernel module (one binding) so the hard
     # check in mgs_matmul_exact_fused_pallas can never disagree
     budget = _mm.WS_STRIPE_BUDGET_BYTES
     if stripe > budget:
+        other = "grid_m x more in-kernel weight decode" \
+            if schedule == "weight" else \
+            "grid_n x more in-kernel activation decode"
         warnings.warn(
-            f"weight-stationary schedule: K={K}, block_n={block_n} needs "
+            f"{schedule}-stationary schedule: K={K}, block={block} needs "
             f"a {stripe / 2**20:.1f} MB K-resident limb stripe (> "
             f"{budget / 2**20:.0f} MB VMEM budget); "
             "falling back to the output-stationary schedule "
-            "(bit-identical, grid_m x more in-kernel weight decode).",
+            f"(bit-identical, {other}).",
             stacklevel=3)
         return "output"
     return schedule
@@ -126,8 +132,8 @@ def mgs_matmul(x, w, fmt: FPFormat = E4M3, mode: str = "exact", *,
     ``activation(out * scale + bias)`` — inside the kernel when
     ``fused=True``, as a follow-up elementwise pass otherwise.
     ``schedule`` selects the fused kernel's loop order ("output" /
-    "weight" — see ``mgs_matmul_exact_fused_pallas``); oversized
-    weight-stationary stripes fall back to "output" with a warning.
+    "weight" / "activation" — see ``mgs_matmul_exact_fused_pallas``);
+    oversized stationary stripes fall back to "output" with a warning.
     """
     if interpret is None:
         interpret = _default_interpret()
@@ -159,7 +165,8 @@ def mgs_matmul(x, w, fmt: FPFormat = E4M3, mode: str = "exact", *,
             xc, wc, fmt, scale=scale, bias=bias, activation=activation,
             block_m=block_m, block_n=block_n, block_k=block_k,
             flush_period=flush_period,
-            schedule=_fused_schedule(schedule, K, block_n, block_k),
+            schedule=_fused_schedule(schedule, K, block_m, block_n,
+                                     block_k),
             interpret=interpret)
     elif mode == "exact":
         # prepared weights without resident limb planes (built for a fused

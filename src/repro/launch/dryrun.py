@@ -229,7 +229,12 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool = False,
     }
     mem["live_bytes"] = (mem["argument_bytes"] + mem["output_bytes"]
                          + mem["temp_bytes"] - mem["alias_bytes"])
-    cost = dict(compiled.cost_analysis())
+    ca = compiled.cost_analysis()
+    # jax < 0.5 returns a one-element list of per-device dicts; newer
+    # versions return the dict directly.
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    cost = dict(ca)
     hlo = compiled.as_text()
     # cost_analysis counts while-loop (lax.scan) bodies ONCE; re-derive
     # trip-count-corrected figures from the partitioned HLO text.

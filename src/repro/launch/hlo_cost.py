@@ -50,8 +50,14 @@ _COLL = re.compile(
     r"all-to-all|collective-permute)(?P<start>-start)?\((?P<args>[^)]*)\)"
     r"(?P<attrs>[^\n]*)")
 _CALL = re.compile(r"(?:calls|to_apply)=%?([\w.\-]+)")
-_WHILE = re.compile(r"while\([^)]*\),\s*condition=%?([\w.\-]+),\s*"
+# the while operand may itself be a parenthesized tuple type (newer HLO
+# prints `while((s32[], f32[..]) %tuple), condition=...`), so match
+# non-greedily up to the `, condition=` marker instead of `[^)]*`.
+_WHILE = re.compile(r"while\(.*?\),\s*condition=%?([\w.\-]+),\s*"
                     r"body=%?([\w.\-]+)")
+# newer XLA annotates loops with an exact backend_config trip count:
+# backend_config={"known_trip_count":{"n":"9"}} — prefer it when present.
+_KNOWN_TRIP = re.compile(r"known_trip_count[^0-9]*(\d+)")
 _CONST = re.compile(r"constant\((\d+)\)")
 _GROUPS = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
 _OPERAND = re.compile(r"%([\w.\-]+)")
@@ -188,7 +194,9 @@ def _parse_comp(comp: _Comp, comps: Dict[str, _Comp]):
             comp.coll_per_op[op] = comp.coll_per_op.get(op, 0.0) + traffic
         wm = _WHILE.search(line)
         if wm:
-            trips = _trip_count(comps.get(wm.group(1)), comps)
+            km = _KNOWN_TRIP.search(line)
+            trips = (int(km.group(1)) if km
+                     else _trip_count(comps.get(wm.group(1)), comps))
             comp.calls.append((wm.group(2), float(trips)))
             comp.calls.append((wm.group(1), float(trips)))
             continue

@@ -31,7 +31,8 @@ from repro.launch.mesh import make_mesh, make_serve_mesh
 from repro.models import (decode_step, init_cache, init_params, param_dims,
                           prefill)
 from repro.parallel.sharding import make_rules, use_rules
-from repro.quant import PreparedWeight, prepare_params
+from repro.quant import PreparedWeight, calibrating, prepare_params
+from repro.quant.calibrate import CalibrationTable
 
 __all__ = ["ServeEngine", "Request", "main"]
 
@@ -59,6 +60,26 @@ def _place_raw_leaves(params, dims, rules):
     return walk(params, dims)
 
 
+def _stamp_act_sigmas(params, table: CalibrationTable):
+    """Stamp each PreparedWeight with its call site's observed act sigma.
+
+    The site name is the ``parent.name`` path convention the model call
+    sites use (``"ffn.wg"``, ``"attn.wq"``, ...). Planes are shared; only
+    the static aux changes.
+    """
+
+    def walk(node, path):
+        if isinstance(node, dict):
+            return {k: walk(v, path + (k,)) for k, v in node.items()}
+        if isinstance(node, PreparedWeight) and len(path) >= 2:
+            sigma = table.sigma(f"{path[-2]}.{path[-1]}")
+            if sigma is not None:
+                return node.with_act_sigma(sigma)
+        return node
+
+    return walk(params, ())
+
+
 @dataclasses.dataclass
 class Request:
     rid: int
@@ -82,37 +103,131 @@ class ServeEngine:
     weight's logical dims (``parallel.sharding.prepared_specs`` — codes
     and limb planes inherit the weight's (in, out) layout, per-channel
     scales follow the out dim), and the remaining raw parameters
-    (embeddings, norms, einsum weights) are placed by the same serve
-    rules. The MGS accumulator discipline is untouched by distribution:
-    sharded serving is bit-identical to the single-device fused path.
+    (embeddings, norms, conv filters) are placed by the same serve
+    rules. Every model matmul — including the attention out-projection,
+    decode score/value contractions, MoE expert einsums, and the logits
+    head — routes through the unified quantized-einsum dispatch
+    (``quant.qeinsum``), so the MGS accumulator discipline covers the
+    whole forward pass and distribution cannot reorder those
+    contractions: sharded serving is bit-identical to the single-device
+    fused path on both pure-TP and data-axis (FSDP) meshes for the
+    dense/GQA decoder families (the MoE one-hot dispatch/combine
+    einsums and the chunked-prefill softmax scan remain float — see
+    docs/serving.md for the guarantee's exact scope).
+
+    ``calibration`` (or a later :meth:`calibrate` call) feeds observed
+    per-call-site activation limb sigmas into the Markov flush planner,
+    making ``flush_target`` periods per-layer instead of global
+    (``quant.calibrate``).
     """
 
     def __init__(self, cfg: ModelConfig, mesh, batch: int, max_len: int,
                  params=None, dims=None, seed: int = 0,
-                 eos_id: Optional[int] = None):
+                 eos_id: Optional[int] = None,
+                 calibration: Optional[CalibrationTable] = None,
+                 deterministic: bool = True):
+        if calibration is not None:
+            cfg = dataclasses.replace(
+                cfg, quant=cfg.quant.with_calibration(calibration))
         self.cfg = cfg
         self.mesh = mesh
         self.batch = batch
         self.max_len = max_len
         self.eos_id = eos_id
-        self.rules = make_rules(mesh, "serve")
+        # deterministic (default) serving layout: weights/planes
+        # FSDP-sharded over the data axes, batch-indexed activations
+        # replicated — local float-op shapes are then mesh-invariant,
+        # which (together with the exact qeinsum matmuls and
+        # shape-independent reductions) is what makes logits
+        # bit-identical across meshes. Data-parallel throughput comes
+        # from running one engine per data-parallel replica group.
+        # ``deterministic=False`` restores the batch-over-data layout
+        # (in-engine data parallelism, no cross-mesh bit guarantee).
+        self.rules = make_rules(mesh, "serve",
+                                shard_batch=not deterministic)
         multi = int(np.prod(tuple(mesh.shape.values()))) > 1
         with use_rules(self.rules):
             if params is None:
                 params, dims = init_params(cfg, jax.random.PRNGKey(seed))
-            elif dims is None and multi:
+            elif dims is None:
+                # always derive logical dims (abstract trace, no
+                # allocation): they make stack/K-axis inference exact for
+                # the grouped/expert prepared layouts, mesh or not.
                 dims = param_dims(cfg)
             self.params = prepare_params(
                 params, cfg.quant, dims=dims,
                 rules=self.rules if multi else None)
+            if calibration is not None:
+                self.params = _stamp_act_sigmas(self.params, calibration)
             if multi and dims is not None:
                 self.params = _place_raw_leaves(self.params, dims,
                                                 self.rules)
-            self._prefill = jax.jit(
-                lambda p, b, c: prefill(p, cfg, b, c))
-            self._decode = jax.jit(
-                lambda p, t, c: decode_step(p, cfg, t, c),
-                donate_argnums=(2,))
+            self._build_jits()
+
+    def _build_jits(self):
+        cfg = self.cfg
+        self._prefill = jax.jit(
+            lambda p, b, c: prefill(p, cfg, b, c))
+        self._decode = jax.jit(
+            lambda p, t, c: decode_step(p, cfg, t, c),
+            donate_argnums=(2,))
+
+    def _make_batch(self, toks) -> Dict[str, Any]:
+        batch = {"tokens": jnp.asarray(toks)}
+        if self.cfg.vision_prefix:
+            batch["vision_embeds"] = jnp.zeros(
+                (self.batch, self.cfg.vision_prefix, self.cfg.d_model),
+                jnp.bfloat16)
+        if self.cfg.encoder_layers:
+            batch["audio_embeds"] = jnp.zeros(
+                (self.batch, self.cfg.encoder_len, self.cfg.d_model),
+                jnp.bfloat16)
+        return batch
+
+    def calibrate(self, prompts: Optional[List[np.ndarray]] = None, *,
+                  update: bool = True, seed: int = 0) -> CalibrationTable:
+        """One-pass activation-statistics trace (``quant.calibrate``).
+
+        Runs a single *eager* prefill over ``prompts`` (default: a
+        random token batch) under a recording context: every site-tagged
+        matmul logs its quantized activation's limb PMF, aggregated
+        across the scanned layer stack. Returns the resulting
+        :class:`CalibrationTable`; with ``update=True`` the table is also
+        installed on the engine — stored in the QuantConfig, stamped onto
+        each PreparedWeight (``act_sigma``), and the jitted entry points
+        rebuilt — so subsequent requests plan their exact-kernel flush
+        periods from observed per-site sigmas. Calibration never changes
+        results (the exact kernels are flush-invariant); it only
+        lengthens flush periods safely.
+        """
+        if prompts is None:
+            rng = np.random.default_rng(seed)
+            prompts = [rng.integers(1, self.cfg.vocab,
+                                    min(self.max_len - 1, 16)).astype(
+                                        np.int32)
+                       for _ in range(self.batch)]
+        plen = max(len(p) for p in prompts)
+        toks = np.zeros((self.batch, plen), np.int32)
+        for j, p in enumerate(prompts[:self.batch]):
+            toks[j, plen - len(p):] = p
+        cache, _ = init_cache(self.cfg, self.batch, self.max_len)
+        with use_rules(self.rules), calibrating() as rec:
+            # eager (non-jitted) prefill + one decode step: the scan
+            # bodies still trace, and the per-site recording rides
+            # jax.debug.callback, so it fires once per scanned layer.
+            # The decode step covers the decode-only sites
+            # (attn.scores / attn.values).
+            logits, cache = prefill(self.params, self.cfg,
+                                    self._make_batch(toks), cache)
+            cur = jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
+            decode_step(self.params, self.cfg, cur, cache)
+        table = rec.table()
+        if update:
+            self.cfg = dataclasses.replace(
+                self.cfg, quant=self.cfg.quant.with_calibration(table))
+            self.params = _stamp_act_sigmas(self.params, table)
+            self._build_jits()
+        return table
 
     def run(self, requests: List[Request]) -> Dict[str, Any]:
         """Serve a list of requests in fixed-size batches."""
@@ -126,15 +241,7 @@ class ServeEngine:
             toks = np.zeros((self.batch, plen), np.int32)
             for j, r in enumerate(group):
                 toks[j, plen - len(r.prompt):] = r.prompt  # left-pad
-            batch = {"tokens": jnp.asarray(toks)}
-            if self.cfg.vision_prefix:
-                batch["vision_embeds"] = jnp.zeros(
-                    (self.batch, self.cfg.vision_prefix, self.cfg.d_model),
-                    jnp.bfloat16)
-            if self.cfg.encoder_layers:
-                batch["audio_embeds"] = jnp.zeros(
-                    (self.batch, self.cfg.encoder_len, self.cfg.d_model),
-                    jnp.bfloat16)
+            batch = self._make_batch(toks)
             cache, _ = init_cache(self.cfg, self.batch, self.max_len)
             with use_rules(self.rules):
                 logits, cache = self._prefill(self.params, batch, cache)
@@ -175,6 +282,10 @@ def main():
     ap.add_argument("--mesh", default="1x1",
                     help='"DATAxMODEL" (e.g. 2x4) or "auto" (pure TP '
                          "over every visible device)")
+    ap.add_argument("--no-deterministic", action="store_true",
+                    help="batch-over-data throughput layout instead of "
+                         "the deterministic (cross-mesh bit-identical) "
+                         "default — see docs/serving.md")
     args = ap.parse_args()
 
     cfg = (reduced_config(args.arch) if args.reduced
@@ -191,7 +302,8 @@ def main():
                     max_new_tokens=args.max_new)
             for i in range(args.n_requests)]
     engine = ServeEngine(cfg, mesh, batch=args.batch,
-                         max_len=args.prompt_len + args.max_new + 1)
+                         max_len=args.prompt_len + args.max_new + 1,
+                         deterministic=not args.no_deterministic)
     stats = engine.run(reqs)
     print(stats)
     for r in reqs[:2]:

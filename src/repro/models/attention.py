@@ -15,6 +15,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
+from repro.quant import qeinsum
 from .common import ParamFactory, apply_rope
 from .linear import proj
 
@@ -50,14 +51,44 @@ def _mask(q_pos, k_pos, *, causal: bool, window: int, is_global):
     return jnp.where(ok, 0.0, _NEG_INF)
 
 
-def _sdpa_dense(q, k, v, bias):
-    """q: (B,T,KV,G,hd)  k/v: (B,S,KV,hd)  bias: (B,1,1,T,S) or (B,T,S)."""
+def _sdpa_dense(q, k, v, bias, quant=None):
+    """q: (B,T,KV,G,hd)  k/v: (B,S,KV,hd)  bias: (B,1,1,T,S) or (B,T,S).
+
+    With an fp8 ``quant`` config the score and value contractions route
+    through the unified quantized-einsum dispatch, so they accumulate
+    under the same numerics as the weight matmuls — required for the
+    cross-mesh bit-identity guarantee (docs/serving.md): a float dot's
+    accumulation order depends on the local operand shape, so a
+    batch-sharded mesh would diverge from the single device at float
+    level. Routing covers *all* fp8 accums (not just mgs_exact) so the
+    wide/swamp baselines quantize the same operand set as MGS and the
+    accuracy comparison isolates accumulation alone. The integer
+    emulation modes (int4/int8 clip/wrap) keep float attention — their
+    research contract quantizes linear-layer operands only — as does
+    the chunked prefill path (cfg.attn_chunk, float online-softmax
+    scan).
+    """
     scale = q.shape[-1] ** -0.5
-    scores = jnp.einsum("btkgh,bskh->bkgts", q, k,
-                        preferred_element_type=jnp.float32) * scale
+    if quant is None or not quant.is_fp8:
+        scores = jnp.einsum("btkgh,bskh->bkgts", q, k,
+                            preferred_element_type=jnp.float32) * scale
+        scores = scores + bias
+        w = jax.nn.softmax(scores.astype(jnp.float32),
+                           axis=-1).astype(q.dtype)
+        return jnp.einsum("bkgts,bskh->btkgh", w, v)
+    from .common import pairwise_sum_last
+    scores = qeinsum("btkgh,bskh->bkgts", q, k, quant,
+                     site="attn.scores", out_dtype=jnp.float32) * scale
     scores = scores + bias
-    w = jax.nn.softmax(scores.astype(jnp.float32), axis=-1).astype(q.dtype)
-    return jnp.einsum("bkgts,bskh->btkgh", w, v)
+    # shape-independent softmax: max is exactly associative, but the
+    # denominator sum is an XLA reduce whose grouping varies with the
+    # local (mesh-dependent) batch shape — use the deterministic
+    # pairwise tree instead (see pairwise_sum_last / docs/serving.md).
+    m = jnp.max(scores, axis=-1, keepdims=True)
+    e = jnp.exp(scores - m)
+    w = (e / pairwise_sum_last(e)[..., None]).astype(q.dtype)
+    return qeinsum("bkgts,bskh->btkgh", w, v, quant, site="attn.values",
+                   out_dtype=q.dtype)
 
 
 def _sdpa_chunked(q, k, v, q_pos, k_pos, *, causal, window, is_global,
@@ -126,7 +157,7 @@ def attention_apply(p, x, cfg: ModelConfig, *, positions,
     H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
     G = H // KV
 
-    q = proj(x, p["wq"], cfg.quant)                       # (B,T,H,hd)
+    q = proj(x, p["wq"], cfg.quant, site="attn.wq")       # (B,T,H,hd)
     q = apply_rope(q, positions, cfg.rope_theta)
     q = q.reshape(B, T, KV, G, hd)
 
@@ -138,9 +169,9 @@ def attention_apply(p, x, cfg: ModelConfig, *, positions,
                  if kv_positions is None else kv_positions)
         causal = False
     else:
-        k = proj(x, p["wk"], cfg.quant)                   # (B,T,KV,hd)
+        k = proj(x, p["wk"], cfg.quant, site="attn.wk")   # (B,T,KV,hd)
         k = apply_rope(k, positions, cfg.rope_theta)
-        v = proj(x, p["wv"], cfg.quant)
+        v = proj(x, p["wv"], cfg.quant, site="attn.wv")
         if cache is not None:
             # decode: write the new entries at cache_pos, attend over cache
             k = jax.lax.dynamic_update_slice(
@@ -166,9 +197,11 @@ def attention_apply(p, x, cfg: ModelConfig, *, positions,
                             chunk=cfg.attn_chunk)
     else:
         bias = bias_fn(positions, k_pos)[:, None, None]   # (B,1,1,T,S)
-        out = _sdpa_dense(q, k.astype(q.dtype), v.astype(q.dtype), bias)
+        out = _sdpa_dense(q, k.astype(q.dtype), v.astype(q.dtype), bias,
+                          quant=cfg.quant)
 
     out = out.reshape(B, T, H, hd)
-    y = jnp.einsum("bthd,hdo->bto", out,
-                   p["wo"].astype(out.dtype))
+    # out-projection: (heads, head_dim) flatten into the kernel's K —
+    # prepared as a k_ndim=2 PreparedWeight on the serving path.
+    y = qeinsum("bthd,hdo->bto", out, p["wo"], cfg.quant, site="attn.wo")
     return y, new_cache

@@ -17,8 +17,39 @@ import numpy as np
 
 from repro.kernels.mgs_matmul import ACTIVATIONS
 
-__all__ = ["ParamFactory", "rms_norm", "layer_norm", "rope_freqs",
-           "apply_rope", "gelu", "silu", "dtype_of", "ACTIVATIONS"]
+__all__ = ["ParamFactory", "rms_norm", "layer_norm", "pairwise_sum_last",
+           "rope_freqs", "apply_rope", "gelu", "silu", "dtype_of",
+           "grad_barrier", "ACTIVATIONS"]
+
+
+def _opt_barrier(x):
+    return jax.lax.optimization_barrier(x)
+
+
+@jax.custom_vjp
+def grad_barrier(x):
+    """``optimization_barrier`` with a differentiation rule.
+
+    The scanned layer bodies barrier their carry so XLA keeps the saved
+    activation in the compute dtype (bf16) instead of fusing the cast
+    away. ``optimization_barrier`` has no JVP/transpose rule on the
+    pinned jax version, which broke every ``value_and_grad`` over the
+    stack — this wrapper gives it the obvious one: identity cotangent,
+    itself barriered so the backward pass keeps the same
+    rematerialization boundary.
+    """
+    return _opt_barrier(x)
+
+
+def _grad_barrier_fwd(x):
+    return _opt_barrier(x), None
+
+
+def _grad_barrier_bwd(_, g):
+    return (_opt_barrier(g),)
+
+
+grad_barrier.defvjp(_grad_barrier_fwd, _grad_barrier_bwd)
 
 
 def dtype_of(name: str):
@@ -90,18 +121,43 @@ class ParamFactory:
         return self._params, self._dims
 
 
+def pairwise_sum_last(x):
+    """Shape-independent pairwise sum over the last axis.
+
+    An XLA ``reduce`` is free to pick any association order, and it picks
+    differently for different *local* shapes — so a batch-sharded mesh
+    computes row sums that drift one ulp from the single device, which
+    the fp8 quantizer then amplifies into flipped codes. This explicit
+    halving tree is built from plain elementwise adds whose order is
+    fully specified by the graph (fusion cannot reassociate float ops),
+    so every mesh — and every batch slicing — computes the bit-identical
+    per-row sum: the reduction-side half of the cross-mesh bit-identity
+    guarantee (docs/serving.md). Cost: ceil(log2(n)) adds, fusable.
+    """
+    n = x.shape[-1]
+    p = 1 << max(0, (n - 1).bit_length())
+    if p != n:  # pad with exact-identity zeros up to a power of two
+        x = jnp.pad(x, [(0, 0)] * (x.ndim - 1) + [(0, p - n)])
+    while x.shape[-1] > 1:
+        x = x[..., 0::2] + x[..., 1::2]
+    return x[..., 0]
+
+
 def rms_norm(x, gamma, eps: float = 1e-6):
+    """RMSNorm with a shape-independent (mesh-deterministic) row sum."""
     dt = x.dtype
     x32 = x.astype(jnp.float32)
-    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    var = (pairwise_sum_last(jnp.square(x32)) / x.shape[-1])[..., None]
     return (x32 * jax.lax.rsqrt(var + eps)).astype(dt) * gamma.astype(dt)
 
 
 def layer_norm(x, gamma, beta, eps: float = 1e-6):
+    """LayerNorm with shape-independent (mesh-deterministic) row sums."""
     dt = x.dtype
+    n = x.shape[-1]
     x32 = x.astype(jnp.float32)
-    mu = jnp.mean(x32, axis=-1, keepdims=True)
-    var = jnp.var(x32, axis=-1, keepdims=True)
+    mu = (pairwise_sum_last(x32) / n)[..., None]
+    var = (pairwise_sum_last(jnp.square(x32 - mu)) / n)[..., None]
     return ((x32 - mu) * jax.lax.rsqrt(var + eps)).astype(dt) * gamma.astype(
         dt) + beta.astype(dt)
 

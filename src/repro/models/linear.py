@@ -1,50 +1,48 @@
-"""Quantized linear projection — every matmul in the zoo routes here.
+"""Quantized linear projection — the (..., K) @ (K, *tail) entry point.
 
-With ``quant.dtype == "none"`` this is a plain (bf16-compute, fp32-accum)
-dot. Otherwise operands are quantized per the QuantConfig and the matmul
-runs under MGS / wide / clip numerics (see quant.qmatmul) — making the
-paper's technique a first-class execution mode of the framework.
+``proj`` is a thin canonical-shape wrapper over the unified einsum
+dispatch (:func:`repro.quant.qeinsum`): the input is flattened to
+``(M, K)``, the weight's trailing dims become the kernel's N, and the
+contraction runs under the QuantConfig numerics (MGS / wide / clip — see
+quant.qmatmul) — making the paper's technique a first-class execution
+mode of the framework. Non-canonical contractions (attention
+out-projection, MoE expert einsums, decode score/value einsums, the
+logits head) call ``qeinsum`` directly with their own specs; every model
+matmul therefore shares one dispatch layer and one calibration namespace.
 
 Weights may arrive as :class:`repro.quant.PreparedWeight` (quantized +
 limb-decomposed once at load time — the serving path), in which case the
 cached planes feed the kernel directly. ``activation`` lets layers fuse
 their nonlinearity into the matmul epilogue: on the fused exact kernel it
-runs in-kernel; on every other path it is applied here, after the output
-cast, exactly as the layer would have (so enabling fusion never changes
-non-fused numerics).
+runs in-kernel; on every other path it is applied after the output cast,
+exactly as the layer would have (so enabling fusion never changes
+non-fused numerics). ``site`` names the call site for the calibration
+subsystem (:mod:`repro.quant.calibrate`).
 """
 
 from __future__ import annotations
 
-import jax.numpy as jnp
-
-from repro.kernels.mgs_matmul import ACTIVATIONS
-from repro.quant import PreparedWeight, QuantConfig, qmatmul
+from repro.quant import PreparedWeight, QuantConfig, qeinsum
 
 __all__ = ["proj"]
 
+# index letters for the weight's trailing (output) dims in the generated
+# einsum spec; model weights have at most 2 trailing dims today.
+_TAIL_LETTERS = "nopqrstu"
 
-def proj(x, w, quant: QuantConfig, out_shape_tail=None, *,
-         activation: str = "none", bias=None):
+
+def proj(x, w, quant: QuantConfig, *,
+         activation: str = "none", bias=None, site: str | None = None):
     """x: (..., K) @ w: (K, *tail) -> (..., *tail).
 
     ``w``: raw weight array or PreparedWeight. ``activation``/``bias``
-    form the layer epilogue (see module docstring).
+    form the layer epilogue and ``site`` the calibration tag (see module
+    docstring).
     """
-    if isinstance(w, PreparedWeight):
-        tail = w.tail
-        out = qmatmul(x, w, quant, out_dtype=x.dtype, bias=bias,
-                      activation=activation if quant.fused_exact else "none")
-        if not quant.fused_exact:
-            out = ACTIVATIONS[activation](out)
-        return out.reshape(x.shape[:-1] + tail)
-    tail = w.shape[1:]
-    w2 = w.reshape(w.shape[0], -1)
-    if quant.fused_exact:
-        out = qmatmul(x, w2.astype(x.dtype), quant, out_dtype=x.dtype,
-                      bias=bias, activation=activation)
-    else:
-        out = qmatmul(x, w2.astype(x.dtype), quant, out_dtype=x.dtype,
-                      bias=bias)
-        out = ACTIVATIONS[activation](out)
-    return out.reshape(x.shape[:-1] + tail)
+    tail = w.tail if isinstance(w, PreparedWeight) else tuple(w.shape[1:])
+    t = _TAIL_LETTERS[:len(tail)]
+    spec = f"mk,k{t}->m{t}"
+    K = x.shape[-1]
+    out = qeinsum(spec, x.reshape((-1, K)), w, quant, site=site, bias=bias,
+                  activation=activation, out_dtype=x.dtype)
+    return out.reshape(x.shape[:-1] + tuple(tail))

@@ -76,10 +76,11 @@ def _ssm_inputs(p, u, cfg: ModelConfig):
     §Perf iteration A).
     """
     dt = jax.nn.softplus(
-        proj(proj(u, p["wdt_down"], cfg.quant), p["wdt_up"], cfg.quant)
+        proj(proj(u, p["wdt_down"], cfg.quant, site="ssm.wdt_down"),
+             p["wdt_up"], cfg.quant, site="ssm.wdt_up")
         .astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))
-    Bm = proj(u, p["wB"], cfg.quant).astype(jnp.float32)   # (B,T,N)
-    Cm = proj(u, p["wC"], cfg.quant).astype(jnp.float32)   # (B,T,N)
+    Bm = proj(u, p["wB"], cfg.quant, site="ssm.wB").astype(jnp.float32)   # (B,T,N)
+    Cm = proj(u, p["wC"], cfg.quant, site="ssm.wC").astype(jnp.float32)   # (B,T,N)
     return dt, Bm, Cm
 
 
@@ -91,8 +92,8 @@ def mamba_apply(p, x, cfg: ModelConfig, h0=None, return_state: bool = False):
     if T % Q:
         Q = 1  # fallback for odd lengths (smoke tests)
 
-    u_raw = proj(x, p["wx"], cfg.quant)
-    z = proj(x, p["wz"], cfg.quant)
+    u_raw = proj(x, p["wx"], cfg.quant, site="ssm.wx")
+    z = proj(x, p["wz"], cfg.quant, site="ssm.wz")
     u = silu(_causal_conv(u_raw, p["conv_w"], p["conv_b"]))
 
     # weight projections hoisted out of the chunk loop (see _ssm_inputs)
@@ -129,7 +130,7 @@ def mamba_apply(p, x, cfg: ModelConfig, h0=None, return_state: bool = False):
         jax.checkpoint(chunk_step), h_init,
         (to_chunks(u), to_chunks(dt), to_chunks(Bm), to_chunks(Cm)))
     y = yc.transpose(1, 0, 2, 3).reshape(B, T, di)
-    out = proj(y * silu(z), p["wo"], cfg.quant)
+    out = proj(y * silu(z), p["wo"], cfg.quant, site="ssm.wo")
     if return_state:
         conv_tail = _conv_tail(u_raw, cfg)
         return out, SSMCache(h=h_last.astype(x.dtype), conv=conv_tail)
@@ -149,8 +150,8 @@ def _conv_tail(u_raw, cfg: ModelConfig):
 def mamba_decode_step(p, x, cache: SSMCache, cfg: ModelConfig):
     """One-token recurrence. x: (B, 1, d) -> (B, 1, d), new cache."""
     B = x.shape[0]
-    u_raw = proj(x, p["wx"], cfg.quant)                    # (B,1,di)
-    z = proj(x, p["wz"], cfg.quant)
+    u_raw = proj(x, p["wx"], cfg.quant, site="ssm.wx")     # (B,1,di)
+    z = proj(x, p["wz"], cfg.quant, site="ssm.wz")
     full = jnp.concatenate([cache.conv.astype(u_raw.dtype), u_raw], axis=1)
     w = p["conv_w"].astype(u_raw.dtype)
     u = jnp.einsum("bkd,kd->bd", full, w)[:, None, :] + p["conv_b"].astype(
@@ -163,6 +164,7 @@ def mamba_decode_step(p, x, cache: SSMCache, cfg: ModelConfig):
     h = a[:, 0] * cache.h.astype(jnp.float32) + b[:, 0]    # (B,di,N)
     y = jnp.einsum("bdn,bn->bd", h, Cm[:, 0])[:, None, :]
     y = y + p["D"].astype(jnp.float32) * u.astype(jnp.float32)
-    out = proj(y.astype(x.dtype) * silu(z), p["wo"], cfg.quant)
+    out = proj(y.astype(x.dtype) * silu(z), p["wo"], cfg.quant,
+               site="ssm.wo")
     new_cache = SSMCache(h=h.astype(cache.h.dtype), conv=full[:, 1:, :])
     return out, new_cache

@@ -19,7 +19,8 @@ import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
 from repro.parallel.sharding import constrain
-from .common import ParamFactory, gelu, silu
+from repro.quant import qeinsum
+from .common import ParamFactory
 
 __all__ = ["moe_init", "moe_apply"]
 
@@ -59,8 +60,8 @@ def moe_apply(p, x, cfg: ModelConfig):
     # materialized (and GSPMD then gathered) a full-size f32 token copy
     # (measured 25.8 GB/device on dbrx train; EXPERIMENTS.md §Perf F).
     logits = constrain(
-        jnp.einsum("gtd,de->gte", xg, p["wr"].astype(xg.dtype),
-                   preferred_element_type=jnp.float32),
+        qeinsum("gtd,de->gte", xg, p["wr"], cfg.quant, site="moe.wr",
+                out_dtype=jnp.float32),
         ("batch", None, None))
     probs = jax.nn.softmax(logits, axis=-1)            # (G, g, E)
     gates, eidx = jax.lax.top_k(probs, k)              # (G, g, k)
@@ -94,14 +95,24 @@ def moe_apply(p, x, cfg: ModelConfig):
     # the dispatch as a token all-to-all. Without it the partitioner may
     # instead all-gather every expert's weights per device — measured
     # +13 GB/device on dbrx-132b train (EXPERIMENTS.md §Perf F).
+    # (dispatch/combine stay plain einsums: they contract against one-hot
+    # slot tensors / router gates — data movement, not weight GEMMs.)
     ep_dims = ("groups_act", "experts_act", None, None)
     xe = constrain(jnp.einsum("gtec,gtd->gecd", disp, xg), ep_dims)
+    # expert einsums through the unified quantized dispatch: the expert
+    # axis is a qeinsum batch dim, so each expert's contraction is
+    # quantized with its own scale (per-expert PreparedWeight slices on
+    # the serving path).
+    q = cfg.quant
     if cfg.act == "silu":
-        h = silu(jnp.einsum("gecd,edf->gecf", xe, p["wg"].astype(dtype)))
-        h = h * jnp.einsum("gecd,edf->gecf", xe, p["wu"].astype(dtype))
+        h = qeinsum("gecd,edf->gecf", xe, p["wg"], q, site="moe.wg",
+                    activation="silu", out_dtype=dtype)
+        h = h * qeinsum("gecd,edf->gecf", xe, p["wu"], q, site="moe.wu",
+                        out_dtype=dtype)
     else:
-        h = gelu(jnp.einsum("gecd,edf->gecf", xe, p["wi"].astype(dtype)))
-    ye = constrain(jnp.einsum("gecf,efd->gecd", h, p["wd"].astype(dtype)),
-                   ep_dims)
+        h = qeinsum("gecd,edf->gecf", xe, p["wi"], q, site="moe.wi",
+                    activation="gelu", out_dtype=dtype)
+    ye = constrain(qeinsum("gecf,efd->gecd", h, p["wd"], q, site="moe.wd",
+                           out_dtype=dtype), ep_dims)
     y = jnp.einsum("gtec,gecd->gtd", comb.astype(dtype), ye)
     return y.reshape(B, T, d), aux

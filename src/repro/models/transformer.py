@@ -28,8 +28,9 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.parallel.sharding import constrain
+from repro.quant import qeinsum
 from .attention import KVCache, attention_apply, attention_init
-from .common import ParamFactory, dtype_of, rms_norm
+from .common import ParamFactory, dtype_of, grad_barrier, rms_norm
 from .ffn import ffn_apply, ffn_init
 from .mamba import SSMCache, mamba_apply, mamba_decode_step, mamba_init
 from .moe import moe_apply, moe_init
@@ -336,10 +337,18 @@ def _embed_tokens(params, cfg: ModelConfig, tokens, for_train: bool = False):
 
 
 def _logits(params, cfg: ModelConfig, x):
-    table = (params["embed"] if cfg.tie_embeddings
-             else params["unembed"].T)
-    out = jnp.einsum("btd,vd->btv", x, table.astype(x.dtype),
-                     preferred_element_type=jnp.float32)
+    """Unembedding through the unified quantized-einsum dispatch.
+
+    Under an exact-MGS QuantConfig the logits head accumulates in the
+    exact kernel like every other matmul — the last float contraction
+    that used to all-reduce over a data-sharded embed dim, and hence the
+    last source of cross-mesh float divergence (docs/serving.md)."""
+    if cfg.tie_embeddings:
+        out = qeinsum("btd,vd->btv", x, params["embed"], cfg.quant,
+                      site="logits", out_dtype=jnp.float32)
+    else:
+        out = qeinsum("btd,dv->btv", x, params["unembed"], cfg.quant,
+                      site="logits", out_dtype=jnp.float32)
     return constrain(out, ("batch", "seq", "vocab_act"))
 
 
@@ -404,7 +413,7 @@ def forward(params, cfg: ModelConfig, batch: Dict[str, Any],
     if cfg.is_hybrid:
         def gbody(carry, pg):
             x, aux = carry
-            x = jax.lax.optimization_barrier(x)  # keep saved carry bf16
+            x = grad_barrier(x)  # keep saved carry bf16 (differentiable)
             x, _, _, a = _hybrid_group_body(pg, x, positions, cfg, None,
                                             None, None, decode=False)
             return (x, aux + a), None
@@ -413,7 +422,7 @@ def forward(params, cfg: ModelConfig, batch: Dict[str, Any],
                                          params["layers"])
     elif cfg.is_ssm_only:
         def sbody(x, pl):
-            x = jax.lax.optimization_barrier(x)  # keep saved carry bf16
+            x = grad_barrier(x)  # keep saved carry bf16 (differentiable)
             x, _ = _ssm_body(pl, x, cfg, None, decode=False)
             return x, None
         fn = jax.checkpoint(sbody) if remat else sbody
@@ -437,7 +446,7 @@ def forward(params, cfg: ModelConfig, batch: Dict[str, Any],
 
         def body(carry, xs):
             x, aux = carry
-            x = jax.lax.optimization_barrier(x)  # keep saved carry bf16
+            x = grad_barrier(x)  # keep saved carry bf16 (differentiable)
             pl, isg = xs
             x, _, a = _dense_body(pl, x, positions, cfg, isg, None, None,
                                   None, None)

@@ -100,7 +100,7 @@ _PRIORITY = ["batch", "experts", "vocab", "heads", "kv_heads", "ffn",
 
 def make_rules(mesh: Mesh, strategy: str = "train",
                seq_shard_kv: bool = True, prefer_sp: bool = False,
-               shard_seq: bool = True) -> Rules:
+               shard_seq: bool = True, shard_batch: bool = True) -> Rules:
     """Production rule sets for the (pod?, data, model) meshes.
 
     strategy="train" — FSDP(ZeRO-3)+SP: batch over (pod, data), sequence
@@ -116,6 +116,16 @@ def make_rules(mesh: Mesh, strategy: str = "train",
       dim; KV caches shard kv_heads over model when divisible, falling
       back to kv_seq, then the data axis when the batch is tiny
       (long_500k batch=1).
+
+    ``shard_batch`` (serve only): with ``False``, batch-indexed
+      activations and caches replicate across the data axes instead of
+      sharding — the *deterministic* serving layout ``ServeEngine`` uses.
+      Weights and prepared planes stay FSDP-sharded over data (the
+      memory win), but every float op then sees mesh-invariant local
+      shapes, which is what extends the engine's bit-identity guarantee
+      to data-axis meshes (docs/serving.md). ``True`` keeps the
+      batch-over-data throughput layout (per-device float ops may then
+      drift at ulp level across mesh shapes).
     """
     batch_axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
     fsdp_axes = [batch_axes, "data"]
@@ -166,11 +176,13 @@ def make_rules(mesh: Mesh, strategy: str = "train",
     elif strategy == "serve":
         table = dict(common)
         table.update({
-            "batch": [batch_axes, "data"],
+            "batch": ([batch_axes, "data"] if shard_batch else []),
             "seq": [],
             "vocab_act": ["model"],
             "kv_seq": (["data", "model"] if seq_shard_kv else []),
         })
+        if not shard_batch:
+            table["groups_act"] = []
     else:
         raise ValueError(f"unknown strategy {strategy!r}")
     return Rules(mesh, table, priority=_PRIORITY, name=strategy)
@@ -261,17 +273,26 @@ def named_sharding(spec_tree, mesh: Mesh):
 
 
 def prepared_plane_dims(w_dims: Tuple[Optional[str], ...], rules: Rules, *,
-                        stacked: bool = False):
+                        stacked: bool = False,
+                        stack_ndim: Optional[int] = None, k_ndim: int = 1):
     """Logical dims of a PreparedWeight's planes from the raw weight's dims.
 
     Args:
-      w_dims: the owning weight's logical dims, ``(*stack, in, *tail)`` —
+      w_dims: the owning weight's logical dims, ``(*stack, *k, *tail)`` —
         e.g. ``("layers", "embed", "heads", "head_dim")`` for a stacked
-        attention projection.
+        attention projection, ``("layers", "experts", "embed", "ffn")``
+        for a per-expert MoE weight (two stack axes), or ``("layers",
+        "heads", "head_dim", "embed")`` for the out-projection (two
+        contracted axes).
       rules: the active :class:`Rules` (its priority order picks which
         tail dim names the flattened output axis).
-      stacked: whether the weight carries a leading per-layer stack axis
-        (exactly one, matching ``prepare_weight(stacked=True)``).
+      stacked: back-compat alias for ``stack_ndim=1``.
+      stack_ndim: number of leading per-slice stack axes (matching
+        ``prepare_weight(stack_ndim=...)``).
+      k_ndim: number of contracted axes flattened into the plane's K. A
+        single contracted axis keeps its logical dim on the plane's K
+        axis; a flattened multi-axis K stays replicated (a mesh chunk of
+        it could split a head, and the exact kernel consumes K whole).
 
     Returns:
       ``(codes_dims, limbs_dims, out_dim)``: dims tuples for the codes
@@ -281,10 +302,10 @@ def prepared_plane_dims(w_dims: Tuple[Optional[str], ...], rules: Rules, *,
       heads), so the plane layout stays aligned with the raw weight's.
       ``None`` when the leading tail dim has no mesh candidates.
     """
-    n_stack = 1 if stacked else 0
+    n_stack = (1 if stacked else 0) if stack_ndim is None else stack_ndim
     stack_dims = tuple(w_dims[:n_stack])
-    in_dim = w_dims[n_stack]
-    tail_dims = tuple(w_dims[n_stack + 1:])
+    in_dim = w_dims[n_stack] if k_ndim == 1 else None
+    tail_dims = tuple(w_dims[n_stack + k_ndim:])
     out_dim = None
     if tail_dims and tail_dims[0] is not None and rules.table.get(
             tail_dims[0]):
@@ -296,12 +317,13 @@ def prepared_plane_dims(w_dims: Tuple[Optional[str], ...], rules: Rules, *,
 
 def prepared_specs(w_dims: Tuple[Optional[str], ...],
                    w_shape: Tuple[int, ...], rules: Rules, *,
-                   stacked: bool = False, per_channel: bool = False):
+                   stacked: bool = False, stack_ndim: Optional[int] = None,
+                   k_ndim: int = 1, per_channel: bool = False):
     """PartitionSpecs for a PreparedWeight's planes.
 
     Args:
       w_dims / w_shape: logical dims and shape of the *raw* weight,
-        ``(*stack, K, *tail)`` (shape before flattening — the flattened
+        ``(*stack, *k, *tail)`` (shape before flattening — the flattened
         plane shapes are derived here).
       rules: active sharding rules. Divisibility is checked against the
         *leading tail dim's size* (e.g. the head count), not the
@@ -309,7 +331,11 @@ def prepared_specs(w_dims: Tuple[Optional[str], ...],
         back to replication exactly like the raw weight would, and a
         shard of the flattened axis always covers whole trailing slices
         (never a partial head).
-      stacked: leading per-layer stack axis present.
+      stacked: back-compat alias for ``stack_ndim=1``.
+      stack_ndim: number of leading per-slice stack axes (per-layer scan
+        stacks, the per-expert axis of MoE weights, or both).
+      k_ndim: number of contracted axes flattened into the plane's K
+        (see :func:`prepared_plane_dims`).
       per_channel: whether the scale plane is per-output-channel,
         shape ``(*stack, 1, n)`` (else per-tensor, shape ``(*stack,)``).
 
@@ -318,13 +344,15 @@ def prepared_specs(w_dims: Tuple[Optional[str], ...],
       the corresponding plane ranks (specs over the flattened ``n`` axis
       — an axis dividing the leading tail dim also divides ``n``).
     """
-    n_stack = 1 if stacked else 0
+    n_stack = (1 if stacked else 0) if stack_ndim is None else stack_ndim
     stack_shape = tuple(int(s) for s in w_shape[:n_stack])
-    K = int(w_shape[n_stack])
-    tail = tuple(int(s) for s in w_shape[n_stack + 1:])
+    K = 1
+    for s in w_shape[n_stack:n_stack + k_ndim]:
+        K *= int(s)
+    tail = tuple(int(s) for s in w_shape[n_stack + k_ndim:])
     out_size = tail[0] if tail else 1
     codes_dims, limbs_dims, out_dim = prepared_plane_dims(
-        w_dims, rules, stacked=stacked)
+        w_dims, rules, stack_ndim=n_stack, k_ndim=k_ndim)
     codes_spec = rules.resolve(codes_dims, stack_shape + (K, out_size))
     limbs_spec = rules.resolve(limbs_dims, stack_shape + (3, K, out_size))
     if per_channel:

@@ -1,15 +1,20 @@
 # Quantization substrate: configs, quantizers, prepared-weight cache, and
 # the qmatmul dispatch that makes MGS a first-class execution mode for
 # every linear layer.
+from .calibrate import (ActivationRecorder, CalibrationTable, calibrating,
+                        current_recorder)
 from .config import ACCUMS, DTYPES, QuantConfig
 from .prepared import (PREP_STATS, PreparedWeight, clear_prepared_cache,
                        prepare_params, prepare_weight)
+from .qeinsum import QeinsumPlan, plan_qeinsum, qeinsum
 from .qmatmul import qmatmul
 from .quantize import (QTensor, dequantize_int, fake_quant_fp8,
                        fake_quant_int, quantize_fp8, quantize_int)
 
-__all__ = ["ACCUMS", "DTYPES", "QuantConfig", "qmatmul", "QTensor",
+__all__ = ["ACCUMS", "DTYPES", "QuantConfig", "qmatmul", "qeinsum",
+           "plan_qeinsum", "QeinsumPlan", "QTensor",
            "dequantize_int", "fake_quant_fp8", "fake_quant_int",
            "quantize_fp8", "quantize_int", "PreparedWeight",
            "prepare_weight", "prepare_params", "PREP_STATS",
-           "clear_prepared_cache"]
+           "clear_prepared_cache", "ActivationRecorder", "CalibrationTable",
+           "calibrating", "current_recorder"]

@@ -1,0 +1,194 @@
+"""Calibration: one-pass activation-statistics trace for flush planning.
+
+The Markov flush planner (:func:`repro.core.markov.plan_flush_period`)
+models the exact kernel's per-class int32 accumulation as a random walk
+whose step std is ``sqrt(n_limbs * block_k) * sigma_x * sigma_w``. Weights
+contribute an *observed* ``sigma_w`` (``PreparedWeight.limb_sigma``,
+measured at preparation time), but activations used to fall back to the
+uniform-limb default (:func:`repro.core.markov.limb_sigma_default`) — a
+guess. This module replaces the guess with a measured value, per call
+site:
+
+1. Run any forward pass (eagerly — `jax.jit`-ing the outer call would
+   freeze the recorder out) under :func:`calibrating`. Every
+   ``qeinsum``/``qmatmul`` call with a ``site`` name then records the
+   balanced-limb decomposition of its *quantized* activation operand via
+   a ``jax.debug.callback`` — so the trace also fires inside
+   ``lax.scan``-over-layers bodies, once per layer iteration.
+2. The recorder accumulates a per-site limb PMF
+   (:func:`repro.core.markov.empirical_pmf` over the observed limb
+   values) and reduces it to a per-site limb sigma:
+   :meth:`ActivationRecorder.table`.
+3. The resulting :class:`CalibrationTable` is stored on the
+   ``QuantConfig`` (``cfg.quant.with_calibration(table)``) and stamped
+   onto each ``PreparedWeight`` (``act_sigma``); ``qmatmul`` then feeds
+   the site's observed sigma into ``plan_flush_period``, so flush
+   periods are planned per call site from real statistics instead of one
+   global default. (Layers stacked under a ``lax.scan`` share a call
+   site and therefore a statically-planned period — the granularity a
+   scanned stack can express.)
+
+``ServeEngine.calibrate`` wires steps 1–3 end to end for serving.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Dict, Iterable, Mapping, Optional, Tuple, Union
+
+import numpy as np
+
+from repro.core.markov import Pmf, limb_sigma_default, plan_flush_period
+
+__all__ = ["ActivationRecorder", "CalibrationTable", "calibrating",
+           "current_recorder", "observe"]
+
+# Balanced base-128 limbs of the exact kernel take values in [-64, 63].
+_LIMB_LO = -64
+_N_LEVELS = 128
+
+
+class ActivationRecorder:
+    """Accumulates per-site limb histograms during a calibration pass."""
+
+    def __init__(self):
+        self._counts: Dict[str, np.ndarray] = {}
+        self._calls: Dict[str, int] = {}
+        self._lock = threading.Lock()
+
+    def record(self, site: str, limbs: np.ndarray):
+        """Fold one call's observed int8 limb values into the site PMF."""
+        v = np.asarray(limbs).astype(np.int64).ravel()
+        if v.min() < _LIMB_LO or v.max() >= _LIMB_LO + _N_LEVELS:
+            raise ValueError(f"limb values outside balanced base-128 "
+                             f"range [{_LIMB_LO}, {_LIMB_LO + _N_LEVELS}): "
+                             f"[{v.min()}, {v.max()}]")
+        counts = np.bincount(v - _LIMB_LO,
+                             minlength=_N_LEVELS).astype(np.float64)
+        with self._lock:
+            if site in self._counts:
+                self._counts[site] += counts
+                self._calls[site] += 1
+            else:
+                self._counts[site] = counts
+                self._calls[site] = 1
+
+    @property
+    def sites(self) -> Tuple[str, ...]:
+        return tuple(sorted(self._counts))
+
+    def calls(self, site: str) -> int:
+        return self._calls.get(site, 0)
+
+    def pmf(self, site: str) -> Pmf:
+        """The site's aggregated limb PMF over all recorded calls.
+
+        Equal to :func:`repro.core.markov.empirical_pmf` of the
+        concatenated observed limb values, on the full balanced-limb
+        support (the per-call histograms accumulate exactly)."""
+        counts = self._counts[site]
+        return Pmf(_LIMB_LO, counts / counts.sum())
+
+    def table(self) -> "CalibrationTable":
+        return CalibrationTable({s: self.pmf(s).std for s in self._counts})
+
+
+class CalibrationTable:
+    """Immutable site -> observed activation limb sigma mapping.
+
+    Stored on ``QuantConfig.calibration`` as a sorted tuple of pairs (so
+    the frozen config stays hashable) and on each ``PreparedWeight`` as
+    ``act_sigma``. Build one from :meth:`ActivationRecorder.table` or any
+    mapping / pair iterable.
+    """
+
+    def __init__(self, sigmas: Union[Mapping[str, float],
+                                     Iterable[Tuple[str, float]]]):
+        items = (sigmas.items() if isinstance(sigmas, Mapping) else sigmas)
+        self._sigmas = {str(k): float(v) for k, v in items}
+
+    def sigma(self, site: Optional[str],
+              default: Optional[float] = None) -> Optional[float]:
+        if site is None:
+            return default
+        return self._sigmas.get(site, default)
+
+    def to_pairs(self) -> Tuple[Tuple[str, float], ...]:
+        return tuple(sorted(self._sigmas.items()))
+
+    @classmethod
+    def from_pairs(cls, pairs) -> "CalibrationTable":
+        return cls(dict(pairs))
+
+    def flush_period(self, site: str, block_k: int, *,
+                     target_overflow: float,
+                     sigma_limb_w: Optional[float] = None) -> int:
+        """Site-specific Markov-planned flush period (observed sigma)."""
+        return plan_flush_period(block_k, target_overflow=target_overflow,
+                                 sigma_limb_x=self.sigma(
+                                     site, limb_sigma_default()),
+                                 sigma_limb_w=sigma_limb_w)
+
+    def __len__(self):
+        return len(self._sigmas)
+
+    def __iter__(self):
+        return iter(sorted(self._sigmas.items()))
+
+    def __repr__(self):
+        rows = ", ".join(f"{k}={v:.2f}" for k, v in sorted(
+            self._sigmas.items()))
+        return f"CalibrationTable({rows})"
+
+
+_ctx = threading.local()
+
+
+def current_recorder() -> Optional[ActivationRecorder]:
+    return getattr(_ctx, "recorder", None)
+
+
+@contextlib.contextmanager
+def calibrating(recorder: Optional[ActivationRecorder] = None):
+    """Context under which site-tagged matmuls record activation limbs.
+
+    The recorder is captured at *trace* time: call the model eagerly
+    inside the context (inner ``lax.scan`` bodies still trace, and the
+    recording rides ``jax.debug.callback``, so per-layer stats are
+    captured). Two hazards of mixing with ``jax.jit``: a function
+    already jitted *outside* the context records nothing (its cached
+    trace has no callbacks), and a function jitted *inside* the context
+    bakes the recording callback into the jit cache — every later
+    production call would keep shipping activations to the host. Use
+    ``ServeEngine.calibrate`` (eager, one pass) for serving.
+    """
+    rec = recorder if recorder is not None else ActivationRecorder()
+    prev = current_recorder()
+    _ctx.recorder = rec
+    try:
+        yield rec
+    finally:
+        _ctx.recorder = prev
+
+
+def observe(site: Optional[str], q_values, fmt):
+    """Record the limb statistics of one quantized activation operand.
+
+    Called from ``qmatmul`` on the format-exact quantized activation
+    ``q_values``. A no-op unless a :func:`calibrating` context is active
+    at trace time and the call is site-tagged. The limb decomposition
+    runs in-graph; the host-side histogram update rides a
+    ``jax.debug.callback`` so it fires per ``lax.scan`` iteration (one
+    record per layer of a scanned stack).
+    """
+    rec = current_recorder()
+    if rec is None or site is None:
+        return
+    import jax
+
+    from repro.kernels.mgs_matmul import limb_decompose
+    limbs = limb_decompose(q_values, fmt)
+    jax.debug.callback(
+        lambda l, _site=site, _rec=rec: _rec.record(_site, np.asarray(l)),
+        limbs)

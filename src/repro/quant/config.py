@@ -12,7 +12,7 @@ accumulation — what H100/TPU hardware does), ``"clip"`` (saturation) and
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
+from typing import Optional, Tuple
 
 from repro.core.formats import E4M3, E5M2, FPFormat, get_format
 
@@ -20,7 +20,7 @@ __all__ = ["QuantConfig", "DTYPES", "ACCUMS", "SCHEDULES"]
 
 DTYPES = ("none", "int8", "int5", "int4", "fp8_e4m3", "fp8_e5m2")
 ACCUMS = ("wide", "mgs_exact", "mgs_dmac", "clip", "wrap", "swamp")
-SCHEDULES = ("output", "weight")
+SCHEDULES = ("output", "weight", "activation")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -48,13 +48,23 @@ class QuantConfig:
         output-stationary: both operand tiles are decoded at every grid
         step. "weight" is the K-resident weight-stationary schedule: the
         decoded weight limb stripe is cached in VMEM scratch across the
-        M-grid axis, cutting in-kernel weight decode work grid_m-fold
-        (bit-identical results; falls back to "output" with a warning
-        when the stripe exceeds the VMEM budget).
+        M-grid axis, cutting in-kernel weight decode work grid_m-fold.
+        "activation" is the symmetric activation-stationary schedule:
+        the decoded x limb stripe is cached across the N-grid axis,
+        cutting activation decode work grid_n-fold (wide-N layers). All
+        three are bit-identical; stationary schedules fall back to
+        "output" with a warning when the stripe exceeds the VMEM budget.
       block_m/n/k: Pallas tile sizes (MXU-aligned defaults).
       flush_target: probabilistic overflow budget used by the Markov
         planner (core.markov.plan_flush_period) to derive the kernel flush
         period; None = deterministic worst-case bound.
+      calibration: observed per-call-site activation limb sigmas — a
+        sorted tuple of (site, sigma) pairs (hashable, so the frozen
+        config stays usable as a jit static). Built by
+        quant.calibrate.CalibrationTable / ServeEngine.calibrate; when
+        set, the Markov planner uses the site's observed activation
+        sigma instead of the uniform-limb default, making flush periods
+        per-call-site rather than global.
     """
 
     dtype: str = "none"
@@ -71,6 +81,7 @@ class QuantConfig:
     block_n: int = 128
     block_k: int = 128
     flush_target: Optional[float] = None
+    calibration: Optional[Tuple[Tuple[str, float], ...]] = None
 
     def __post_init__(self):
         if self.dtype not in DTYPES:
@@ -80,6 +91,12 @@ class QuantConfig:
         if self.schedule not in SCHEDULES:
             raise ValueError(f"schedule {self.schedule!r} not in "
                              f"{SCHEDULES}")
+        if self.calibration is not None:
+            # normalize unconditionally (CalibrationTable / dict / any
+            # pair iterable -> sorted, coerced tuple) so equal tables
+            # always compare and hash equal
+            object.__setattr__(self, "calibration",
+                               _calibration_pairs(self.calibration))
 
     @property
     def is_fp8(self) -> bool:
@@ -122,8 +139,33 @@ class QuantConfig:
         return (self.is_fp8 and self.accum == "mgs_exact"
                 and self.use_kernel and self.fused)
 
+    def act_sigma(self, site: Optional[str]) -> Optional[float]:
+        """Observed activation limb sigma for a call site, or None."""
+        if self.calibration is None or site is None:
+            return None
+        for s, sigma in self.calibration:
+            if s == site:
+                return sigma
+        return None
+
+    def with_calibration(self, table) -> "QuantConfig":
+        """Config carrying observed per-site activation sigmas.
+
+        ``table``: a ``quant.calibrate.CalibrationTable``, a mapping, or
+        an iterable of (site, sigma) pairs; ``None`` clears calibration.
+        """
+        pairs = None if table is None else _calibration_pairs(table)
+        return dataclasses.replace(self, calibration=pairs)
+
     def replace(self, **kw) -> "QuantConfig":
         return dataclasses.replace(self, **kw)
+
+
+def _calibration_pairs(table) -> Tuple[Tuple[str, float], ...]:
+    if hasattr(table, "to_pairs"):
+        return table.to_pairs()
+    items = table.items() if hasattr(table, "items") else table
+    return tuple(sorted((str(k), float(v)) for k, v in items))
 
 
 NONE = QuantConfig()

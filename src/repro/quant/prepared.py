@@ -70,20 +70,30 @@ class PreparedWeight:
       would otherwise sit as dead device memory next to the codes.
     * ``scale``: dequantization scale, broadcastable to (*stack, 1, N).
 
+    The stack may span several leading axes (``stack_ndim`` — e.g.
+    (layers, experts) for MoE expert weights consumed via
+    ``quant.qeinsum``), and ``K`` may flatten several contracted axes
+    (``k_ndim`` — e.g. (heads, head_dim) for the attention
+    out-projection).
+
     Static aux data: ``fmt_name``, logical ``tail`` (the un-flattened
-    trailing dims the consuming layer reshapes back to), and
-    ``limb_sigma`` — the observed limb std feeding the Markov flush
-    planner (``core.markov.plan_flush_period``).
+    trailing dims the consuming layer reshapes back to), ``limb_sigma``
+    — the observed *weight* limb std feeding the Markov flush planner
+    (``core.markov.plan_flush_period``) — and ``act_sigma``, the
+    calibrated *activation* limb sigma for this weight's call site
+    (``quant.calibrate``; ``None`` until a calibration pass stamps it).
     """
 
     def __init__(self, codes, limbs, scale, fmt_name: str,
-                 tail: Tuple[int, ...], limb_sigma: Optional[float] = None):
+                 tail: Tuple[int, ...], limb_sigma: Optional[float] = None,
+                 act_sigma: Optional[float] = None):
         self.codes = codes
         self.limbs = limbs
         self.scale = scale
         self.fmt_name = fmt_name
         self.tail = tuple(tail)
         self.limb_sigma = limb_sigma
+        self.act_sigma = act_sigma
 
     @property
     def fmt(self) -> FPFormat:
@@ -97,37 +107,49 @@ class PreparedWeight:
         """Format-exact weight values (for emulation / dmac fallbacks)."""
         return decode_bits(self.codes, self.fmt, dtype)
 
+    def with_act_sigma(self, act_sigma: Optional[float]) -> "PreparedWeight":
+        """Copy sharing the same planes, with a calibrated act sigma."""
+        return PreparedWeight(self.codes, self.limbs, self.scale,
+                              self.fmt_name, self.tail, self.limb_sigma,
+                              act_sigma=act_sigma)
+
     def __repr__(self):
         return (f"PreparedWeight(shape={tuple(self.codes.shape)}, "
                 f"fmt={self.fmt_name}, tail={self.tail}, "
-                f"limb_sigma={self.limb_sigma})")
+                f"limb_sigma={self.limb_sigma}, "
+                f"act_sigma={self.act_sigma})")
 
 
 def _pw_flatten(pw: PreparedWeight):
     return ((pw.codes, pw.limbs, pw.scale),
-            (pw.fmt_name, pw.tail, pw.limb_sigma))
+            (pw.fmt_name, pw.tail, pw.limb_sigma, pw.act_sigma))
 
 
 def _pw_unflatten(aux, children):
     codes, limbs, scale = children
-    fmt_name, tail, limb_sigma = aux
-    return PreparedWeight(codes, limbs, scale, fmt_name, tail, limb_sigma)
+    fmt_name, tail, limb_sigma, act_sigma = aux
+    return PreparedWeight(codes, limbs, scale, fmt_name, tail, limb_sigma,
+                          act_sigma=act_sigma)
 
 
 jax.tree_util.register_pytree_node(PreparedWeight, _pw_flatten, _pw_unflatten)
 
 
-def _build(w, cfg: QuantConfig, stacked: bool, keep_limbs: bool,
-           shardings=None) -> PreparedWeight:
+def _build(w, cfg: QuantConfig, stack_ndim: int, k_ndim: int,
+           keep_limbs: bool, shardings=None) -> PreparedWeight:
     fmt = cfg.fmt
     w = jnp.asarray(w)
-    if stacked:
-        stack, (K, *tail) = (w.shape[:1], w.shape[1:])
-    else:
-        stack, (K, *tail) = ((), w.shape)
+    if stack_ndim + k_ndim >= w.ndim and not (
+            stack_ndim + k_ndim == w.ndim and w.ndim >= 2):
+        raise ValueError(f"weight rank {w.ndim} too small for "
+                         f"stack_ndim={stack_ndim} + k_ndim={k_ndim}")
+    stack = tuple(int(s) for s in w.shape[:stack_ndim])
+    K = int(np.prod(w.shape[stack_ndim:stack_ndim + k_ndim]))
+    tail = tuple(int(s) for s in w.shape[stack_ndim + k_ndim:])
     n = int(np.prod(tail)) if tail else 1
     axis = 0 if cfg.per_channel else None
     margin = cfg.fp8_margin
+    n_stack = int(np.prod(stack)) if stack else 1
 
     def compute(wr):
         w2 = wr.reshape(stack + (K, n)).astype(jnp.float32)
@@ -135,12 +157,18 @@ def _build(w, cfg: QuantConfig, stacked: bool, keep_limbs: bool,
         def quantize_one(wi):
             return quantize_fp8(wi, fmt, axis=axis, margin=margin)
 
-        qt = (jax.vmap(quantize_one)(w2) if stacked   # per-layer scales
-              else quantize_one(w2))
+        if stack:  # per-slice scales (per layer, per expert, ...)
+            qt = jax.vmap(quantize_one)(w2.reshape((n_stack, K, n)))
+            qt = type(qt)(q=qt.q.reshape(stack + (K, n)),
+                          scale=qt.scale.reshape(
+                              stack + qt.scale.shape[1:]),
+                          offset=qt.offset)
+        else:
+            qt = quantize_one(w2)
         codes = encode_bits(qt.q, fmt)
         limbs = limb_decompose(qt.q, fmt)     # (3, *stack, K, n)
-        if stacked:
-            limbs = jnp.moveaxis(limbs, 0, 1)  # (*stack, 3, K, n)
+        if stack:
+            limbs = jnp.moveaxis(limbs, 0, len(stack))  # (*stack, 3, K, n)
         # observed limb statistics feed the Markov flush planner even when
         # the limb planes themselves are not kept resident — and when they
         # are not, the plane is not a jit output, so XLA fuses the
@@ -173,17 +201,22 @@ def _build(w, cfg: QuantConfig, stacked: bool, keep_limbs: bool,
 
 
 def prepare_weight(w, cfg: QuantConfig, *, stacked: bool = False,
+                   stack_ndim: Optional[int] = None, k_ndim: int = 1,
                    keep_limbs: Optional[bool] = None,
                    shardings=None) -> PreparedWeight:
     """Quantize + decompose ``w`` under ``cfg``, cached per process.
 
     Args:
-      w: ``(K, *tail)`` weight, or ``(L, K, *tail)`` stacked per-layer
-        weights (``stacked=True``) — scales/codes/limbs are then computed
-        per layer slice so ``lax.scan`` consumption matches per-layer
-        quantization.
+      w: ``(*stack, *kdims, *tail)`` weight. Stack axes (per-layer,
+        per-expert, ...) get per-slice scales so ``lax.scan`` / grouped
+        ``qeinsum`` consumption matches per-slice quantization; the
+        ``k_ndim`` contracted axes are flattened into the kernel's K
+        (e.g. (heads, head_dim) for the attention out-projection).
       cfg: quantization config; must be an fp8 dtype.
-      stacked: treat the leading axis as a per-layer stack.
+      stacked: back-compat alias for ``stack_ndim=1``.
+      stack_ndim: number of leading per-slice stack axes (overrides
+        ``stacked``; e.g. 2 for (layers, experts) MoE expert weights).
+      k_ndim: number of contracted axes following the stack (default 1).
       keep_limbs: keep the 3-byte/elem pre-decomposed planes resident;
         default: only when ``cfg`` streams them (``use_kernel and not
         fused``). Paths that find them missing fall back to the packed
@@ -205,16 +238,18 @@ def prepare_weight(w, cfg: QuantConfig, *, stacked: bool = False,
     if not cfg.is_fp8:
         raise ValueError(f"prepare_weight requires an fp8 dtype, got "
                          f"{cfg.dtype!r}")
+    if stack_ndim is None:
+        stack_ndim = 1 if stacked else 0
     if keep_limbs is None:
         keep_limbs = cfg.use_kernel and not cfg.fused
-    key = (id(w), cfg.dtype, cfg.accum, cfg.per_channel, bool(stacked),
-           bool(keep_limbs),
+    key = (id(w), cfg.dtype, cfg.accum, cfg.per_channel, int(stack_ndim),
+           int(k_ndim), bool(keep_limbs),
            None if shardings is None else tuple(shardings))
     hit = _CACHE.get(key)
     if hit is not None and hit[0]() is w:
         PREP_STATS["cache_hits"] += 1
         return hit[1]
-    pw = _build(w, cfg, stacked, keep_limbs, shardings)
+    pw = _build(w, cfg, stack_ndim, k_ndim, keep_limbs, shardings)
     try:
         # weak ref: cache validity without pinning the raw weight (the
         # prepared planes replace it in the serving path)
@@ -228,35 +263,69 @@ def clear_prepared_cache():
     _CACHE.clear()
 
 
-# Weights consumed via models.linear.proj, keyed by their parent module
-# child name. Other 2D+ parameters (embeddings, router/expert einsums,
-# attention output einsum, conv filters) are *not* proj-consumed and must
+# Weights consumed via models.linear.proj / models' qeinsum call sites,
+# keyed by their parent module child name. The remaining 2D+ parameters
+# (embedding tables — shared with the lookup path — and conv filters)
 # stay raw arrays.
 _PROJ_WEIGHTS = {
-    "attn": {"wq", "wk", "wv"},
+    "attn": {"wq", "wk", "wv", "wo"},
     "ffn": {"wg", "wu", "wi", "wd"},
+    "moe": {"wr", "wg", "wu", "wi", "wd"},
     "ssm": {"wx", "wz", "wdt_down", "wdt_up", "wB", "wC", "wo"},
 }
+
+# Contracted-axis count per (parent, name): the attention out-projection
+# flattens (heads, head_dim) into the kernel's K.
+_K_NDIM = {("attn", "wo"): 2}
 
 # Subtrees whose leaves are stacked along a leading per-layer axis
 # (consumed via lax.scan / lax.map in models.transformer).
 _STACKED_ROOTS = {"layers", "encoder", "cross"}
+
+# Logical dim names that mark leading per-slice stack axes: per-layer
+# scan stacks plus the per-expert axis of MoE expert weights.
+_STACK_DIM_NAMES = {"layers", "groups", "sub", "experts"}
+
+
+def _stack_ndim_of(path, dims, ndim: int, k_ndim: int) -> int:
+    """Leading stack-axis count of one weight.
+
+    With a logical-dims tuple the count is exact (leading dims drawn from
+    ``_STACK_DIM_NAMES`` — handles (layers, experts) MoE stacks and the
+    hybrid (groups, sub) nesting). Without dims, fall back to the path
+    heuristic: one axis under a scanned root, plus the expert axis for
+    MoE expert weights.
+    """
+    if isinstance(dims, tuple) and len(dims) == ndim:
+        n = 0
+        while n < len(dims) and dims[n] in _STACK_DIM_NAMES:
+            n += 1
+        return min(n, ndim - k_ndim - 1)
+    n = 1 if any(p in _STACKED_ROOTS for p in path) else 0
+    if len(path) >= 2 and path[-2] == "moe" and path[-1] != "wr":
+        n += 1  # per-expert axis of the expert einsum weights
+    return min(n, ndim - k_ndim - 1)
 
 
 def prepare_params(params, cfg: QuantConfig, *, dims=None, rules=None):
     """Return ``params`` with every proj-consumed weight prepared.
 
     Walks the nested-dict parameter tree of ``models.transformer`` and
-    replaces each linear-layer weight with its :class:`PreparedWeight`
-    (leaving embeddings, norms, einsum weights, and biases untouched).
-    Stacked per-layer subtrees get per-layer-slice scales. Idempotent and
-    cache-backed: calling twice on the same tree builds nothing new.
+    replaces each matmul-consumed weight with its :class:`PreparedWeight`
+    (leaving embedding tables, norms, conv filters, and biases
+    untouched). Stacked subtrees (per-layer scans, per-expert MoE
+    weights) get per-slice scales; the attention out-projection's
+    (heads, head_dim) axes are flattened into the kernel's K. Idempotent
+    and cache-backed: calling twice on the same tree builds nothing new.
 
     Args:
       params: nested-dict parameter tree (``models.init_params``).
       cfg: quantization config; non-MGS configs pass through untouched.
       dims: matching logical-dims tree (``init_params``'s second return /
-        ``models.param_dims``). Optional; required for sharded builds.
+        ``models.param_dims``). Optional but recommended — it makes the
+        stack-axis inference exact for the grouped/expert layouts (MoE
+        (layers, experts) stacks, hybrid (groups, sub) nesting) and is
+        required for sharded builds.
       rules: :class:`repro.parallel.sharding.Rules` for the serving mesh.
         When both ``dims`` and ``rules`` are given, each weight's plane
         shardings are derived from its logical dims
@@ -264,7 +333,7 @@ def prepare_params(params, cfg: QuantConfig, *, dims=None, rules=None):
         are built directly into the mesh layout.
 
     Returns:
-      The parameter tree with proj weights replaced by PreparedWeights.
+      The parameter tree with matmul weights replaced by PreparedWeights.
     """
     if not (cfg.is_fp8 and cfg.accum in ("mgs_exact", "mgs_dmac")):
         return params
@@ -280,16 +349,18 @@ def prepare_params(params, cfg: QuantConfig, *, dims=None, rules=None):
                     for k, v in node.items()}
         if (len(path) >= 2 and path[-1] in _PROJ_WEIGHTS.get(path[-2], ())
                 and getattr(node, "ndim", 0) >= 2):
-            stacked = any(p in _STACKED_ROOTS for p in path)
+            k_ndim = _K_NDIM.get((path[-2], path[-1]), 1)
+            stack_ndim = _stack_ndim_of(path, dnode, node.ndim, k_ndim)
             shardings = None
             if shard and isinstance(dnode, tuple) and len(dnode) == node.ndim:
                 specs = prepared_specs(dnode, node.shape, rules,
-                                       stacked=stacked,
+                                       stack_ndim=stack_ndim,
+                                       k_ndim=k_ndim,
                                        per_channel=cfg.per_channel)
                 shardings = tuple(NamedSharding(rules.mesh, s)
                                   for s in specs)
-            return prepare_weight(node, cfg, stacked=stacked,
-                                  shardings=shardings)
+            return prepare_weight(node, cfg, stack_ndim=stack_ndim,
+                                  k_ndim=k_ndim, shardings=shardings)
         return node
 
     return walk(params, dims, ())

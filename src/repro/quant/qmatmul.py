@@ -1,4 +1,9 @@
-"""Quantized matmul dispatch — every model linear layer routes through here.
+"""Canonical (M, K, N) quantized matmul dispatch.
+
+Model code reaches this through :func:`repro.quant.qeinsum`, which
+canonicalizes arbitrary 2-operand einsums (grouped, batched, multi-axis
+K) into this function's ``(..., K) @ (K, N)`` form — so every model
+contraction shares one numerics dispatch and one calibration namespace.
 
 Given a ``QuantConfig``, ``qmatmul(x, w, cfg)`` quantizes the operands,
 runs the configured numerics, and rescales:
@@ -43,23 +48,34 @@ from .quantize import quantize_fp8, quantize_int
 __all__ = ["qmatmul"]
 
 
-def _exact_flush_period(cfg: QuantConfig, w_sigma):
-    """Markov-planned flush period (static python int), or None."""
+def _exact_flush_period(cfg: QuantConfig, w_sigma, x_sigma):
+    """Markov-planned flush period (static python int), or None.
+
+    ``x_sigma`` is the call site's observed activation limb sigma
+    (calibration table, else the PreparedWeight's stamped ``act_sigma``);
+    ``None`` falls back to the planner's uniform-limb default.
+    """
     if cfg.flush_target is None:
         return None
     from repro.core.markov import plan_flush_period
     return plan_flush_period(cfg.block_k, target_overflow=cfg.flush_target,
-                             sigma_limb_w=w_sigma)
+                             sigma_limb_x=x_sigma, sigma_limb_w=w_sigma)
 
 
 def qmatmul(x, w, cfg: QuantConfig, out_dtype=None, *, bias=None,
-            activation: str = "none"):
+            activation: str = "none", site: str | None = None):
     """(..., K) @ (K, N) under the quantized numerics of ``cfg``.
 
     ``bias`` (N,) and ``activation`` (see kernels ACTIVATIONS) form an
     optional epilogue ``activation(out + bias)`` applied after
     dequantization — fused into the exact-mode kernel when
     ``cfg.fused_exact``, a follow-up elementwise pass otherwise.
+
+    ``site`` names the call site (e.g. ``"ffn.wg"``) for the calibration
+    subsystem: under ``quant.calibrate.calibrating()`` the quantized
+    activation's limb statistics are recorded per site, and a calibrated
+    ``cfg`` feeds the site's observed sigma into the Markov flush
+    planner (per-call-site flush periods).
     """
     if out_dtype is None:
         out_dtype = x.dtype
@@ -78,6 +94,9 @@ def qmatmul(x, w, cfg: QuantConfig, out_dtype=None, *, bias=None,
                              f"config format {fmt.name!r}")
         margin = cfg.fp8_margin
         qx = quantize_fp8(x, fmt, margin=margin)
+        if cfg.accum in ("mgs_exact", "mgs_dmac"):
+            from .calibrate import observe
+            observe(site, qx.q, fmt)
         if prepared:
             w_scale = w.scale
         else:
@@ -89,13 +108,16 @@ def qmatmul(x, w, cfg: QuantConfig, out_dtype=None, *, bias=None,
             mode = "exact" if cfg.accum == "mgs_exact" else "dmac"
             w_arg = w if prepared else qw.q
             if mode == "exact":
+                x_sigma = cfg.act_sigma(site)
+                if x_sigma is None and prepared:
+                    x_sigma = w.act_sigma
                 out = kops.mgs_matmul(
                     qx.q, w_arg, fmt, mode, use_kernel=cfg.use_kernel,
                     fused=cfg.fused, gate_subnormal=cfg.gate_subnormal,
                     block_m=cfg.block_m, block_n=cfg.block_n,
                     block_k=cfg.block_k,
                     flush_period=_exact_flush_period(
-                        cfg, w.limb_sigma if prepared else None),
+                        cfg, w.limb_sigma if prepared else None, x_sigma),
                     schedule=cfg.schedule,
                     scale=scale, bias=bias, activation=activation)
                 return out.astype(out_dtype)

@@ -281,8 +281,12 @@ def test_prepare_params_converts_only_proj_weights(rng):
     assert isinstance(out["layers"]["attn"]["wq"], PreparedWeight)
     assert isinstance(out["layers"]["ffn"]["wg"], PreparedWeight)
     assert out["layers"]["attn"]["wq"].codes.shape == (2, 16, 16)
-    # einsum-consumed / norm / embedding leaves stay raw arrays
-    assert not isinstance(out["layers"]["attn"]["wo"], PreparedWeight)
+    # the out-projection is qeinsum-consumed with (heads, head_dim)
+    # flattened into the kernel's K (k_ndim=2)
+    assert isinstance(out["layers"]["attn"]["wo"], PreparedWeight)
+    assert out["layers"]["attn"]["wo"].codes.shape == (2, 16, 16)
+    assert out["layers"]["attn"]["wo"].tail == (16,)
+    # embedding tables (shared with the lookup path) / norms stay raw
     assert not isinstance(out["embed"], PreparedWeight)
     assert not isinstance(out["layers"]["ln1"], PreparedWeight)
     # idempotent: preparing a prepared tree builds nothing new
