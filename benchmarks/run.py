@@ -16,8 +16,8 @@ from .common import Csv
 
 def main() -> None:
     from . import (fig3_dot_error, fig4_overflow, fig5_markov, fig9_pareto,
-                   kernel_bench, roofline_table, table1_accuracy,
-                   table3_energy)
+                   kernel_bench, replica_throughput, roofline_table,
+                   table1_accuracy, table3_energy)
     suites = {
         "fig3": fig3_dot_error.run,
         "fig4": fig4_overflow.run,
@@ -27,6 +27,7 @@ def main() -> None:
         "table3": table3_energy.run,
         "kernel": kernel_bench.run,
         "roofline": roofline_table.run,
+        "replica": replica_throughput.run,
     }
     want = sys.argv[1:] or list(suites)
     csv = Csv()

@@ -6,10 +6,14 @@ no longer exists:
 
 * dotted ``repro.*`` symbol references (in backticks or import lines)
   must resolve to an importable module / attribute chain;
-* relative markdown links must point at files that exist.
+* relative markdown links must point at files that exist;
+* every public symbol (``__all__``) of the serving driver modules
+  (``API_MODULES`` — the serve engine and the replica-group driver) must
+  be mentioned somewhere in README/docs, so new public API cannot land
+  undocumented.
 
 Keeping this in CI means renaming or removing a public symbol forces the
-docs to move with it.
+docs to move with it — and adding one forces the docs to grow with it.
 """
 
 from __future__ import annotations
@@ -26,6 +30,12 @@ SYMBOL = re.compile(r"\brepro(?:\.\w+)+")
 IMPORT = re.compile(r"^\s*from\s+(repro(?:\.\w+)*)\s+import\s+([\w ,]+)",
                     re.MULTILINE)
 LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+
+# Modules whose public API must be covered by README/docs prose. CLI
+# entry points (``main``) are exempt — they are documented as commands,
+# not symbols.
+API_MODULES = ("repro.launch.serve", "repro.launch.replica")
+API_SKIP = {"main"}
 
 
 def resolve_symbol(dotted: str) -> bool:
@@ -68,6 +78,25 @@ def check_file(path: pathlib.Path) -> list:
     return errors
 
 
+def check_api_coverage(files: list) -> list:
+    """Every ``__all__`` symbol of API_MODULES appears in the docs."""
+    text = "\n".join(f.read_text() for f in files)
+    errors = []
+    for mod in API_MODULES:
+        try:
+            m = importlib.import_module(mod)
+        except ImportError as e:
+            errors.append(f"API module {mod} does not import: {e}")
+            continue
+        for name in getattr(m, "__all__", ()):
+            if name in API_SKIP:
+                continue
+            if not re.search(rf"\b{re.escape(name)}\b", text):
+                errors.append(f"public symbol {mod}.{name} is not "
+                              f"mentioned in README.md or docs/")
+    return errors
+
+
 def main() -> int:
     files = [ROOT / "README.md"]
     files += sorted((ROOT / "docs").glob("**/*.md"))
@@ -78,6 +107,7 @@ def main() -> int:
     errors = []
     for f in files:
         errors += check_file(f)
+    errors += check_api_coverage(files)
     for e in errors:
         print(f"check_docs: {e}", file=sys.stderr)
     if not errors:

@@ -19,5 +19,14 @@ XLA_FLAGS="--xla_force_host_platform_device_count=8" \
 # pinning the cross-mesh qeinsum bit-identity on a pure data mesh.
 XLA_FLAGS="--xla_force_host_platform_device_count=8" \
     python -m pytest -x -q -m multidevice tests/test_qeinsum.py
+# Replica-group serving shard (ISSUE-4): 8 devices carved into 2 disjoint
+# (1, 4) sub-meshes, driver tokens == single-engine deterministic serve.
+XLA_FLAGS="--xla_force_host_platform_device_count=8" \
+    python -m pytest -x -q -m multidevice tests/test_replica.py
+
+# Replica-driver example smoke: 2 replica engines on 2 forced host
+# devices, shared prepared planes, tokens identical to single engine.
+XLA_FLAGS="--xla_force_host_platform_device_count=2" \
+    python examples/serve_lm.py --replicas 2
 
 python -m pytest -x -q "$@"

@@ -13,9 +13,10 @@ gradient reduction); ICI carries the model axis.
 from __future__ import annotations
 
 import jax
+import numpy as np
 
 __all__ = ["make_production_mesh", "make_mesh", "make_serve_mesh",
-           "batch_axes"]
+           "carve_submeshes", "batch_axes"]
 
 
 def _mesh(shape, axes):
@@ -57,6 +58,51 @@ def make_serve_mesh(model_parallel: int | None = None):
         raise ValueError(f"model_parallel={mp} does not divide the "
                          f"{n} visible devices")
     return _mesh((n // mp, mp), ("data", "model"))
+
+
+def carve_submeshes(replicas: int, *, model_parallel: int | None = None,
+                    devices=None) -> list:
+    """Partition the device set into ``replicas`` disjoint serving meshes.
+
+    The replica-group serving driver (:mod:`repro.launch.replica`) runs
+    one deterministic :class:`~repro.launch.serve.ServeEngine` per
+    sub-mesh, so each sub-mesh must own its devices exclusively — no
+    device appears in two sub-meshes, and every visible device is used.
+
+    Args:
+      replicas: number of sub-meshes R. Must divide the device count.
+      model_parallel: model (tensor-parallel) axis size of each sub-mesh;
+        default all of the replica's devices (pure TP, matching
+        :func:`make_serve_mesh`). Must divide the per-replica device
+        count; the remainder becomes the sub-mesh's data axis.
+      devices: explicit device list to carve (default ``jax.devices()``).
+        Devices are assigned to replicas in contiguous runs, so on real
+        hardware neighbouring chips (fast ICI) land in the same replica.
+
+    Returns:
+      A list of R ``("data", "model")`` meshes with pairwise-disjoint
+      device sets, each of shape ``(per // model_parallel,
+      model_parallel)`` where ``per = device_count // replicas``.
+    """
+    devs = list(devices) if devices is not None else list(jax.devices())
+    n = len(devs)
+    if replicas < 1 or n % replicas:
+        raise ValueError(f"replicas={replicas} does not divide the "
+                         f"{n} visible devices")
+    per = n // replicas
+    mp = model_parallel if model_parallel is not None else per
+    if mp < 1 or per % mp:
+        raise ValueError(f"model_parallel={mp} does not divide the "
+                         f"{per} devices per replica")
+    meshes = []
+    for r in range(replicas):
+        grid = np.asarray(devs[r * per:(r + 1) * per],
+                          dtype=object).reshape(per // mp, mp)
+        # jax.sharding.Mesh (not jax.make_mesh): make_mesh has no explicit
+        # device list on the jax versions this repo supports, and the
+        # default Auto axis types match _mesh's behaviour.
+        meshes.append(jax.sharding.Mesh(grid, ("data", "model")))
+    return meshes
 
 
 def batch_axes(mesh) -> tuple:

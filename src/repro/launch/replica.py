@@ -1,0 +1,411 @@
+"""Replica-group serving driver: data-parallel throughput, bit-identical
+logits.
+
+The deterministic ``ServeEngine`` layout (``shard_batch=False``) makes
+logits bit-identical across meshes by *replicating* batch-indexed
+activations over the data axes — which deliberately gives up in-engine
+data parallelism. This module restores the throughput without touching
+the numerics: partition the device set into R disjoint sub-meshes
+(:func:`repro.launch.mesh.carve_submeshes`), run one deterministic
+:class:`~repro.launch.serve.ServeEngine` per sub-mesh, and dispatch
+request batches across the replicas. Every replica computes exactly the
+single-engine deterministic program on its own devices, so every
+request's logits are bit-identical to a single-device run — while
+aggregate requests/sec scales with R
+(``benchmarks/replica_throughput.py``).
+
+Weight state is built **once** and shared: replica 0 prepares the
+quantized planes (``quant.prepare_params`` — packed codes, limb planes,
+scales, the cached unembedding view), and the remaining replicas receive
+``device_put`` transfers of the same planes onto their sub-meshes — zero
+re-quantization, counted by ``quant.PREP_STATS`` staying flat in R
+(``tests/test_replica.py``). Calibration is likewise one pass:
+:meth:`ReplicaServeDriver.calibrate` traces replica 0 and installs the
+resulting table on every engine
+(:meth:`~repro.launch.serve.ServeEngine.apply_calibration`).
+
+Scheduling model
+----------------
+Requests are batched in **arrival order** into groups of the engine batch
+size; the *group* is the scheduling unit. Only the group -> replica
+assignment is policy-driven (``"round_robin"`` or ``"least_loaded"``) —
+group composition never is. Since a deterministic engine's outputs depend
+only on the group's contents (never on which devices ran it), the
+driver's outputs are invariant to the scheduler policy and to R, and
+equal to a single engine serving the same requests in the same order.
+
+Lifecycle::
+
+    driver = ReplicaServeDriver(cfg, replicas=4, batch=8, max_len=128)
+    driver.warmup(prompt_len=32)        # compile prefill/decode per replica
+    futs = driver.submit_many(reqs)     # async: Future -> completed Request
+    driver.drain()                      # flush partial group, wait for all
+    print(driver.stats())
+    driver.close()                      # or use it as a context manager
+
+See docs/replica_serving.md for the architecture walkthrough and the
+throughput-vs-determinism trade-off against ``shard_batch=True``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import queue
+import sys
+import threading
+import time
+from concurrent.futures import Future, InvalidStateError
+from typing import Any, Dict, List, Optional, Sequence
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.launch.mesh import carve_submeshes
+from repro.launch.serve import Request, make_engine
+from repro.quant.calibrate import CalibrationTable
+
+__all__ = ["ReplicaServeDriver", "transfer_tree"]
+
+SCHEDULERS = ("round_robin", "least_loaded")
+
+
+def transfer_tree(tree, mesh):
+    """device_put every array leaf of ``tree`` onto ``mesh``, keeping specs.
+
+    The replica sub-meshes all share the ``("data", "model")`` axis names
+    and shape, so a leaf's existing PartitionSpec (derived once, on
+    replica 0, from the weight's logical dims) is re-resolved verbatim on
+    the target mesh: sharded planes stay sharded the same way, just on
+    the new device set. Leaves without a named sharding (single-device
+    sub-meshes) transfer fully replicated. PreparedWeight leaves are
+    registered pytrees, so their codes/limbs/scale planes transfer
+    transparently — this is a pure placement operation, with **no**
+    re-quantization (``quant.PREP_STATS`` is untouched).
+    """
+
+    def move(leaf):
+        if not hasattr(leaf, "sharding"):
+            return leaf
+        sh = leaf.sharding
+        spec = sh.spec if isinstance(sh, NamedSharding) else P()
+        return jax.device_put(leaf, NamedSharding(mesh, spec))
+
+    return jax.tree.map(move, tree)
+
+
+@dataclasses.dataclass
+class _Job:
+    """One dispatched batch group (the scheduling unit)."""
+    requests: List[Request]
+    futures: List[Future]
+    counted: bool = True    # warmup jobs don't enter the served stats
+
+
+class ReplicaServeDriver:
+    """R deterministic ServeEngines on disjoint sub-meshes, one queue each.
+
+    Construction carves ``jax.devices()`` (or ``devices``) into R
+    disjoint ``("data", "model")`` sub-meshes, builds one deterministic
+    engine per sub-mesh — replica 0 prepares the weight planes, replicas
+    1..R-1 receive device_put transfers of the same planes
+    (:func:`transfer_tree`) — and starts one worker thread per replica.
+
+    Args:
+      cfg: model config (the quant config selects the kernel tier, as for
+        a single engine).
+      replicas: number of replica groups R; must divide the device count.
+      batch / max_len / seed / eos_id: per-engine serving parameters (see
+        :class:`~repro.launch.serve.ServeEngine`).
+      params / dims: optional shared parameter tree (+ logical dims);
+        prepared once on replica 0 regardless of R.
+      calibration: optional pre-built table installed on every engine.
+      scheduler: group -> replica assignment policy. ``"round_robin"``
+        cycles replicas in dispatch order; ``"least_loaded"`` picks the
+        replica with the fewest queued + in-flight groups. Outputs are
+        identical under either (see module docstring).
+      model_parallel: model-axis size of each sub-mesh (default: all of
+        the replica's devices — pure TP).
+      devices: explicit device list to carve (default all visible).
+
+    Every engine keeps ``shard_batch=False`` (the deterministic layout),
+    so per-request logits are bit-identical to a single-device run; the
+    driver is the data-parallel axis.
+    """
+
+    def __init__(self, cfg: ModelConfig, replicas: int, *, batch: int,
+                 max_len: int, params=None, dims=None, seed: int = 0,
+                 eos_id: Optional[int] = None,
+                 calibration: Optional[CalibrationTable] = None,
+                 scheduler: str = "round_robin",
+                 model_parallel: Optional[int] = None, devices=None):
+        if scheduler not in SCHEDULERS:
+            raise ValueError(f"scheduler {scheduler!r} not in {SCHEDULERS}")
+        self.batch = batch
+        self.scheduler = scheduler
+        self.meshes = carve_submeshes(replicas, model_parallel=model_parallel,
+                                      devices=devices)
+        first = make_engine(cfg, self.meshes[0], batch=batch,
+                            max_len=max_len, params=params, dims=dims,
+                            seed=seed, eos_id=eos_id,
+                            calibration=calibration)
+        self.engines = [first]
+        for mesh in self.meshes[1:]:
+            # shared prepared planes: transfer, never re-prepare.
+            # make_engine passes the PreparedWeight leaves through
+            # (preparation is idempotent) and re-places raw leaves onto
+            # the already-correct layout.
+            self.engines.append(make_engine(
+                cfg, mesh, batch=batch, max_len=max_len,
+                params=transfer_tree(first.params, mesh), dims=first.dims,
+                seed=seed, eos_id=eos_id, calibration=calibration))
+
+        self._lock = threading.Lock()
+        self._pending: List = []        # [(Request, Future)] awaiting a group
+        self._inflight = [0] * replicas  # queued + running groups per replica
+        self._rr = 0
+        self._t0: Optional[float] = None
+        self._stats: Dict[str, Any] = {
+            "prefill_tokens": 0, "decode_tokens": 0, "requests": 0,
+            "groups": 0, "busy_s": 0.0,
+            "groups_per_replica": [0] * replicas}
+        self._closed = False
+        self._queues: List["queue.Queue"] = [queue.Queue()
+                                             for _ in range(replicas)]
+        self._workers = [
+            threading.Thread(target=self._worker, args=(i,), daemon=True,
+                             name=f"replica-serve-{i}")
+            for i in range(replicas)]
+        for t in self._workers:
+            t.start()
+
+    # -- worker ------------------------------------------------------------
+
+    def _worker(self, idx: int):
+        engine, q = self.engines[idx], self._queues[idx]
+        while True:
+            job = q.get()
+            if job is None:
+                q.task_done()
+                return
+            try:
+                stats = engine.run(job.requests)
+                if job.counted:
+                    with self._lock:
+                        self._stats["prefill_tokens"] += stats[
+                            "prefill_tokens"]
+                        self._stats["decode_tokens"] += stats[
+                            "decode_tokens"]
+                        self._stats["requests"] += len(job.requests)
+                        self._stats["groups"] += 1
+                        self._stats["groups_per_replica"][idx] += 1
+                        self._stats["busy_s"] += stats["wall_s"]
+                for r, fut in zip(job.requests, job.futures):
+                    # a caller may have cancelled one future of the
+                    # group while it was queued; the batch still ran, so
+                    # deliver the others instead of poisoning them with
+                    # the cancelled one's InvalidStateError.
+                    try:
+                        fut.set_result(r)
+                    except InvalidStateError:
+                        pass
+            except BaseException as e:          # propagate into the futures
+                delivered = False
+                for fut in job.futures:
+                    if not fut.done():
+                        fut.set_exception(e)
+                        delivered = True
+                if not delivered:
+                    # every future already done (e.g. all cancelled while
+                    # queued): nobody is listening, but an engine failure
+                    # must not vanish silently.
+                    import traceback
+                    print(f"replica-serve-{idx}: engine failure with no "
+                          f"live futures to notify:", file=sys.stderr)
+                    traceback.print_exception(type(e), e, e.__traceback__)
+            finally:
+                with self._lock:
+                    self._inflight[idx] -= 1
+                q.task_done()
+
+    # -- dispatch ----------------------------------------------------------
+
+    def _pick_replica_locked(self) -> int:
+        if self.scheduler == "least_loaded":
+            return min(range(len(self._queues)),
+                       key=lambda i: self._inflight[i])
+        idx = self._rr
+        self._rr = (self._rr + 1) % len(self._queues)
+        return idx
+
+    def _dispatch_locked(self, job: _Job, idx: Optional[int] = None):
+        if self._closed:
+            raise RuntimeError("driver is closed")
+        if idx is None:
+            idx = self._pick_replica_locked()
+        self._inflight[idx] += 1
+        if job.counted and self._t0 is None:
+            self._t0 = time.time()
+        self._queues[idx].put(job)
+
+    def _flush_locked(self):
+        while self._pending:
+            group = self._pending[:self.batch]
+            del self._pending[:self.batch]
+            self._dispatch_locked(_Job([r for r, _ in group],
+                                       [f for _, f in group]))
+
+    # -- public API --------------------------------------------------------
+
+    @property
+    def replicas(self) -> int:
+        return len(self.engines)
+
+    def submit(self, request: Request) -> Future:
+        """Enqueue one request; returns a Future of the completed Request.
+
+        Requests accumulate in arrival order until a full group of
+        ``batch`` exists, which is then dispatched to a replica by the
+        scheduler policy. A partial trailing group is dispatched by
+        :meth:`flush` / :meth:`drain` (the engine pads it).
+        """
+        fut: Future = Future()
+        with self._lock:
+            if self._closed:
+                raise RuntimeError("driver is closed")
+            self._pending.append((request, fut))
+            if len(self._pending) >= self.batch:
+                self._flush_locked()
+        return fut
+
+    def submit_many(self, requests: Sequence[Request]) -> List[Future]:
+        """Submit a sequence of requests, preserving their order."""
+        return [self.submit(r) for r in requests]
+
+    def flush(self):
+        """Dispatch any partial pending group immediately."""
+        with self._lock:
+            self._flush_locked()
+
+    def drain(self):
+        """Flush and block until every dispatched request has completed."""
+        self.flush()
+        for q in self._queues:
+            q.join()
+
+    def warmup(self, prompt_len: int, max_new: int = 1, *, seed: int = 0):
+        """Compile each replica's prefill/decode before traffic arrives.
+
+        Pushes one uncounted dummy group (prompt length ``prompt_len``,
+        the padded length real groups will compile for) to **every**
+        replica so the R compilations proceed concurrently, then waits
+        for all of them. Warmup tokens never enter :meth:`stats`.
+        """
+        import numpy as np
+        rng = np.random.default_rng(seed)
+        futs: List[Future] = []
+        cfg = self.engines[0].cfg
+        with self._lock:
+            for idx in range(self.replicas):
+                req = Request(rid=-1 - idx,
+                              prompt=rng.integers(
+                                  1, cfg.vocab, prompt_len).astype(np.int32),
+                              max_new_tokens=max_new)
+                fut: Future = Future()
+                futs.append(fut)
+                self._dispatch_locked(_Job([req], [fut], counted=False),
+                                      idx=idx)
+        for fut in futs:
+            fut.result()
+
+    def calibrate(self, prompts=None, *, seed: int = 0) -> CalibrationTable:
+        """One calibration pass, shared by every replica.
+
+        Traces replica 0 (:meth:`ServeEngine.calibrate` — one eager
+        prefill + decode step recording per-site activation limb PMFs)
+        and installs the resulting table on all engines via
+        :meth:`~repro.launch.serve.ServeEngine.apply_calibration`. Call
+        while idle (before traffic, or after :meth:`drain`): installing a
+        table rebuilds the jitted entry points.
+        """
+        self.drain()
+        table = self.engines[0].calibrate(prompts, update=True, seed=seed)
+        for engine in self.engines[1:]:
+            engine.apply_calibration(table)
+        return table
+
+    _COUNTERS = ("prefill_tokens", "decode_tokens", "requests", "groups",
+                 "busy_s")
+
+    def run(self, requests: Sequence[Request]) -> Dict[str, Any]:
+        """Synchronous convenience mirroring ``ServeEngine.run``: submit
+        everything, drain, return stats for **this call** (counter deltas
+        over a wall clock spanning exactly this submit-to-drain window —
+        :meth:`stats` stays cumulative since construction).
+
+        The per-call numbers assume no *concurrent* submitters: traffic
+        another thread pushes via :meth:`submit` during the window lands
+        in the deltas (and :meth:`drain` waits for it). Mixing the sync
+        and async APIs is safe for correctness, but read :meth:`stats`
+        for the aggregate instead of trusting this return value."""
+        with self._lock:
+            base = {k: self._stats[k] for k in self._COUNTERS}
+            base_groups = list(self._stats["groups_per_replica"])
+        t0 = time.time()
+        futs = self.submit_many(requests)
+        self.drain()
+        for fut in futs:
+            fut.result()    # surface worker exceptions
+        wall = max(time.time() - t0, 1e-9)
+        with self._lock:
+            out = {k: self._stats[k] - base[k] for k in self._COUNTERS}
+            out["groups_per_replica"] = [
+                g - b for g, b in zip(self._stats["groups_per_replica"],
+                                      base_groups)]
+        out["replicas"] = self.replicas
+        out["scheduler"] = self.scheduler
+        out["wall_s"] = wall
+        out["requests_per_s"] = out["requests"] / wall
+        out["decode_tok_per_s"] = out["decode_tokens"] / wall
+        return out
+
+    def stats(self) -> Dict[str, Any]:
+        """Cumulative served-traffic statistics since construction.
+
+        ``busy_s`` sums per-replica engine wall time (it exceeds
+        ``wall_s`` when replicas overlap — that overlap *is* the
+        data-parallel speedup); ``wall_s`` spans first counted dispatch
+        to now, idle gaps included (use :meth:`run`'s return value for
+        per-call rates). Warmup traffic is excluded.
+        """
+        with self._lock:
+            out = dict(self._stats,
+                       groups_per_replica=list(
+                           self._stats["groups_per_replica"]))
+            t0 = self._t0
+        out["replicas"] = self.replicas
+        out["scheduler"] = self.scheduler
+        out["wall_s"] = (time.time() - t0) if t0 is not None else 0.0
+        wall = max(out["wall_s"], 1e-9)
+        out["requests_per_s"] = out["requests"] / wall
+        out["decode_tok_per_s"] = out["decode_tokens"] / wall
+        return out
+
+    def close(self):
+        """Drain outstanding work and stop the worker threads."""
+        with self._lock:
+            if self._closed:
+                return
+            self._flush_locked()
+            self._closed = True
+        for q in self._queues:
+            q.put(None)
+        for t in self._workers:
+            t.join()
+
+    def __enter__(self) -> "ReplicaServeDriver":
+        return self
+
+    def __exit__(self, *exc):
+        self.close()
+        return False

@@ -31,10 +31,11 @@ from repro.launch.mesh import make_mesh, make_serve_mesh
 from repro.models import (decode_step, init_cache, init_params, param_dims,
                           prefill)
 from repro.parallel.sharding import make_rules, use_rules
-from repro.quant import PreparedWeight, calibrating, prepare_params
+from repro.quant import (PreparedWeight, calibrating, prepare_logits_head,
+                         prepare_params)
 from repro.quant.calibrate import CalibrationTable
 
-__all__ = ["ServeEngine", "Request", "main"]
+__all__ = ["ServeEngine", "Request", "make_engine", "main"]
 
 
 def _place_raw_leaves(params, dims, rules):
@@ -64,15 +65,22 @@ def _stamp_act_sigmas(params, table: CalibrationTable):
     """Stamp each PreparedWeight with its call site's observed act sigma.
 
     The site name is the ``parent.name`` path convention the model call
-    sites use (``"ffn.wg"``, ``"attn.wq"``, ...). Planes are shared; only
-    the static aux changes.
+    sites use (``"ffn.wg"``, ``"attn.wq"``, ...); the top-level
+    unembedding weights (``unembed`` / the tied ``unembed_prepared``
+    view) belong to the ``"logits"`` site. Planes are shared; only the
+    static aux changes.
     """
 
     def walk(node, path):
         if isinstance(node, dict):
             return {k: walk(v, path + (k,)) for k, v in node.items()}
-        if isinstance(node, PreparedWeight) and len(path) >= 2:
-            sigma = table.sigma(f"{path[-2]}.{path[-1]}")
+        if isinstance(node, PreparedWeight):
+            if path and path[-1] in ("unembed", "unembed_prepared"):
+                sigma = table.sigma("logits")
+            elif len(path) >= 2:
+                sigma = table.sigma(f"{path[-2]}.{path[-1]}")
+            else:
+                sigma = None
             if sigma is not None:
                 return node.with_act_sigma(sigma)
         return node
@@ -154,8 +162,15 @@ class ServeEngine:
                 # allocation): they make stack/K-axis inference exact for
                 # the grouped/expert prepared layouts, mesh or not.
                 dims = param_dims(cfg)
+            self.dims = dims
             self.params = prepare_params(
                 params, cfg.quant, dims=dims,
+                rules=self.rules if multi else None)
+            # cache a PreparedWeight for the unembedding view too: the
+            # logits head otherwise re-quantizes the raw (shared) embed
+            # table on every prefill/decode step.
+            self.params = prepare_logits_head(
+                self.params, cfg.quant, tied=cfg.tie_embeddings,
                 rules=self.rules if multi else None)
             if calibration is not None:
                 self.params = _stamp_act_sigmas(self.params, calibration)
@@ -183,6 +198,26 @@ class ServeEngine:
                 (self.batch, self.cfg.encoder_len, self.cfg.d_model),
                 jnp.bfloat16)
         return batch
+
+    def apply_calibration(self, table: CalibrationTable):
+        """Install a calibration table built elsewhere on this engine.
+
+        The table is stored on the QuantConfig, stamped onto every
+        :class:`~repro.quant.PreparedWeight` (``act_sigma`` — planes are
+        shared, only the static aux changes), and the jitted entry points
+        rebuilt so later traces plan their flush periods from the table's
+        observed per-site sigmas. This is how replica engines share one
+        calibration pass (:class:`repro.launch.replica.ReplicaServeDriver`
+        calibrates replica 0 and applies the table to the rest). Never
+        changes results — the exact kernels are flush-invariant.
+
+        Must not race in-flight requests: jit rebuild mid-request would
+        retrace under the engine's feet. Drain first.
+        """
+        self.cfg = dataclasses.replace(
+            self.cfg, quant=self.cfg.quant.with_calibration(table))
+        self.params = _stamp_act_sigmas(self.params, table)
+        self._build_jits()
 
     def calibrate(self, prompts: Optional[List[np.ndarray]] = None, *,
                   update: bool = True, seed: int = 0) -> CalibrationTable:
@@ -223,10 +258,7 @@ class ServeEngine:
             decode_step(self.params, self.cfg, cur, cache)
         table = rec.table()
         if update:
-            self.cfg = dataclasses.replace(
-                self.cfg, quant=self.cfg.quant.with_calibration(table))
-            self.params = _stamp_act_sigmas(self.params, table)
-            self._build_jits()
+            self.apply_calibration(table)
         return table
 
     def run(self, requests: List[Request]) -> Dict[str, Any]:
@@ -271,6 +303,25 @@ class ServeEngine:
                 "decode_tok_per_s": n_decode_tokens / max(dt, 1e-9)}
 
 
+def make_engine(cfg: ModelConfig, mesh, *, batch: int, max_len: int,
+                params=None, dims=None, seed: int = 0,
+                eos_id: Optional[int] = None,
+                calibration: Optional[CalibrationTable] = None,
+                deterministic: bool = True) -> ServeEngine:
+    """Engine factory — one construction point for every driver.
+
+    A thin, keyword-only wrapper over :class:`ServeEngine` so the CLI
+    below, the replica-group driver
+    (:class:`repro.launch.replica.ReplicaServeDriver`), and tests all
+    build engines through one signature: pass ``params`` (prepared trees
+    included — preparation is idempotent) to share weights across
+    engines, and ``calibration`` to start pre-calibrated.
+    """
+    return ServeEngine(cfg, mesh, batch=batch, max_len=max_len,
+                       params=params, dims=dims, seed=seed, eos_id=eos_id,
+                       calibration=calibration, deterministic=deterministic)
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="deepseek-7b")
@@ -281,30 +332,56 @@ def main():
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--mesh", default="1x1",
                     help='"DATAxMODEL" (e.g. 2x4) or "auto" (pure TP '
-                         "over every visible device)")
+                         "over every visible device); ignored with "
+                         "--replicas > 1 (the driver carves sub-meshes)")
+    ap.add_argument("--replicas", type=int, default=1,
+                    help="run R data-parallel replica engines on disjoint "
+                         "sub-meshes (repro.launch.replica) — aggregate "
+                         "throughput scales with R while every request "
+                         "stays bit-identical to a single-engine run")
+    ap.add_argument("--scheduler", default="round_robin",
+                    choices=("round_robin", "least_loaded"),
+                    help="replica dispatch policy (--replicas > 1)")
     ap.add_argument("--no-deterministic", action="store_true",
                     help="batch-over-data throughput layout instead of "
                          "the deterministic (cross-mesh bit-identical) "
-                         "default — see docs/serving.md")
+                         "default — see docs/serving.md; incompatible "
+                         "with --replicas > 1 (replica engines are "
+                         "deterministic by construction)")
     args = ap.parse_args()
+    if args.replicas > 1 and args.no_deterministic:
+        ap.error("--no-deterministic is incompatible with --replicas > 1: "
+                 "the replica driver exists to provide data-parallel "
+                 "throughput *with* the deterministic layout "
+                 "(docs/replica_serving.md)")
 
     cfg = (reduced_config(args.arch) if args.reduced
            else get_config(args.arch))
-    if args.mesh == "auto":
-        mesh = make_serve_mesh()   # every visible device, pure TP
-    else:
-        data_p, model_p = (int(x) for x in args.mesh.split("x"))
-        mesh = make_mesh((data_p, model_p), ("data", "model"))
     rng = np.random.default_rng(0)
     reqs = [Request(rid=i,
                     prompt=rng.integers(1, cfg.vocab,
                                         args.prompt_len).astype(np.int32),
                     max_new_tokens=args.max_new)
             for i in range(args.n_requests)]
-    engine = ServeEngine(cfg, mesh, batch=args.batch,
-                         max_len=args.prompt_len + args.max_new + 1,
-                         deterministic=not args.no_deterministic)
-    stats = engine.run(reqs)
+    max_len = args.prompt_len + args.max_new + 1
+
+    if args.replicas > 1:
+        from repro.launch.replica import ReplicaServeDriver
+        with ReplicaServeDriver(cfg, args.replicas, batch=args.batch,
+                                max_len=max_len,
+                                scheduler=args.scheduler) as driver:
+            driver.warmup(prompt_len=args.prompt_len,
+                          max_new=args.max_new)
+            stats = driver.run(reqs)
+    else:
+        if args.mesh == "auto":
+            mesh = make_serve_mesh()   # every visible device, pure TP
+        else:
+            data_p, model_p = (int(x) for x in args.mesh.split("x"))
+            mesh = make_mesh((data_p, model_p), ("data", "model"))
+        engine = make_engine(cfg, mesh, batch=args.batch, max_len=max_len,
+                             deterministic=not args.no_deterministic)
+        stats = engine.run(reqs)
     print(stats)
     for r in reqs[:2]:
         print(f"req {r.rid}: {r.out_tokens[:10]}")

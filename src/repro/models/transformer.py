@@ -342,8 +342,18 @@ def _logits(params, cfg: ModelConfig, x):
     Under an exact-MGS QuantConfig the logits head accumulates in the
     exact kernel like every other matmul — the last float contraction
     that used to all-reduce over a data-sharded embed dim, and hence the
-    last source of cross-mesh float divergence (docs/serving.md)."""
-    if cfg.tie_embeddings:
+    last source of cross-mesh float divergence (docs/serving.md).
+
+    A serving parameter tree carries a cached PreparedWeight for the
+    unembedding view (``quant.prepare_logits_head`` — the tied path
+    stores it under ``"unembed_prepared"`` since the raw embed table must
+    stay raw for the lookup), so no prefill/decode step re-quantizes the
+    full ``(vocab, d_model)`` table."""
+    pw = params.get("unembed_prepared") if isinstance(params, dict) else None
+    if pw is not None:
+        out = qeinsum("btd,dv->btv", x, pw, cfg.quant,
+                      site="logits", out_dtype=jnp.float32)
+    elif cfg.tie_embeddings:
         out = qeinsum("btd,vd->btv", x, params["embed"], cfg.quant,
                       site="logits", out_dtype=jnp.float32)
     else:

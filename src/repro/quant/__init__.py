@@ -5,7 +5,8 @@ from .calibrate import (ActivationRecorder, CalibrationTable, calibrating,
                         current_recorder)
 from .config import ACCUMS, DTYPES, QuantConfig
 from .prepared import (PREP_STATS, PreparedWeight, clear_prepared_cache,
-                       prepare_params, prepare_weight)
+                       prepare_logits_head, prepare_params, prepare_unembed,
+                       prepare_weight)
 from .qeinsum import QeinsumPlan, plan_qeinsum, qeinsum
 from .qmatmul import qmatmul
 from .quantize import (QTensor, dequantize_int, fake_quant_fp8,
@@ -15,6 +16,7 @@ __all__ = ["ACCUMS", "DTYPES", "QuantConfig", "qmatmul", "qeinsum",
            "plan_qeinsum", "QeinsumPlan", "QTensor",
            "dequantize_int", "fake_quant_fp8", "fake_quant_int",
            "quantize_fp8", "quantize_int", "PreparedWeight",
-           "prepare_weight", "prepare_params", "PREP_STATS",
+           "prepare_weight", "prepare_params", "prepare_unembed",
+           "prepare_logits_head", "PREP_STATS",
            "clear_prepared_cache", "ActivationRecorder", "CalibrationTable",
            "calibrating", "current_recorder"]

@@ -46,7 +46,8 @@ from .config import QuantConfig
 from .quantize import quantize_fp8
 
 __all__ = ["PreparedWeight", "prepare_weight", "prepare_params",
-           "PREP_STATS", "clear_prepared_cache"]
+           "prepare_unembed", "prepare_logits_head", "PREP_STATS",
+           "clear_prepared_cache"]
 
 # Process-level preparation accounting: ``prepared`` counts actual
 # quantize+decompose builds, ``cache_hits`` counts reuses. Serving must
@@ -257,6 +258,110 @@ def prepare_weight(w, cfg: QuantConfig, *, stacked: bool = False,
     except TypeError:
         _CACHE[key] = (lambda w=w: w, pw)  # non-weakrefable: hold strong
     return pw
+
+
+def prepare_unembed(embed, cfg: QuantConfig, *,
+                    shardings=None) -> PreparedWeight:
+    """Prepared unembedding view of a tied embedding table, cached.
+
+    Tied-embedding models keep the raw ``(vocab, d_model)`` table in the
+    parameter tree (the token-lookup path needs raw rows), so the logits
+    head used to re-quantize the whole table on *every* prefill/decode
+    step — the largest per-token re-quantization left in serving. This
+    helper quantizes + decomposes the **transposed** ``(d_model, vocab)``
+    view once — canonical ``(K, N)`` planes the logits head's
+    ``qeinsum("btd,dv->btv", ...)`` consumes directly — and caches the
+    result per process keyed on the *embedding table's* identity (the
+    transposed view is an internal temporary; callers never manage it).
+
+    Args:
+      embed: the raw ``(vocab, d_model)`` embedding table.
+      cfg: fp8 quantization config (same contract as
+        :func:`prepare_weight`).
+      shardings: optional ``(codes, limbs, scale)`` NamedShardings for
+        the **(d_model, vocab)-shaped view** — derive them from the
+        logical dims ``("embed", "vocab")``, e.g. via
+        :func:`repro.parallel.sharding.prepared_specs`.
+
+    Returns:
+      The cached :class:`PreparedWeight` of the unembedding view. Builds
+      count once in ``PREP_STATS``; re-calls on the same table are cache
+      hits. The codes plane costs one extra byte per table element of
+      device memory — the price of never re-quantizing the head again.
+    """
+    if not cfg.is_fp8:
+        raise ValueError(f"prepare_unembed requires an fp8 dtype, got "
+                         f"{cfg.dtype!r}")
+    if getattr(embed, "ndim", 0) != 2:
+        raise ValueError(f"embedding table must be 2D, got shape "
+                         f"{getattr(embed, 'shape', None)}")
+    keep_limbs = cfg.use_kernel and not cfg.fused
+    key = ("unembed", id(embed), cfg.dtype, cfg.accum, cfg.per_channel,
+           bool(keep_limbs),
+           None if shardings is None else tuple(shardings))
+    hit = _CACHE.get(key)
+    if hit is not None and hit[0]() is embed:
+        PREP_STATS["cache_hits"] += 1
+        return hit[1]
+    view = jnp.swapaxes(jnp.asarray(embed), 0, 1)   # (V, d) -> (d, V)
+    pw = _build(view, cfg, 0, 1, keep_limbs, shardings)
+    try:
+        _CACHE[key] = (weakref.ref(embed), pw)
+    except TypeError:
+        _CACHE[key] = (lambda e=embed: e, pw)
+    return pw
+
+
+def prepare_logits_head(params, cfg: QuantConfig, *, tied: bool,
+                        rules=None):
+    """Return ``params`` with the logits-head weight prepared.
+
+    Serving-side companion to :func:`prepare_params`, which leaves the
+    embedding table raw (it is shared with the lookup path) and does not
+    know whether the model ties its unembedding. Given that knowledge
+    (``tied``, from ``ModelConfig.tie_embeddings``):
+
+    * tied: adds an ``"unembed_prepared"`` entry — the cached
+      :func:`prepare_unembed` view of ``params["embed"]`` — which
+      ``models.transformer._logits`` picks up, eliminating the per-step
+      re-quantization of the full table;
+    * untied: replaces a raw ``params["unembed"]`` with its
+      :class:`PreparedWeight` (the ``(d_model, vocab)`` layout is
+      already the canonical ``(K, N)``).
+
+    Idempotent (already-prepared trees pass through, so replica engines
+    built from transferred params add nothing) and a no-op for non-MGS
+    configs. ``rules`` (with the owning mesh) builds the planes directly
+    into their sharded layout, exactly like :func:`prepare_params`.
+    """
+    if not (cfg.is_fp8 and cfg.accum in ("mgs_exact", "mgs_dmac")):
+        return params
+
+    def head_shardings(shape_dv):
+        if rules is None:
+            return None
+        from jax.sharding import NamedSharding
+        from repro.parallel.sharding import prepared_specs
+        specs = prepared_specs(("embed", "vocab"), tuple(shape_dv), rules,
+                               per_channel=cfg.per_channel)
+        return tuple(NamedSharding(rules.mesh, s) for s in specs)
+
+    if tied:
+        embed = params.get("embed") if isinstance(params, dict) else None
+        if ("unembed_prepared" in params
+                or getattr(embed, "ndim", 0) != 2):
+            return params
+        out = dict(params)
+        out["unembed_prepared"] = prepare_unembed(
+            embed, cfg, shardings=head_shardings(embed.shape[::-1]))
+        return out
+    w = params.get("unembed") if isinstance(params, dict) else None
+    if isinstance(w, PreparedWeight) or getattr(w, "ndim", 0) != 2:
+        return params
+    out = dict(params)
+    out["unembed"] = prepare_weight(w, cfg,
+                                    shardings=head_shardings(w.shape))
+    return out
 
 
 def clear_prepared_cache():

@@ -354,3 +354,59 @@ def test_markov_flush_target_keeps_exactness(rng):
         np.asarray(qmatmul(x, w, cfg)),
         np.asarray(qmatmul(x, w, dataclasses.replace(cfg,
                                                      flush_target=None))))
+
+
+# ---------------------------------------------------------------------------
+# unembedding-view cache (ISSUE-4 satellite)
+# ---------------------------------------------------------------------------
+
+
+def test_prepare_unembed_bitwise_matches_per_call_path(rng):
+    """The cached unembedding view == quantizing the raw tied table per
+    call, bit for bit (same storage-dtype quantization, transposed)."""
+    from repro.quant import prepare_unembed, qeinsum
+    embed = jnp.asarray(rng.normal(0, 0.1, (48, 16)).astype(np.float32))
+    x = jnp.asarray(rng.normal(0, 1, (2, 3, 16)).astype(np.float32))
+    pw = prepare_unembed(embed, _CFG)
+    assert pw.codes.shape == (16, 48)       # (d_model, vocab) planes
+    got = qeinsum("btd,dv->btv", x, pw, _CFG, site="logits")
+    want = qeinsum("btd,vd->btv", x, embed, _CFG, site="logits")
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_prepare_unembed_cached_on_table_identity(rng):
+    from repro.quant import prepare_unembed
+    embed = jnp.asarray(rng.normal(0, 0.1, (32, 8)).astype(np.float32))
+    n0, h0 = PREP_STATS["prepared"], PREP_STATS["cache_hits"]
+    pw = prepare_unembed(embed, _CFG)
+    assert PREP_STATS["prepared"] == n0 + 1
+    assert prepare_unembed(embed, _CFG) is pw   # keyed on the raw table
+    assert PREP_STATS["prepared"] == n0 + 1
+    assert PREP_STATS["cache_hits"] == h0 + 1
+    with pytest.raises(ValueError, match="fp8"):
+        prepare_unembed(embed, QuantConfig(dtype="int8", accum="wide"))
+    with pytest.raises(ValueError, match="2D"):
+        prepare_unembed(jnp.zeros((4, 4, 4)), _CFG)
+
+
+def test_prepare_logits_head_tied_and_untied(rng):
+    """Tied trees gain an ``unembed_prepared`` view; untied trees get
+    their raw ``unembed`` replaced; both are idempotent."""
+    from repro.quant import PreparedWeight, prepare_logits_head
+    embed = jnp.asarray(rng.normal(0, 0.1, (32, 8)).astype(np.float32))
+    tied = prepare_logits_head({"embed": embed}, _CFG, tied=True)
+    assert isinstance(tied["unembed_prepared"], PreparedWeight)
+    assert tied["unembed_prepared"].codes.shape == (8, 32)
+    n0 = PREP_STATS["prepared"]
+    again = prepare_logits_head(tied, _CFG, tied=True)
+    assert again["unembed_prepared"] is tied["unembed_prepared"]
+    assert PREP_STATS["prepared"] == n0
+
+    unembed = jnp.asarray(rng.normal(0, 0.1, (8, 32)).astype(np.float32))
+    untied = prepare_logits_head({"unembed": unembed}, _CFG, tied=False)
+    assert isinstance(untied["unembed"], PreparedWeight)
+    assert prepare_logits_head(untied, _CFG,
+                               tied=False)["unembed"] is untied["unembed"]
+    # non-MGS configs pass straight through
+    plain = {"embed": embed}
+    assert prepare_logits_head(plain, QuantConfig(), tied=True) is plain
