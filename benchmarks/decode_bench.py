@@ -1,0 +1,144 @@
+"""Decode-attention benchmark: packed-FP8 KV cache vs the float cache.
+
+Two measurements, mirroring ISSUE-5's acceptance criteria:
+
+* **Analytic HBM bytes of one decode attention step.** The float-cache
+  fp8 path reads the whole K/V cache in ``kv_cache_dtype`` (bf16,
+  2 B/elem) every step *and* materializes the (B, KV, G, 1, S) f32
+  score/prob tensors between the score einsum, the softmax, and the
+  value einsum (separate XLA ops — each round-trips HBM at serving
+  context lengths). The packed path reads 1 B/elem codes plus one f32
+  scale per (position, head) entry and keeps the online softmax in VMEM
+  (``kernels.mgs_attention``) — no score traffic at all. At the
+  acceptance shape (B=8, 4k context) the reduction is >= 2x.
+* **Measured decode wall time** on a reduced model (CPU, emulation
+  numerics — the honest tier on this container): the packed cache skips
+  the per-step re-quantization of the full cache (absmax + RNE rounding
+  over B*KV*S*hd elements, twice, per layer) that the float-cache fp8
+  path pays, so tokens/s improves even where HBM bandwidth is not the
+  binding constraint.
+
+Also emits a ``BENCH_decode.json`` trajectory file (repo root) so
+successive PRs can track the ratio and tokens/s.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.quant.kvcache import kv_cache_bytes
+
+from .common import Csv
+
+_OUT = os.path.join(os.path.dirname(__file__), "..", "BENCH_decode.json")
+
+
+def decode_attn_hbm_bytes(B: int, S: int, KV: int, G: int, hd: int, *,
+                          quantized: bool) -> dict:
+    """Analytic HBM traffic of one decode attention step (all layers'
+    shapes are identical, so this is per layer).
+
+    Float path: cache reads (bf16) + new-entry writes + the f32
+    score/prob round-trips of the dense path (write + read each, between
+    the einsum / softmax / einsum ops) + the (B, S) mask row + q read /
+    out write. (The per-step re-quantization of the whole cache that the
+    float fp8 path also pays is *not* charged — conservative in the
+    baseline's favor.)
+    Packed path: code reads (1 B) + per-entry scale reads + quantized
+    new-entry writes + the per-(batch, kv-head) f32 mask and
+    score-scale rows (write + read each) + q/out — the online softmax
+    never leaves VMEM, and the mask is one row per kv-slice, never a
+    per-(head, row) tensor.
+    """
+    H = KV * G
+    if quantized:
+        cache_read = kv_cache_bytes(B, S, KV, hd, quantized=True)
+        new_write = 2 * B * KV * (hd + 4)
+        scores = 0
+        rows = 16 * B * KV * S           # bias + qk_scale rows, f32 w+r
+    else:
+        cache_read = kv_cache_bytes(B, S, KV, hd, quantized=False)
+        new_write = 2 * B * KV * hd * 2
+        scores = 16 * B * H * S          # scores + probs, f32, w+r each
+        rows = 8 * B * S                 # (B, 1, 1, T, S) bias, f32 w+r
+    q_out = B * H * hd * (2 + 4)         # bf16 q read, f32 out write
+    total = cache_read + new_write + scores + rows + q_out
+    return {"cache_read": cache_read, "new_write": new_write,
+            "scores": scores, "rows": rows, "q_out": q_out,
+            "total": total}
+
+
+def _measure_decode(quant_kw: dict, B: int, plen: int, max_len: int,
+                    steps: int = 20) -> float:
+    """Median-free simple mean: seconds per jitted decode step."""
+    from repro.configs import reduced_config
+    from repro.models import decode_step, init_cache, init_params, prefill
+    from repro.quant import QuantConfig
+
+    rng = np.random.default_rng(0)
+    cfg = dataclasses.replace(reduced_config("deepseek-7b"),
+                              quant=QuantConfig(**quant_kw))
+    params, _ = init_params(cfg, jax.random.PRNGKey(0))
+    cache, _ = init_cache(cfg, B, max_len)
+    toks = jnp.asarray(rng.integers(1, cfg.vocab, (B, plen)), jnp.int32)
+    dstep = jax.jit(lambda p, t, c: decode_step(p, cfg, t, c),
+                    donate_argnums=(2,))
+    lg, cache = prefill(params, cfg, {"tokens": toks}, cache)
+    cur = jnp.argmax(lg, -1)[:, None].astype(jnp.int32)
+    lg, cache = dstep(params, cur, cache)          # compile
+    jax.block_until_ready(lg)
+    t0 = time.perf_counter()
+    for _ in range(steps):
+        lg, cache = dstep(params, cur, cache)
+    jax.block_until_ready(lg)
+    return (time.perf_counter() - t0) / steps
+
+
+def run(csv: Csv):
+    record = {"analytic": [], "measured": {}}
+    # analytic table: serving-scale shapes, including the ISSUE-5
+    # acceptance cell (B=8, 4k context)
+    for (B, S, KV, G, hd) in [(8, 4096, 8, 4, 128), (8, 4096, 4, 8, 64),
+                              (32, 2048, 8, 4, 128), (1, 32768, 8, 4, 128)]:
+        fb = decode_attn_hbm_bytes(B, S, KV, G, hd, quantized=False)
+        qb = decode_attn_hbm_bytes(B, S, KV, G, hd, quantized=True)
+        ratio = fb["total"] / qb["total"]
+        csv.add(
+            f"decode/hbm_bytes/B{B}_S{S}_KV{KV}_G{G}_hd{hd}", 0.0,
+            f"float_total={fb['total']};packed_total={qb['total']};"
+            f"reduction={ratio:.2f}x;"
+            f"float_cache_read={fb['cache_read']};"
+            f"packed_cache_read={qb['cache_read']};"
+            f"float_score_bytes={fb['scores']}")
+        record["analytic"].append(
+            {"B": B, "S": S, "KV": KV, "G": G, "hd": hd,
+             "float_bytes": fb["total"], "packed_bytes": qb["total"],
+             "reduction": ratio})
+
+    # measured wall time, reduced model (CPU emulation tier): the packed
+    # cache skips the per-step full-cache re-quantization
+    B, plen, max_len = 8, 64, 512
+    dt_f = _measure_decode(dict(dtype="fp8_e4m3", accum="mgs_exact"),
+                           B, plen, max_len)
+    dt_q = dict(dtype="fp8_e4m3", accum="mgs_exact", kv_cache="packed")
+    dt_p = _measure_decode(dt_q, B, plen, max_len)
+    csv.add("decode/wall/float_cache", dt_f * 1e6,
+            f"tok_per_s={B / dt_f:.0f}")
+    csv.add("decode/wall/packed_cache", dt_p * 1e6,
+            f"tok_per_s={B / dt_p:.0f};speedup={dt_f / dt_p:.2f}x")
+    record["measured"] = {
+        "B": B, "prompt_len": plen, "max_len": max_len,
+        "float_us_per_step": dt_f * 1e6, "packed_us_per_step": dt_p * 1e6,
+        "float_tok_per_s": B / dt_f, "packed_tok_per_s": B / dt_p,
+        "speedup": dt_f / dt_p}
+
+    with open(_OUT, "w") as f:
+        json.dump(record, f, indent=1)
+    csv.add("decode/trajectory_file", 0.0, os.path.abspath(_OUT))

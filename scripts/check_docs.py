@@ -34,7 +34,8 @@ LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
 # Modules whose public API must be covered by README/docs prose. CLI
 # entry points (``main``) are exempt — they are documented as commands,
 # not symbols.
-API_MODULES = ("repro.launch.serve", "repro.launch.replica")
+API_MODULES = ("repro.launch.serve", "repro.launch.replica",
+               "repro.quant.kvcache")
 API_SKIP = {"main"}
 
 

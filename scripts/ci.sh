@@ -23,6 +23,14 @@ XLA_FLAGS="--xla_force_host_platform_device_count=8" \
 # (1, 4) sub-meshes, driver tokens == single-engine deterministic serve.
 XLA_FLAGS="--xla_force_host_platform_device_count=8" \
     python -m pytest -x -q -m multidevice tests/test_replica.py
+# Packed-KV-cache shard (ISSUE-5): quantized-cache ServeEngine greedy
+# tokens on an 8-device mesh == single device (flash-decode in the loop).
+XLA_FLAGS="--xla_force_host_platform_device_count=8" \
+    python -m pytest -x -q -m multidevice tests/test_kvcache.py
+
+# Decode-bench smoke (ISSUE-5): analytic HBM accounting + measured
+# float-vs-packed decode wall time; refreshes BENCH_decode.json.
+python -m benchmarks.run decode
 
 # Replica-driver example smoke: 2 replica engines on 2 forced host
 # devices, shared prepared planes, tokens identical to single engine.

@@ -27,6 +27,8 @@ through; ``ref`` holds the pure-jnp oracles the kernels are tested
 against.
 """
 from . import ops, ref
+from .mgs_attention import (flash_chunk_limit, mgs_flash_attention,
+                            mgs_flash_attention_ref)
 from .mgs_matmul import (ACTIVATIONS, WS_STRIPE_BUDGET_BYTES, limb_decompose,
                          mgs_matmul_dmac_pallas,
                          mgs_matmul_exact_fused_pallas,
@@ -36,4 +38,6 @@ from .mgs_matmul import (ACTIVATIONS, WS_STRIPE_BUDGET_BYTES, limb_decompose,
 __all__ = ["ops", "ref", "ACTIVATIONS", "WS_STRIPE_BUDGET_BYTES",
            "limb_decompose", "mgs_matmul_dmac_pallas",
            "mgs_matmul_exact_fused_pallas", "mgs_matmul_exact_pallas",
-           "worst_case_flush_period", "ws_stripe_bytes"]
+           "worst_case_flush_period", "ws_stripe_bytes",
+           "mgs_flash_attention", "mgs_flash_attention_ref",
+           "flash_chunk_limit"]

@@ -1,0 +1,343 @@
+"""Fused MGS flash-decode attention over a packed-FP8 KV cache.
+
+Decode attention is the serving hot path the matmul kernels don't cover:
+the score (``q @ k^T``) and value (``softmax @ v``) contractions stream
+the *whole* KV cache per step. This kernel runs both contractions on the
+exact MGS limb-summation path (the same 9 limb-pair int8 MXU
+contractions + weighted f32 combine as :mod:`repro.kernels.mgs_matmul`),
+consuming the cache as **packed FP8 codes** (1 byte/element of HBM
+traffic, decoded + limb-split per tile in VMEM) with a flash-style
+online softmax across key chunks — scores never round-trip HBM.
+
+Structure (one ``(T, D)`` query slice attending ``(S, D)`` keys/values):
+
+* grid = S-chunks, sequential ("arbitrary"); the softmax running state
+  (row max ``m``, denominator ``l``, output accumulator ``o``) lives in
+  VMEM scratch across the grid, exactly like the matmul kernels' class
+  accumulators live across the K grid axis.
+* the query's decoded limbs are cached in VMEM scratch on the first
+  chunk (the activation-stationary trick from ``mgs_matmul``): q is
+  decoded once, not once per chunk.
+* scores: exact integer contraction of q and k limbs over ``D``, single
+  flush (``D`` fits one tile, far inside ``worst_case_flush_period``),
+  then one f32 scale per key — ``qk_scale[s]`` carries the query
+  quantization scale x the cache entry's scale x ``head_dim**-0.5``, so
+  the per-entry cache scales factor cleanly out of the ``D``
+  contraction.
+* values: per-entry cache scales do **not** factor out of the ``S``
+  contraction, so they are folded into the softmax weights *before*
+  those are quantized (per-row absmax, in-VMEM RNE rounding via the
+  same bit-twiddling as the dmac kernel) — then the weight/value limb
+  contraction runs exactly and one per-row f32 scale rescales the
+  chunk's contribution.
+
+Bit-identity contract: every chunk update — both contractions, the
+running-max/exp/rescale algebra, and the **shape-independent pairwise
+row sums** — is a single function (:func:`_attn_tile_step`) traced
+verbatim by the Pallas kernel body *and* the pure-jnp reference, so
+``use_kernel`` never changes a bit, and no reduction's grouping depends
+on mesh-local shapes (the docs/serving.md cross-mesh guarantee extended
+to decode attention). Integer class sums are exact; the f32 combine is a
+fixed 5-term ascending-class sequence shared by both paths.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.formats import E4M3, FPFormat, encode_bits
+
+from .mgs_matmul import (_CompilerParams, _decode_limbs, _limb_split,
+                         _N_CLASSES, _N_LIMBS, _LIMB_BASE,
+                         _round_decompose_e4m3)
+
+__all__ = ["mgs_flash_attention", "mgs_flash_attention_ref",
+           "flash_chunk_limit"]
+
+_TINY = 1e-30
+_MAX_PAIR = _N_LIMBS * (1 << (_LIMB_BASE - 1)) ** 2  # per-K-elem class bound
+
+
+def flash_chunk_limit() -> int:
+    """Largest key-chunk whose per-class int32 score/value accumulation
+    cannot overflow (the ``worst_case_flush_period`` bound with the chunk
+    as the contraction depth — each chunk is flushed to f32 immediately,
+    so this is the only overflow surface)."""
+    return (2**31 - 1) // _MAX_PAIR
+
+
+def _combine_classes(accs):
+    """Exact int32 class sums -> f32, fixed 5-term ascending order.
+
+    Shared by the kernel and the reference so the (potentially rounding)
+    f32 combine associates identically on both paths.
+    """
+    tot = accs[0].astype(jnp.float32)
+    for c in range(1, _N_CLASSES):
+        tot = tot + accs[c].astype(jnp.float32) * (2.0 ** (_LIMB_BASE * c))
+    return tot
+
+
+def _class_dots(lx, lw, contract):
+    """9 limb-pair integer contractions, summed per weight class a+b.
+
+    ``contract``: ((x_dim,), (w_dim,)) dot_general contracting dims —
+    (1,),(1,) for q @ k^T (both operands are (rows, D)); (1,),(0,) for
+    p @ v ((T, chunk) x (chunk, D)). int32 sums are exact.
+    """
+    accs = [None] * _N_CLASSES
+    for a in range(_N_LIMBS):
+        for b in range(_N_LIMBS):
+            d = jax.lax.dot_general(lx[a], lw[b], (contract, ((), ())),
+                                    preferred_element_type=jnp.int32)
+            c = a + b
+            accs[c] = d if accs[c] is None else accs[c] + d
+    return accs
+
+
+def _pairwise_sum_cols(x):
+    """Shape-independent pairwise sum over the last axis, keepdims.
+
+    The in-tile twin of ``models.common.pairwise_sum_last``: an explicit
+    halving tree of elementwise adds whose association order is fixed by
+    the graph, so the softmax denominator is identical on every mesh and
+    on both the kernel and reference paths.
+    """
+    n = x.shape[-1]
+    p = 1 << max(0, (n - 1).bit_length())
+    if p != n:
+        x = jnp.pad(x, [(0, 0)] * (x.ndim - 1) + [(0, p - n)])
+    while x.shape[-1] > 1:
+        x = x[..., 0::2] + x[..., 1::2]
+    return x
+
+
+def _attn_tile_step(lq, k_codes, v_codes, qk_row, v_row, bias, m, l, o,
+                    fmt: FPFormat):
+    """One online-softmax chunk update — the bitwise contract.
+
+    Traced verbatim by the Pallas kernel body and the jnp reference.
+
+    Args:
+      lq: 3 decoded query limb planes, each (T, D) int8.
+      k_codes / v_codes: (chunk, D) uint8 packed cache codes.
+      qk_row: (1, chunk) f32 per-key score scale (sigma_q * k_scale[s] *
+        head_dim**-0.5).
+      v_row: (1, chunk) f32 per-key value scale.
+      bias: (1, chunk) f32 additive mask row, broadcast over the T rows
+        (decode masks depend only on the key position).
+      m / l: (T, 1) f32 running row max / denominator.
+      o: (T, D) f32 running (unnormalized) output.
+
+    Returns:
+      Updated (m, l, o).
+    """
+    out_scale = 2.0 ** (-2 * (fmt.bias + fmt.mbits))
+    # scores: exact integer q.k^T over D, one f32 scale per key column
+    lk = _decode_limbs(k_codes, fmt)
+    s = _combine_classes(_class_dots(lq, lk, ((1,), (1,)))) * out_scale
+    s = s * qk_row + bias
+    # online softmax; max is exactly associative, the denominator sum is
+    # an explicit pairwise tree (shape-independent)
+    m_new = jnp.maximum(m, jnp.max(s, axis=-1, keepdims=True))
+    alpha = jnp.exp(m - m_new)
+    p = jnp.exp(s - m_new)
+    l_new = l * alpha + _pairwise_sum_cols(p)
+    # values: fold the per-key cache scales into the weights, quantize
+    # them per row (absmax -> in-VMEM RNE rounding, the dmac kernel's
+    # bit-twiddling), then the exact weight x value limb contraction
+    pv = p * v_row
+    sp = jnp.maximum(jnp.max(jnp.abs(pv), axis=-1, keepdims=True),
+                     _TINY) / fmt.max_finite
+    sm, e = _round_decompose_e4m3(pv / sp, fmt, gate_subnormal=False)
+    lp = _limb_split(sm << jnp.maximum(e, 1))
+    lv = _decode_limbs(v_codes, fmt)
+    o_chunk = _combine_classes(_class_dots(lp, lv, ((1,), (0,)))) \
+        * out_scale * sp
+    o_new = o * alpha + o_chunk
+    return m_new, l_new, o_new
+
+
+# ---------------------------------------------------------------------------
+# Pallas kernel
+# ---------------------------------------------------------------------------
+
+
+def _flash_kernel(qc_ref, kc_ref, vc_ref, qk_ref, vs_ref, bias_ref, o_ref,
+                  q_limbs, m_ref, l_ref, acc_ref, *, nsteps: int,
+                  fmt: FPFormat):
+    j = pl.program_id(0)
+
+    @pl.when(j == 0)
+    def _init():
+        # decode q once into the K-resident limb scratch (the
+        # activation-stationary trick: every later chunk reuses it)
+        lq0 = _decode_limbs(qc_ref[...], fmt)
+        for a in range(_N_LIMBS):
+            q_limbs[a] = lq0[a]
+        m_ref[...] = jnp.full_like(m_ref, -jnp.inf)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    lq = [q_limbs[a] for a in range(_N_LIMBS)]
+    m_new, l_new, o_new = _attn_tile_step(
+        lq, kc_ref[...], vc_ref[...], qk_ref[...], vs_ref[...],
+        bias_ref[...], m_ref[...], l_ref[...], acc_ref[...], fmt)
+    m_ref[...] = m_new
+    l_ref[...] = l_new
+    acc_ref[...] = o_new
+
+    @pl.when(j == nsteps - 1)
+    def _done():
+        o_ref[...] = acc_ref[...] / jnp.maximum(l_ref[...], _TINY)
+
+
+def _flash_pallas_one(q_codes, k_codes, v_codes, qk_scale, v_scale, bias,
+                      fmt: FPFormat, chunk: int, interpret: bool):
+    """One (T, D) x (S, D) slice through the Pallas kernel (vmapped)."""
+    T, D = q_codes.shape
+    Sp = k_codes.shape[0]
+    nsteps = Sp // chunk
+    return pl.pallas_call(
+        functools.partial(_flash_kernel, nsteps=nsteps, fmt=fmt),
+        grid=(nsteps,),
+        in_specs=[
+            pl.BlockSpec((T, D), lambda j: (0, 0)),
+            pl.BlockSpec((chunk, D), lambda j: (j, 0)),
+            pl.BlockSpec((chunk, D), lambda j: (j, 0)),
+            pl.BlockSpec((1, chunk), lambda j: (0, j)),
+            pl.BlockSpec((1, chunk), lambda j: (0, j)),
+            pl.BlockSpec((1, chunk), lambda j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((T, D), lambda j: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((T, D), jnp.float32),
+        scratch_shapes=[
+            pltpu.VMEM((_N_LIMBS, T, D), jnp.int8),
+            pltpu.VMEM((T, 1), jnp.float32),
+            pltpu.VMEM((T, 1), jnp.float32),
+            pltpu.VMEM((T, D), jnp.float32),
+        ],
+        compiler_params=_CompilerParams(
+            dimension_semantics=("arbitrary",)),
+        interpret=interpret,
+    )(q_codes, k_codes, v_codes, qk_scale.reshape(1, Sp),
+      v_scale.reshape(1, Sp), bias.reshape(1, Sp))
+
+
+# ---------------------------------------------------------------------------
+# jnp reference (emulation path) — same tile step, lax.scan over chunks
+# ---------------------------------------------------------------------------
+
+
+def _flash_ref_one(q_codes, k_codes, v_codes, qk_scale, v_scale, bias,
+                   fmt: FPFormat, chunk: int):
+    T, D = q_codes.shape
+    Sp = k_codes.shape[0]
+    nc = Sp // chunk
+    lq = _decode_limbs(q_codes, fmt)
+    kc = k_codes.reshape(nc, chunk, D)
+    vc = v_codes.reshape(nc, chunk, D)
+    qkc = qk_scale.reshape(nc, 1, chunk)
+    vsc = v_scale.reshape(nc, 1, chunk)
+    bc = bias.reshape(nc, 1, chunk)
+
+    def step(carry, xs):
+        m, l, o = carry
+        kb, vb, qkb, vsb, bb = xs
+        return _attn_tile_step(lq, kb, vb, qkb, vsb, bb, m, l, o, fmt), None
+
+    m0 = jnp.full((T, 1), -jnp.inf, jnp.float32)
+    l0 = jnp.zeros((T, 1), jnp.float32)
+    o0 = jnp.zeros((T, D), jnp.float32)
+    (m, l, o), _ = jax.lax.scan(step, (m0, l0, o0), (kc, vc, qkc, vsc, bc))
+    return o / jnp.maximum(l, _TINY)
+
+
+def mgs_flash_attention_ref(q, k_codes, v_codes, qk_scale, v_scale, bias,
+                            fmt: FPFormat = E4M3, *, chunk: int = 256):
+    """Pure-jnp oracle of :func:`mgs_flash_attention` (``use_kernel=False``
+    path). Same signature and — by construction — the same bits."""
+    return mgs_flash_attention(q, k_codes, v_codes, qk_scale, v_scale, bias,
+                               fmt, chunk=chunk, use_kernel=False)
+
+
+# ---------------------------------------------------------------------------
+# public dispatch
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(
+    jax.jit, static_argnames=("fmt", "chunk", "use_kernel", "interpret"))
+def mgs_flash_attention(q, k_codes, v_codes, qk_scale, v_scale, bias,
+                        fmt: FPFormat = E4M3, *, chunk: int = 256,
+                        use_kernel: bool = True,
+                        interpret: bool | None = None):
+    """Flash-style exact-MGS attention over packed-code keys/values.
+
+    Args:
+      q: ``(N, T, D)`` **format-exact** FP8 query values
+        (``quant.quantize_fp8``; the slice's quantization scale belongs
+        in ``qk_scale``). ``N`` flattens whatever leading axes the caller
+        has (batch x kv-head x group); every slice attends its own keys.
+      k_codes / v_codes: ``(N, S, D)`` uint8 packed cache codes
+        (``quant.kvcache.QuantizedKVCache`` planes, flattened the same
+        way).
+      qk_scale: ``(N, S)`` f32 per-key score multiplier — the caller
+        folds the query scale, the cache entry scale, and the
+        ``head_dim**-0.5`` softmax scaling into it.
+      v_scale: ``(N, S)`` f32 per-key value scale
+        (``QuantizedKVCache.v_scale``).
+      bias: ``(N, S)`` f32 additive mask row (0 / large-negative),
+        shared by every query row of the slice — decode-time masks
+        (causal validity, sliding window) depend only on the key
+        position, so no per-(head, row) mask tensor is ever
+        materialized in HBM.
+      fmt: the cache's narrow-exponent FP8 format.
+      chunk: keys per online-softmax tile (the kernel grid step; must
+        not exceed :func:`flash_chunk_limit`). ``S`` is padded up to a
+        multiple with exactly-inert entries (zero codes/scales,
+        large-negative bias).
+      use_kernel: Pallas kernel (TPU; interpret mode on CPU) vs the
+        pure-jnp reference — bit-identical either way.
+      interpret: Pallas interpret mode (default: not on TPU).
+
+    Returns:
+      ``(N, T, D)`` float32 attention outputs,
+      ``softmax(qk_scale * (q @ k^T) + bias) @ (v * v_scale)`` with both
+      contractions exact under MGS limb summation.
+    """
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    N, T, D = q.shape
+    S = k_codes.shape[1]
+    assert k_codes.shape == (N, S, D) and v_codes.shape == (N, S, D), (
+        q.shape, k_codes.shape, v_codes.shape)
+    assert qk_scale.shape == (N, S) and v_scale.shape == (N, S), (
+        qk_scale.shape, v_scale.shape)
+    assert bias.shape == (N, S), (bias.shape, (N, S))
+    if chunk > flash_chunk_limit():
+        raise ValueError(f"chunk {chunk} exceeds the int32 class-"
+                         f"accumulator bound {flash_chunk_limit()}")
+    nc = -(-S // chunk)
+    Sp = nc * chunk
+    pad = Sp - S
+    q_codes = encode_bits(q, fmt)
+    if pad:
+        # inert padding: zero codes and scales, large-negative bias —
+        # padded keys contribute exact zeros to every running quantity
+        k_codes = jnp.pad(k_codes, ((0, 0), (0, pad), (0, 0)))
+        v_codes = jnp.pad(v_codes, ((0, 0), (0, pad), (0, 0)))
+        qk_scale = jnp.pad(qk_scale, ((0, 0), (0, pad)))
+        v_scale = jnp.pad(v_scale, ((0, 0), (0, pad)))
+        bias = jnp.pad(bias, ((0, 0), (0, pad)), constant_values=-1e30)
+    if use_kernel:
+        fn = functools.partial(_flash_pallas_one, fmt=fmt, chunk=chunk,
+                               interpret=interpret)
+    else:
+        fn = functools.partial(_flash_ref_one, fmt=fmt, chunk=chunk)
+    return jax.vmap(fn)(q_codes, k_codes, v_codes, qk_scale, v_scale, bias)

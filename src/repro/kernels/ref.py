@@ -42,15 +42,35 @@ def mgs_matmul_ref(x, w, fmt: FPFormat = E4M3, mode: str = "dmac",
         sw, ew = decompose(w.astype(jnp.float32), fmt)
         ix = sx << jnp.maximum(ex, 1)   # 20-bit fixed point, scale 2^-(bias+mbits)
         iw = sw << jnp.maximum(ew, 1)
-        out = None
         base, nlimb = 7, 3
+        # int32 class-sum headroom: up to nlimb pairs x (2^(base-1))^2 per
+        # K element accumulate in one class register here (the kernels
+        # flush every worst_case_flush_period steps instead; this
+        # unflushed oracle must fail loudly rather than wrap silently).
+        k_limit = (2**31 - 1) // (nlimb * (1 << (base - 1)) ** 2)
+        if x.shape[-1] > k_limit:
+            raise ValueError(
+                f"exact-mode reference supports contraction depth K <= "
+                f"{k_limit} (unflushed int32 class sums); got "
+                f"{x.shape[-1]} — use the Pallas kernel path")
         lx = _limbs(ix, base, nlimb)
         lw = _limbs(iw, base, nlimb)
+        # accumulate the 9 limb-pair products into the 5 weight classes in
+        # exact int32 first, then combine in the same fixed ascending-class
+        # order as the kernels' _flush_classes — so the (potentially
+        # rounding) f32 combine associates identically on both tiers and
+        # kernel-vs-emulation stays bitwise through whole-model forwards
+        # (single-flush regime; the default worst-case period never
+        # flushes mid-K at practical block counts).
+        accs = [None] * (2 * nlimb - 1)
         for a in range(nlimb):
             for b in range(nlimb):
                 part = jnp.dot(lx[a], lw[b], preferred_element_type=jnp.int32)
-                term = part.astype(dtype) * (2.0 ** (base * (a + b)))
-                out = term if out is None else out + term
+                c = a + b
+                accs[c] = part if accs[c] is None else accs[c] + part
+        out = accs[0].astype(dtype)
+        for c in range(1, 2 * nlimb - 1):
+            out = out + accs[c].astype(dtype) * (2.0 ** (base * c))
         return out * jnp.asarray(2.0 ** (-2 * (fmt.bias + fmt.mbits)), dtype)
     raise ValueError(f"unknown mode {mode!r}")
 

@@ -100,6 +100,10 @@ class _Job:
     requests: List[Request]
     futures: List[Future]
     counted: bool = True    # warmup jobs don't enter the served stats
+    # (buckets, max_new, seed): run ServeEngine.warmup instead of a
+    # group — the bucketed prefill-length compilation, one job per
+    # replica so the R compilations proceed concurrently.
+    warmup: Optional[tuple] = None
 
 
 class ReplicaServeDriver:
@@ -189,18 +193,24 @@ class ReplicaServeDriver:
                 q.task_done()
                 return
             try:
-                stats = engine.run(job.requests)
-                if job.counted:
-                    with self._lock:
-                        self._stats["prefill_tokens"] += stats[
-                            "prefill_tokens"]
-                        self._stats["decode_tokens"] += stats[
-                            "decode_tokens"]
-                        self._stats["requests"] += len(job.requests)
-                        self._stats["groups"] += 1
-                        self._stats["groups_per_replica"][idx] += 1
-                        self._stats["busy_s"] += stats["wall_s"]
-                for r, fut in zip(job.requests, job.futures):
+                if job.warmup is not None:
+                    buckets, max_new, seed = job.warmup
+                    engine.warmup(buckets, max_new=max_new, seed=seed)
+                    results = [None] * len(job.futures)
+                else:
+                    stats = engine.run(job.requests)
+                    if job.counted:
+                        with self._lock:
+                            self._stats["prefill_tokens"] += stats[
+                                "prefill_tokens"]
+                            self._stats["decode_tokens"] += stats[
+                                "decode_tokens"]
+                            self._stats["requests"] += len(job.requests)
+                            self._stats["groups"] += 1
+                            self._stats["groups_per_replica"][idx] += 1
+                            self._stats["busy_s"] += stats["wall_s"]
+                    results = job.requests
+                for r, fut in zip(results, job.futures):
                     # a caller may have cancelled one future of the
                     # group while it was queued; the batch still ran, so
                     # deliver the others instead of poisoning them with
@@ -293,28 +303,41 @@ class ReplicaServeDriver:
         for q in self._queues:
             q.join()
 
-    def warmup(self, prompt_len: int, max_new: int = 1, *, seed: int = 0):
+    def warmup(self, prompt_len: Optional[int] = None, max_new: int = 1, *,
+               plen_buckets: Optional[Sequence[int]] = None, seed: int = 0):
         """Compile each replica's prefill/decode before traffic arrives.
 
-        Pushes one uncounted dummy group (prompt length ``prompt_len``,
-        the padded length real groups will compile for) to **every**
-        replica so the R compilations proceed concurrently, then waits
-        for all of them. Warmup tokens never enter :meth:`stats`.
+        Pushes one uncounted warmup job to **every** replica — each runs
+        :meth:`~repro.launch.serve.ServeEngine.warmup` over the prompt-
+        length buckets on its own sub-mesh, so the R compilations proceed
+        concurrently — then waits for all of them. Pass either a single
+        ``prompt_len`` (the padded length real groups will compile for)
+        or ``plen_buckets`` with every common padded length of the
+        deployment (the bucketed-plen warmup; first-request latency then
+        only hits lengths outside the buckets). Warmup traffic never
+        enters :meth:`stats`.
         """
-        import numpy as np
-        rng = np.random.default_rng(seed)
+        if hasattr(prompt_len, "__iter__"):
+            # a bucket list passed positionally — the natural call shape
+            # after ServeEngine.warmup([...]); accept it rather than
+            # failing on int(list) below
+            if plen_buckets is not None:
+                raise ValueError("pass exactly one of prompt_len / "
+                                 "plen_buckets")
+            prompt_len, plen_buckets = None, prompt_len
+        if (prompt_len is None) == (plen_buckets is None):
+            raise ValueError("pass exactly one of prompt_len / "
+                             "plen_buckets")
+        buckets = tuple(sorted({int(b) for b in (
+            plen_buckets if plen_buckets is not None else [prompt_len])}))
         futs: List[Future] = []
-        cfg = self.engines[0].cfg
         with self._lock:
             for idx in range(self.replicas):
-                req = Request(rid=-1 - idx,
-                              prompt=rng.integers(
-                                  1, cfg.vocab, prompt_len).astype(np.int32),
-                              max_new_tokens=max_new)
                 fut: Future = Future()
                 futs.append(fut)
-                self._dispatch_locked(_Job([req], [fut], counted=False),
-                                      idx=idx)
+                self._dispatch_locked(
+                    _Job([], [fut], counted=False,
+                         warmup=(buckets, max_new, seed)), idx=idx)
         for fut in futs:
             fut.result()
 

@@ -118,10 +118,12 @@ class ServeEngine:
     (``quant.qeinsum``), so the MGS accumulator discipline covers the
     whole forward pass and distribution cannot reorder those
     contractions: sharded serving is bit-identical to the single-device
-    fused path on both pure-TP and data-axis (FSDP) meshes for the
-    dense/GQA decoder families (the MoE one-hot dispatch/combine
-    einsums and the chunked-prefill softmax scan remain float — see
-    docs/serving.md for the guarantee's exact scope).
+    fused path on both pure-TP and data-axis (FSDP) meshes. The
+    guarantee also covers the chunked-prefill softmax scan (qeinsum
+    contractions + pairwise denominators), the gather-based MoE
+    dispatch/combine (exact integer routing), and the packed-FP8 KV
+    cache decode step (``quant.kvcache`` + the MGS flash-decode kernel)
+    — see docs/serving.md for the full scope.
 
     ``calibration`` (or a later :meth:`calibrate` call) feeds observed
     per-call-site activation limb sigmas into the Markov flush planner,
@@ -198,6 +200,46 @@ class ServeEngine:
                 (self.batch, self.cfg.encoder_len, self.cfg.d_model),
                 jnp.bfloat16)
         return batch
+
+    def warmup(self, plen_buckets, *, max_new: int = 1, seed: int = 0):
+        """Compile the common padded prompt lengths before traffic.
+
+        Prefill compilation is per padded prompt length: the first
+        request group arriving at a new length pays a trace+compile in
+        the serving path. Passing the deployment's bucket lengths here
+        front-loads those compilations (plus ``max_new`` decode steps,
+        which compiles the decode entry point too). Bucket results are
+        discarded; served-traffic statistics are untouched.
+
+        Args:
+          plen_buckets: iterable of prompt lengths to compile (each must
+            leave room for ``max_new`` tokens within ``max_len``).
+          max_new: decode steps run per bucket (1 compiles decode).
+          seed: RNG seed for the dummy prompt tokens.
+
+        Returns:
+          The sorted, de-duplicated bucket list that was compiled.
+        """
+        buckets = sorted({int(b) for b in plen_buckets})
+        bad = [b for b in buckets if b <= 0 or b + max_new > self.max_len]
+        if bad:
+            raise ValueError(f"warmup buckets {bad} out of range for "
+                             f"max_len={self.max_len}, max_new={max_new}")
+        rng = np.random.default_rng(seed)
+        for plen in buckets:
+            toks = rng.integers(1, self.cfg.vocab,
+                                (self.batch, plen)).astype(np.int32)
+            batch = self._make_batch(toks)
+            cache, _ = init_cache(self.cfg, self.batch, self.max_len)
+            with use_rules(self.rules):
+                logits, cache = self._prefill(self.params, batch, cache)
+                cur = jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
+                for _ in range(max_new):
+                    logits, cache = self._decode(self.params, cur, cache)
+                    cur = jnp.argmax(logits, axis=-1)[:, None].astype(
+                        jnp.int32)
+            jax.block_until_ready(logits)
+        return buckets
 
     def apply_calibration(self, table: CalibrationTable):
         """Install a calibration table built elsewhere on this engine.

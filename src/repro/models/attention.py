@@ -1,5 +1,7 @@
 """Attention: GQA/MQA/MHA, causal / sliding-window / bidirectional / cross,
-dense or online-softmax KV-chunked, with decode KV caches.
+dense or online-softmax KV-chunked, with decode KV caches — float
+(:class:`KVCache`) or packed-FP8 (:class:`repro.quant.QuantizedKVCache`,
+decode served by the MGS flash-decode kernel).
 
 One code path serves every arch in the pool: gemma3's 5:1 local:global
 pattern is a *traced* per-layer flag selecting the window mask (so the
@@ -15,13 +17,19 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
-from repro.quant import qeinsum
+from repro.kernels.mgs_attention import mgs_flash_attention
+from repro.quant import QuantizedKVCache, append_kv, qeinsum
+from repro.quant.quantize import quantize_fp8
 from .common import ParamFactory, apply_rope
 from .linear import proj
 
 __all__ = ["attention_init", "attention_apply", "KVCache"]
 
 _NEG_INF = -1e30
+# Sentinel key position marking invalid cache slots / chunk padding:
+# beyond every reachable query position, so the mask bounds kill it for
+# causal *and* bidirectional attention.
+_POS_SENTINEL = 2**30
 
 
 class KVCache(NamedTuple):
@@ -64,9 +72,9 @@ def _sdpa_dense(q, k, v, bias, quant=None):
     wide/swamp baselines quantize the same operand set as MGS and the
     accuracy comparison isolates accumulation alone. The integer
     emulation modes (int4/int8 clip/wrap) keep float attention — their
-    research contract quantizes linear-layer operands only — as does
-    the chunked prefill path (cfg.attn_chunk, float online-softmax
-    scan).
+    research contract quantizes linear-layer operands only. The chunked
+    prefill path (``_sdpa_chunked``) applies the same fp8 routing inside
+    its online-softmax scan.
     """
     scale = q.shape[-1] ** -0.5
     if quant is None or not quant.is_fp8:
@@ -92,40 +100,77 @@ def _sdpa_dense(q, k, v, bias, quant=None):
 
 
 def _sdpa_chunked(q, k, v, q_pos, k_pos, *, causal, window, is_global,
-                  chunk: int):
+                  chunk: int, quant=None):
     """Online-softmax attention over KV chunks (flash-style, pure lax.scan).
 
     Keeps peak memory at O(T * chunk) instead of O(T * S) — required for
     the 32k-prefill cells and available to training via cfg.attn_chunk.
+
+    The key length must be chunk-aligned: ``attention_apply`` owns the
+    padding (masked sentinel positions via :func:`_pad_kv_to_chunk`), so
+    an unaligned ``S`` here is a caller bug, not something to paper over
+    — the old silent zero-padding attended the padded keys in the
+    bidirectional (whisper-encoder) case.
+
+    The mask is folded to per-query position bounds ``lo <= k_pos <= hi``
+    hoisted out of the scan body (the old body rebuilt the full mask
+    tensor per chunk); the ``hi`` bound also kills the sentinel for
+    non-causal attention. The softmax denominator uses the
+    shape-independent pairwise tree on *every* config (float chunked
+    training shifts by reassociation ulps vs the old ``jnp.sum``, and in
+    exchange is mesh-invariant), and with an fp8 ``quant`` the
+    score/value contractions additionally route through ``qeinsum``
+    (sites ``attn.scores`` / ``attn.values``) — extending the cross-mesh
+    bit-identity guarantee to the chunked-prefill path (docs/serving.md).
     """
+    from .common import pairwise_sum_last
     B, T, KV, G, hd = q.shape
     S = k.shape[1]
-    n_chunks = -(-S // chunk)
-    Sp = n_chunks * chunk
-    pad = Sp - S
-    if pad:
-        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
-        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
-        k_pos = jnp.pad(k_pos, ((0, 0), (0, pad)), constant_values=2**30)
+    if S % chunk:
+        raise ValueError(
+            f"chunked attention needs a chunk-aligned key length: "
+            f"S={S} % attn_chunk={chunk} != 0. Pad K/V with masked "
+            f"sentinel positions first (attention_apply does) or pick "
+            f"an attn_chunk dividing the padded prompt/cache length.")
+    n_chunks = S // chunk
     kc = k.reshape(B, n_chunks, chunk, KV, hd).transpose(1, 0, 2, 3, 4)
     vc = v.reshape(B, n_chunks, chunk, KV, hd).transpose(1, 0, 2, 3, 4)
     pc = k_pos.reshape(B, n_chunks, chunk).transpose(1, 0, 2)
     scale = hd ** -0.5
+    # hoisted visibility bounds: a key at position kp is visible from the
+    # query at qp iff lo <= kp <= hi. Both depend only on the query side,
+    # so they are computed once, outside the scan body.
+    dq = q_pos[..., :, None]                               # (B, T, 1)
+    hi = dq if causal else jnp.full_like(dq, _POS_SENTINEL - 1)
+    if window > 0:
+        lo = jnp.where(is_global, -_POS_SENTINEL, dq - window + 1)
+    else:
+        lo = jnp.full_like(dq, -_POS_SENTINEL)
+    fp8 = quant is not None and quant.is_fp8
 
     def step(carry, xs):
         m, l, o = carry
         kb, vb, pb = xs
-        s = jnp.einsum("btkgh,bskh->bkgts", q, kb,
-                       preferred_element_type=jnp.float32) * scale
-        bias = _mask(q_pos, pb, causal=causal, window=window,
-                     is_global=is_global)  # (B, T, chunk)
-        s = s + bias[:, None, None]
+        if fp8:
+            s = qeinsum("btkgh,bskh->bkgts", q, kb, quant,
+                        site="attn.scores", out_dtype=jnp.float32) * scale
+        else:
+            s = jnp.einsum("btkgh,bskh->bkgts", q, kb,
+                           preferred_element_type=jnp.float32) * scale
+        dk = pb[:, None, :]                                # (B, 1, chunk)
+        ok = (dk <= hi) & (dk >= lo)
+        s = s + jnp.where(ok, 0.0, _NEG_INF)[:, None, None]
         m_new = jnp.maximum(m, jnp.max(s, axis=-1))
         alpha = jnp.exp(m - m_new)
         p = jnp.exp(s - m_new[..., None])
-        l_new = l * alpha + jnp.sum(p, axis=-1)
-        o_new = o * alpha[..., None] + jnp.einsum(
-            "bkgts,bskh->bkgth", p.astype(q.dtype), vb).astype(jnp.float32)
+        l_new = l * alpha + pairwise_sum_last(p)
+        if fp8:
+            pv = qeinsum("bkgts,bskh->bkgth", p.astype(q.dtype), vb, quant,
+                         site="attn.values", out_dtype=jnp.float32)
+        else:
+            pv = jnp.einsum("bkgts,bskh->bkgth", p.astype(q.dtype),
+                            vb).astype(jnp.float32)
+        o_new = o * alpha[..., None] + pv
         return (m_new, l_new, o_new), None
 
     m0 = jnp.full((B, KV, G, T), _NEG_INF, jnp.float32)
@@ -136,7 +181,71 @@ def _sdpa_chunked(q, k, v, q_pos, k_pos, *, causal, window, is_global,
     (m, l, o), _ = jax.lax.scan(jax.checkpoint(step), (m0, l0, o0),
                                 (kc, vc, pc))
     out = o / jnp.maximum(l, 1e-30)[..., None]
-    return out.transpose(0, 3, 1, 2, 4).astype(q.dtype)  # (B,T,KV,G,hd)
+    return out.transpose(0, 3, 1, 2, 4).astype(q.dtype)  # (B,T,KVG,hd)
+
+
+def _pad_kv_to_chunk(k, v, k_pos, chunk: int):
+    """Pad keys/values to a chunk multiple with masked sentinel positions.
+
+    The sentinel (``_POS_SENTINEL``) exceeds every ``hi`` bound in
+    ``_sdpa_chunked``, so padded keys are masked for causal *and*
+    bidirectional attention (the old zero-padding was attended by the
+    whisper encoder).
+    """
+    S = k.shape[1]
+    pad = -S % chunk
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        k_pos = jnp.pad(k_pos, ((0, 0), (0, pad)),
+                        constant_values=_POS_SENTINEL)
+    return k, v, k_pos
+
+
+def _sdpa_packed_cache(q, cache: QuantizedKVCache, bias, quant):
+    """Decode attention over the packed-FP8 cache: the MGS flash kernel.
+
+    q: (B, T=1, KV, G, hd) compute-dtype queries. cache planes:
+    (B, KV, S, hd) uint8 codes + (B, KV, S) scales — heads before
+    sequence, so every kernel operand below is a *reshape* of the cache
+    (no cache-sized transpose/copy in the hot loop). bias: (B, 1, S) —
+    the decode mask depends only on the key position, so it is passed
+    to the kernel as one per-key row per (batch, kv-head) slice, never
+    materialized per (head, query-row).
+
+    The query is quantized once per (batch, kv-head) slice — the same
+    granularity the dense path's qeinsum batch dims give it — and its
+    scale, the per-entry cache scales, and the ``head_dim**-0.5``
+    softmax scaling are folded into the kernel's per-key score
+    multiplier. Both contractions then run the exact MGS limb path over
+    packed codes (:func:`repro.kernels.mgs_attention.mgs_flash_attention`
+    — 1 byte/element of cache HBM traffic, no score round-trips), and
+    every reduction is shape-independent, so the cross-mesh bit-identity
+    guarantee covers the packed-cache decode step.
+    """
+    B, T, KV, G, hd = q.shape
+    S = cache.k_codes.shape[2]
+    fmt = quant.kv_fmt
+    # (B, T, KV, G, hd) -> (B*KV, G*T, hd) rows; per-slice quantization
+    # (q is one token's projections — this transpose is O(B*H*hd))
+    q2 = q.transpose(0, 2, 3, 1, 4).reshape(B * KV, G * T * hd)
+    qt = quantize_fp8(q2, fmt, axis=1)
+    qvals = qt.q.reshape(B * KV, G * T, hd)
+    if quant.accum in ("mgs_exact", "mgs_dmac"):
+        from repro.quant.calibrate import observe
+        observe("attn.scores", qvals, fmt)
+    ks = cache.k_scale.reshape(B * KV, S)
+    vs = cache.v_scale.reshape(B * KV, S)
+    qk = (qt.scale * ks) * (hd ** -0.5)
+    kc = cache.k_codes.reshape(B * KV, S, hd)
+    vc = cache.v_codes.reshape(B * KV, S, hd)
+    bias2 = jnp.broadcast_to(bias.reshape(B, 1, S), (B, KV, S)).reshape(
+        B * KV, S)
+    out = mgs_flash_attention(qvals, kc, vc, qk, vs, bias2, fmt,
+                              chunk=quant.block_k,
+                              use_kernel=quant.use_kernel)
+    return out.reshape(B, KV, G, T, hd).transpose(0, 3, 1, 2, 4).astype(
+        q.dtype)
 
 
 def attention_apply(p, x, cfg: ModelConfig, *, positions,
@@ -148,7 +257,12 @@ def attention_apply(p, x, cfg: ModelConfig, *, positions,
     """Self- or cross-attention.
 
     x: (B, T, d). positions: (B, T) int32 token positions of the queries.
-    cache: decode-time KV cache; new K/V are written at ``cache_pos``.
+    cache: decode-time KV cache — a float :class:`KVCache` or a
+    packed-code :class:`repro.quant.QuantizedKVCache`; new K/V are
+    written at ``cache_pos``. With the packed cache, the decode step
+    (T == 1) attends the cache *codes* through the MGS flash-decode
+    kernel (:mod:`repro.kernels.mgs_attention`); prefill (T > 1) attends
+    the freshly-projected float K/V and only *stores* them quantized.
     cross_kv: precomputed encoder K/V (whisper decoder) — overrides
     self-attention K/V entirely.
     Returns (out (B, T, d), new_cache | None).
@@ -162,6 +276,7 @@ def attention_apply(p, x, cfg: ModelConfig, *, positions,
     q = q.reshape(B, T, KV, G, hd)
 
     new_cache = None
+    packed_out = None
     if cross_kv is not None:
         k, v = cross_kv.k, cross_kv.v
         k_pos = (jnp.zeros((B, k.shape[1]), jnp.int32)
@@ -172,7 +287,36 @@ def attention_apply(p, x, cfg: ModelConfig, *, positions,
         k = proj(x, p["wk"], cfg.quant, site="attn.wk")   # (B,T,KV,hd)
         k = apply_rope(k, positions, cfg.rope_theta)
         v = proj(x, p["wv"], cfg.quant, site="attn.wv")
-        if cache is not None:
+        if isinstance(cache, QuantizedKVCache):
+            # packed cache: re-quantize ONLY the new entries (per-entry
+            # scales — old codes are bit-frozen, see quant.kvcache)
+            new_cache = append_kv(cache, k, v, cache_pos, cfg.quant.kv_fmt)
+            if T == 1:
+                # decode: stream the cache codes through the MGS
+                # flash-decode kernel
+                S = cache.k_codes.shape[2]
+                k_pos = jnp.broadcast_to(
+                    jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+                valid = k_pos <= positions[:, -1:]
+                k_pos = jnp.where(valid, k_pos, _POS_SENTINEL)
+                bias3 = _mask(positions, k_pos, causal=causal,
+                              window=cfg.window, is_global=is_global)
+                packed_out = _sdpa_packed_cache(q, new_cache, bias3,
+                                                cfg.quant)
+            else:
+                # prefill: attend the fresh float K/V (the cache stores
+                # them quantized for the decode steps to come). This is
+                # a from-scratch prefill contract — attending ONLY the
+                # fresh K/V is wrong for a continued prefill over an
+                # already-populated cache, so reject that shape instead
+                # of silently dropping the cached context.
+                if not (isinstance(cache_pos, int) and cache_pos == 0):
+                    raise NotImplementedError(
+                        "packed-cache prefill (T > 1) supports "
+                        "cache_pos == 0 only: a continued prefill would "
+                        "need to attend the cached codes as well")
+                k_pos = positions
+        elif cache is not None:
             # decode: write the new entries at cache_pos, attend over cache
             k = jax.lax.dynamic_update_slice(
                 cache.k, k.astype(cache.k.dtype), (0, cache_pos, 0, 0))
@@ -184,19 +328,22 @@ def attention_apply(p, x, cfg: ModelConfig, *, positions,
                 jnp.arange(S, dtype=jnp.int32)[None], (B, S))
             # entries beyond the decode position are invalid
             valid = k_pos <= positions[:, -1:]
-            k_pos = jnp.where(valid, k_pos, 2**30)
+            k_pos = jnp.where(valid, k_pos, _POS_SENTINEL)
         else:
             k_pos = positions
 
-    bias_fn = lambda qp, kp: _mask(qp, kp, causal=causal, window=cfg.window,
-                                   is_global=is_global)
-    if cfg.attn_chunk and T > 1:
-        out = _sdpa_chunked(q, k.astype(q.dtype), v.astype(q.dtype),
-                            positions, k_pos, causal=causal,
+    if packed_out is not None:
+        out = packed_out
+    elif cfg.attn_chunk and T > 1:
+        kp, vp, k_pos_p = _pad_kv_to_chunk(k.astype(q.dtype),
+                                           v.astype(q.dtype), k_pos,
+                                           cfg.attn_chunk)
+        out = _sdpa_chunked(q, kp, vp, positions, k_pos_p, causal=causal,
                             window=cfg.window, is_global=is_global,
-                            chunk=cfg.attn_chunk)
+                            chunk=cfg.attn_chunk, quant=cfg.quant)
     else:
-        bias = bias_fn(positions, k_pos)[:, None, None]   # (B,1,1,T,S)
+        bias = _mask(positions, k_pos, causal=causal, window=cfg.window,
+                     is_global=is_global)[:, None, None]  # (B,1,1,T,S)
         out = _sdpa_dense(q, k.astype(q.dtype), v.astype(q.dtype), bias,
                           quant=cfg.quant)
 

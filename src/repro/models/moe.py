@@ -1,11 +1,22 @@
-"""Top-k routed mixture-of-experts with GShard-style einsum dispatch.
+"""Top-k routed mixture-of-experts with exact gather-based dispatch.
 
 Tokens are split into groups; within each group the router's top-k
 choices claim capacity slots per expert (rank-0 choices first, earlier
-tokens first). Dispatch/combine are one-hot einsums — the classic XLA
-MoE formulation, whose resharding (tokens sharded on batch -> expert
-tensors sharded on the model axis) GSPMD lowers to all-to-alls. Over-
-capacity tokens are dropped (standard; `capacity_factor` controls slack).
+tokens first). Dispatch and combine are **gathers with a fixed-order
+k-term combine**, not the classic one-hot float einsums: each capacity
+slot is claimed by at most one (token, rank) selection, so "dispatch" is
+an integer slot->token index gather, and each token reads back at most
+``top_k`` expert rows summed in rank order by an unrolled loop. Both are
+therefore *shape-independent* — no XLA ``reduce`` whose float
+association order could vary with the mesh-local operand shape — which
+closes the MoE half of the cross-mesh bit-identity guarantee
+(docs/serving.md; the attention half is ``pairwise_sum_last``). The
+slot-assignment bookkeeping (cumsum capacity claims) stays in exact
+integer arithmetic. The expert-parallel resharding GSPMD used to derive
+from the dispatch einsum now comes from the same sharding constraint on
+the gathered expert tensor (tokens on the data axes -> experts on the
+model axis), so the all-to-all lowering is unchanged. Over-capacity
+tokens are dropped (standard; ``capacity_factor`` controls slack).
 
 A switch-style load-balance auxiliary loss is returned for training.
 """
@@ -79,26 +90,33 @@ def moe_apply(p, x, cfg: ModelConfig):
     pos = pos.reshape(G, k, g, E).transpose(0, 2, 1, 3)  # (G, g, k, E)
     within = (pos < C) & (onehot > 0)
 
-    # dispatch/combine tensors, summed over the k choices.
+    # slot -> claiming token. Each (expert, slot) is claimed by at most
+    # one (token, rank) selection — the cumsum assignment guarantees it —
+    # so the map is built with exact integer sums and dispatch becomes a
+    # gather: bit-identical under any mesh/layout (no float reduction
+    # whose grouping could follow the local shape).
     dtype = x.dtype
-    disp = jnp.zeros((G, g, E, C), dtype)
-    comb = jnp.zeros((G, g, E, C), jnp.float32)
+    tok = jnp.arange(g, dtype=jnp.int32)
+    slot_token = jnp.zeros((G, E, C), jnp.int32)
+    claimed = jnp.zeros((G, E, C), jnp.int32)
     for r in range(k):
         sel = within[:, :, r, :]                        # (G, g, E)
         slot = jnp.clip(pos[:, :, r, :], 0, C - 1)
-        oh = jax.nn.one_hot(slot, C, dtype=jnp.float32) * sel[..., None]
-        disp = disp + oh.astype(dtype)
-        comb = comb + oh * gates[:, :, r][..., None, None]
+        oh = (jax.nn.one_hot(slot, C, dtype=jnp.int32)
+              * sel[..., None].astype(jnp.int32))       # (G, g, E, C)
+        slot_token = slot_token + jnp.einsum("gtec,t->gec", oh, tok)
+        claimed = claimed + jnp.sum(oh, axis=1)
 
-    # dispatch -> (G, E, C, d). The constraint FORCES the expert-parallel
-    # layout (groups over data, experts over model): GSPMD then lowers
-    # the dispatch as a token all-to-all. Without it the partitioner may
-    # instead all-gather every expert's weights per device — measured
-    # +13 GB/device on dbrx-132b train (EXPERIMENTS.md §Perf F).
-    # (dispatch/combine stay plain einsums: they contract against one-hot
-    # slot tensors / router gates — data movement, not weight GEMMs.)
+    # dispatch -> (G, E, C, d) token rows. The constraint FORCES the
+    # expert-parallel layout (groups over data, experts over model):
+    # GSPMD then lowers the resharding as a token all-to-all. Without it
+    # the partitioner may instead all-gather every expert's weights per
+    # device — measured +13 GB/device on dbrx-132b train
+    # (EXPERIMENTS.md §Perf F).
     ep_dims = ("groups_act", "experts_act", None, None)
-    xe = constrain(jnp.einsum("gtec,gtd->gecd", disp, xg), ep_dims)
+    xe = jnp.take_along_axis(xg, slot_token.reshape(G, E * C)[..., None],
+                             axis=1).reshape(G, E, C, d)
+    xe = constrain(xe * claimed[..., None].astype(dtype), ep_dims)
     # expert einsums through the unified quantized dispatch: the expert
     # axis is a qeinsum batch dim, so each expert's contraction is
     # quantized with its own scale (per-expert PreparedWeight slices on
@@ -114,5 +132,20 @@ def moe_apply(p, x, cfg: ModelConfig):
                     activation="gelu", out_dtype=dtype)
     ye = constrain(qeinsum("gecf,efd->gecd", h, p["wd"], q, site="moe.wd",
                            out_dtype=dtype), ep_dims)
-    y = jnp.einsum("gtec,gecd->gtd", comb.astype(dtype), ye)
-    return y.reshape(B, T, d), aux
+    # combine: each token reads back its <= k expert rows, summed in rank
+    # order by an unrolled loop — a fixed association order, so the
+    # result is identical on every mesh (the one-hot combine einsum let
+    # XLA group the k nonzero terms by whatever the local shape favored).
+    ye2 = ye.reshape(G, E * C, d)
+    y = jnp.zeros((G, g, d), jnp.float32)
+    for r in range(k):
+        e_r = eidx[:, :, r]                             # (G, g)
+        slot_r = jnp.clip(jnp.take_along_axis(
+            pos[:, :, r, :], e_r[..., None], axis=-1)[..., 0], 0, C - 1)
+        sel_r = jnp.take_along_axis(
+            within[:, :, r, :], e_r[..., None], axis=-1)[..., 0]
+        rows = jnp.take_along_axis(
+            ye2, (e_r * C + slot_r)[..., None], axis=1)  # (G, g, d)
+        w_r = gates[:, :, r] * sel_r.astype(jnp.float32)
+        y = y + w_r[..., None] * rows.astype(jnp.float32)
+    return y.astype(dtype).reshape(B, T, d), aux

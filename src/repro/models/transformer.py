@@ -28,7 +28,7 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.parallel.sharding import constrain
-from repro.quant import qeinsum
+from repro.quant import QuantizedKVCache, init_quantized_kv, qeinsum
 from .attention import KVCache, attention_apply, attention_init
 from .common import ParamFactory, dtype_of, grad_barrier, rms_norm
 from .ffn import ffn_apply, ffn_init
@@ -572,13 +572,43 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int,
 
     K/V storage uses ``cfg.kv_cache_dtype`` (fp8_e4m3 = 1 byte/elem, the
     paper's narrow-format theme applied to cache memory); SSM conv state
-    stays bf16 and the SSM recurrent state f32."""
+    stays bf16 and the SSM recurrent state f32.
+
+    With ``cfg.quant.kv_cache == "packed"`` (and no explicit ``dtype``
+    override), the self-attention K/V planes are instead allocated as
+    **packed FP8 codes** (uint8, ``quant.kvcache``) plus per-entry
+    ``k_scale``/``v_scale`` float32 planes — 1 byte/element of cache,
+    streamed straight into the MGS flash-decode attention kernel. The
+    whisper cross-attention cache stays in ``kv_cache_dtype`` (it is
+    written once at prefill and has no append path)."""
     kv_dtype = dtype if dtype is not None else dtype_of(cfg.kv_cache_dtype)
     conv_dtype = dtype if dtype is not None else jnp.bfloat16
+    packed = cfg.quant.quantized_kv and dtype is None
     cache: Dict[str, Any] = {"pos": jnp.zeros((), jnp.int32)}
     dims: Dict[str, Any] = {"pos": ()}
     La = _n_attn_layers(cfg)
-    if La:
+    if La and packed:
+        # round the sequence axis up to the flash kernel's chunk
+        # (quant.block_k): the decode step then streams the planes with
+        # zero re-padding (an unaligned length would copy the whole
+        # cache every step just to pad it). Extra positions sit beyond
+        # every decode position, so the validity mask keeps them inert.
+        chunk = cfg.quant.block_k
+        s_alloc = -(-max_len // chunk) * chunk
+        qkv = init_quantized_kv((La, batch), cfg.n_kv_heads, s_alloc,
+                                cfg.head_dim)
+        cache["k"] = qkv.k_codes
+        cache["v"] = qkv.v_codes
+        cache["k_scale"] = qkv.k_scale
+        cache["v_scale"] = qkv.v_scale
+        # heads before sequence (quant.kvcache layout): the decode view
+        # (B*KV, S, hd) is then a reshape, never a cache-sized transpose
+        d = ("layers", "batch", "kv_heads", "kv_seq", "head_dim")
+        dims["k"] = d
+        dims["v"] = d
+        dims["k_scale"] = d[:-1]
+        dims["v_scale"] = d[:-1]
+    elif La:
         kv_shape = (La, batch, max_len, cfg.n_kv_heads, cfg.head_dim)
         cache["k"] = jnp.zeros(kv_shape, kv_dtype)
         cache["v"] = jnp.zeros(kv_shape, kv_dtype)
@@ -613,6 +643,30 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int,
     return cache, dims
 
 
+def _kv_stack(cache):
+    """The layer-stacked attention-cache pytree for ``lax.scan``.
+
+    Packed caches (uint8 code planes + scale planes, allocated by
+    ``init_cache`` under ``quant.kv_cache == "packed"``) become a
+    :class:`~repro.quant.QuantizedKVCache`; float caches a
+    :class:`~repro.models.attention.KVCache`. ``lax.scan`` slices either
+    NamedTuple's leaves along the leading layer axis, so the layer
+    bodies receive the per-layer view directly.
+    """
+    if cache["k"].dtype == jnp.uint8:
+        return QuantizedKVCache(cache["k"], cache["v"], cache["k_scale"],
+                                cache["v_scale"])
+    return KVCache(cache["k"], cache["v"])
+
+
+def _kv_entries(kv) -> Dict[str, Any]:
+    """Stacked cache NamedTuple -> the ``init_cache`` dict entries."""
+    if isinstance(kv, QuantizedKVCache):
+        return {"k": kv.k_codes, "v": kv.v_codes,
+                "k_scale": kv.k_scale, "v_scale": kv.v_scale}
+    return {"k": kv.k, "v": kv.v}
+
+
 def prefill(params, cfg: ModelConfig, batch, cache):
     """Run the prompt through the stack, filling the cache.
 
@@ -645,15 +699,15 @@ def prefill(params, cfg: ModelConfig, batch, cache):
     new_cache = dict(cache)
     if cfg.is_hybrid:
         def gbody(x, xs):
-            pg, kc, vc = xs
+            pg, kvl = xs
             x, akv, ssm, _ = _hybrid_group_body(
-                pg, x, positions, cfg, KVCache(kc, vc), 0, None,
-                decode=False)
-            return x, (akv.k, akv.v, ssm.h, ssm.conv)
-        x, (ks, vs, hs, convs) = jax.lax.scan(
-            gbody, x, (params["layers"], cache["k"], cache["v"]))
-        new_cache.update(k=ks, v=vs, ssm_h=hs,
-                         ssm_conv=convs.astype(cache["ssm_conv"].dtype))
+                pg, x, positions, cfg, kvl, 0, None, decode=False)
+            return x, (akv, ssm.h, ssm.conv)
+        x, (kvs, hs, convs) = jax.lax.scan(
+            gbody, x, (params["layers"], _kv_stack(cache)))
+        new_cache.update(ssm_h=hs,
+                         ssm_conv=convs.astype(cache["ssm_conv"].dtype),
+                         **_kv_entries(kvs))
     elif cfg.is_ssm_only:
         def sbody(x, pl):
             x, sc = _ssm_body(pl, x, cfg, None, decode=False)
@@ -664,25 +718,24 @@ def prefill(params, cfg: ModelConfig, batch, cache):
                          ssm_conv=convs.astype(cache["ssm_conv"].dtype))
     elif cfg.encoder_layers:
         def dbody(x, xs):
-            pl, pc, kc, vc, ck, cv = xs
+            pl, pc, kvl, ck, cv = xs
             x, akv, _ = _dense_body(pl, x, positions, cfg, True,
-                                    KVCache(kc, vc), 0, KVCache(ck, cv), pc)
-            return x, (akv.k, akv.v)
-        x, (ks, vs) = jax.lax.scan(
-            dbody, x, (params["layers"], params["cross"], cache["k"],
-                       cache["v"], new_cache["cross_k"],
-                       new_cache["cross_v"]))
-        new_cache.update(k=ks, v=vs)
+                                    kvl, 0, KVCache(ck, cv), pc)
+            return x, akv
+        x, kvs = jax.lax.scan(
+            dbody, x, (params["layers"], params["cross"], _kv_stack(cache),
+                       new_cache["cross_k"], new_cache["cross_v"]))
+        new_cache.update(**_kv_entries(kvs))
     else:
         flags = _global_flags(cfg)
         def body(x, xs):
-            pl, isg, kc, vc = xs
+            pl, isg, kvl = xs
             x, akv, _ = _dense_body(pl, x, positions, cfg, isg,
-                                    KVCache(kc, vc), 0, None, None)
-            return x, (akv.k, akv.v)
-        x, (ks, vs) = jax.lax.scan(
-            body, x, (params["layers"], flags, cache["k"], cache["v"]))
-        new_cache.update(k=ks, v=vs)
+                                    kvl, 0, None, None)
+            return x, akv
+        x, kvs = jax.lax.scan(
+            body, x, (params["layers"], flags, _kv_stack(cache)))
+        new_cache.update(**_kv_entries(kvs))
 
     new_cache["pos"] = jnp.asarray(S, jnp.int32)
     x = rms_norm(x, params["final_norm"], cfg.norm_eps)
@@ -702,16 +755,17 @@ def decode_step(params, cfg: ModelConfig, tokens, cache):
     new_cache = dict(cache)
     if cfg.is_hybrid:
         def gbody(x, xs):
-            pg, kc, vc, hc, cc = xs
+            pg, kvl, hc, cc = xs
             x, akv, ssm, _ = _hybrid_group_body(
-                pg, x, positions, cfg, KVCache(kc, vc), pos,
+                pg, x, positions, cfg, kvl, pos,
                 SSMCache(hc, cc), decode=True)
-            return x, (akv.k, akv.v, ssm.h, ssm.conv)
-        x, (ks, vs, hs, convs) = jax.lax.scan(
-            gbody, x, (params["layers"], cache["k"], cache["v"],
+            return x, (akv, ssm.h, ssm.conv)
+        x, (kvs, hs, convs) = jax.lax.scan(
+            gbody, x, (params["layers"], _kv_stack(cache),
                        cache["ssm_h"], cache["ssm_conv"]))
-        new_cache.update(k=ks, v=vs, ssm_h=hs,
-                         ssm_conv=convs.astype(cache["ssm_conv"].dtype))
+        new_cache.update(ssm_h=hs,
+                         ssm_conv=convs.astype(cache["ssm_conv"].dtype),
+                         **_kv_entries(kvs))
     elif cfg.is_ssm_only:
         def sbody(x, xs):
             pl, hc, cc = xs
@@ -723,25 +777,24 @@ def decode_step(params, cfg: ModelConfig, tokens, cache):
                          ssm_conv=convs.astype(cache["ssm_conv"].dtype))
     elif cfg.encoder_layers:
         def dbody(x, xs):
-            pl, pc, kc, vc, ck, cv = xs
+            pl, pc, kvl, ck, cv = xs
             x, akv, _ = _dense_body(pl, x, positions, cfg, True,
-                                    KVCache(kc, vc), pos, KVCache(ck, cv),
-                                    pc)
-            return x, (akv.k, akv.v)
-        x, (ks, vs) = jax.lax.scan(
-            dbody, x, (params["layers"], params["cross"], cache["k"],
-                       cache["v"], cache["cross_k"], cache["cross_v"]))
-        new_cache.update(k=ks, v=vs)
+                                    kvl, pos, KVCache(ck, cv), pc)
+            return x, akv
+        x, kvs = jax.lax.scan(
+            dbody, x, (params["layers"], params["cross"], _kv_stack(cache),
+                       cache["cross_k"], cache["cross_v"]))
+        new_cache.update(**_kv_entries(kvs))
     else:
         flags = _global_flags(cfg)
         def body(x, xs):
-            pl, isg, kc, vc = xs
+            pl, isg, kvl = xs
             x, akv, _ = _dense_body(pl, x, positions, cfg, isg,
-                                    KVCache(kc, vc), pos, None, None)
-            return x, (akv.k, akv.v)
-        x, (ks, vs) = jax.lax.scan(
-            body, x, (params["layers"], flags, cache["k"], cache["v"]))
-        new_cache.update(k=ks, v=vs)
+                                    kvl, pos, None, None)
+            return x, akv
+        x, kvs = jax.lax.scan(
+            body, x, (params["layers"], flags, _kv_stack(cache)))
+        new_cache.update(**_kv_entries(kvs))
 
     new_cache["pos"] = pos + 1
     x = rms_norm(x, params["final_norm"], cfg.norm_eps)

@@ -3,7 +3,9 @@
 # every linear layer.
 from .calibrate import (ActivationRecorder, CalibrationTable, calibrating,
                         current_recorder)
-from .config import ACCUMS, DTYPES, QuantConfig
+from .config import ACCUMS, DTYPES, KV_CACHES, QuantConfig
+from .kvcache import (QuantizedKVCache, append_kv, dequantize_kv,
+                      init_quantized_kv, kv_cache_bytes, quantize_kv)
 from .prepared import (PREP_STATS, PreparedWeight, clear_prepared_cache,
                        prepare_logits_head, prepare_params, prepare_unembed,
                        prepare_weight)
@@ -12,11 +14,13 @@ from .qmatmul import qmatmul
 from .quantize import (QTensor, dequantize_int, fake_quant_fp8,
                        fake_quant_int, quantize_fp8, quantize_int)
 
-__all__ = ["ACCUMS", "DTYPES", "QuantConfig", "qmatmul", "qeinsum",
-           "plan_qeinsum", "QeinsumPlan", "QTensor",
+__all__ = ["ACCUMS", "DTYPES", "KV_CACHES", "QuantConfig", "qmatmul",
+           "qeinsum", "plan_qeinsum", "QeinsumPlan", "QTensor",
            "dequantize_int", "fake_quant_fp8", "fake_quant_int",
            "quantize_fp8", "quantize_int", "PreparedWeight",
            "prepare_weight", "prepare_params", "prepare_unembed",
            "prepare_logits_head", "PREP_STATS",
            "clear_prepared_cache", "ActivationRecorder", "CalibrationTable",
-           "calibrating", "current_recorder"]
+           "calibrating", "current_recorder", "QuantizedKVCache",
+           "quantize_kv", "append_kv", "init_quantized_kv",
+           "dequantize_kv", "kv_cache_bytes"]

@@ -16,11 +16,15 @@ from typing import Optional, Tuple
 
 from repro.core.formats import E4M3, E5M2, FPFormat, get_format
 
-__all__ = ["QuantConfig", "DTYPES", "ACCUMS", "SCHEDULES"]
+__all__ = ["QuantConfig", "DTYPES", "ACCUMS", "SCHEDULES", "KV_CACHES"]
 
 DTYPES = ("none", "int8", "int5", "int4", "fp8_e4m3", "fp8_e5m2")
 ACCUMS = ("wide", "mgs_exact", "mgs_dmac", "clip", "wrap", "swamp")
 SCHEDULES = ("output", "weight", "activation")
+KV_CACHES = ("float", "packed")
+# Narrow-exponent formats the exact limb kernels support; the packed KV
+# cache decode runs through them, so kv_format is restricted to this set.
+_KV_FORMATS = ("e4m3", "e3m4")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -65,6 +69,17 @@ class QuantConfig:
         set, the Markov planner uses the site's observed activation
         sigma instead of the uniform-limb default, making flush periods
         per-call-site rather than global.
+      kv_cache: decode KV-cache representation. "float" stores K/V in
+        ``ModelConfig.kv_cache_dtype`` and re-quantizes them per decode
+        step for the score/value contractions. "packed" stores K/V as
+        packed FP8 *codes* (1 byte/element, ``quant.kvcache``) with
+        per-entry scales — append re-quantizes only the new entries, and
+        decode attention streams the codes straight into the MGS
+        flash-decode kernel (``kernels.mgs_attention``). Requires an
+        exact-MGS fp8 config (the packed path has no float fallback
+        numerics of its own).
+      kv_format: FP8 format of the packed cache codes (narrow-exponent
+        only: the exact limb kernels decode them in-VMEM).
     """
 
     dtype: str = "none"
@@ -82,6 +97,8 @@ class QuantConfig:
     block_k: int = 128
     flush_target: Optional[float] = None
     calibration: Optional[Tuple[Tuple[str, float], ...]] = None
+    kv_cache: str = "float"
+    kv_format: str = "e4m3"
 
     def __post_init__(self):
         if self.dtype not in DTYPES:
@@ -91,6 +108,20 @@ class QuantConfig:
         if self.schedule not in SCHEDULES:
             raise ValueError(f"schedule {self.schedule!r} not in "
                              f"{SCHEDULES}")
+        if self.kv_cache not in KV_CACHES:
+            raise ValueError(f"kv_cache {self.kv_cache!r} not in "
+                             f"{KV_CACHES}")
+        if self.kv_format not in _KV_FORMATS:
+            raise ValueError(f"kv_format {self.kv_format!r} not in "
+                             f"{_KV_FORMATS} (the exact limb kernels "
+                             f"need a narrow-exponent format)")
+        if self.kv_cache == "packed" and not (
+                self.is_fp8 and self.accum == "mgs_exact"):
+            raise ValueError(
+                "kv_cache='packed' requires dtype='fp8_*' and "
+                "accum='mgs_exact': the packed cache is consumed by the "
+                "MGS flash-decode attention kernel "
+                f"(got dtype={self.dtype!r}, accum={self.accum!r})")
         if self.calibration is not None:
             # normalize unconditionally (CalibrationTable / dict / any
             # pair iterable -> sorted, coerced tuple) so equal tables
@@ -101,6 +132,16 @@ class QuantConfig:
     @property
     def is_fp8(self) -> bool:
         return self.dtype.startswith("fp8")
+
+    @property
+    def quantized_kv(self) -> bool:
+        """True when the decode KV cache stores packed FP8 codes."""
+        return self.kv_cache == "packed"
+
+    @property
+    def kv_fmt(self) -> FPFormat:
+        """The packed KV cache's code format."""
+        return get_format(self.kv_format)
 
     @property
     def is_int(self) -> bool:
@@ -175,5 +216,11 @@ FP8_MGS_EXACT = QuantConfig(dtype="fp8_e4m3", accum="mgs_exact")
 # prepared weights (see quant.prepared) and fused epilogues.
 FP8_MGS_SERVE = QuantConfig(dtype="fp8_e4m3", accum="mgs_exact",
                             use_kernel=True, fused=True)
+# Serving preset with the packed FP8 KV cache: decode attention streams
+# 1-byte cache codes through the MGS flash-decode kernel
+# (kernels.mgs_attention), halving decode HBM traffic vs a bf16 cache.
+FP8_MGS_SERVE_KV = QuantConfig(dtype="fp8_e4m3", accum="mgs_exact",
+                               use_kernel=True, fused=True,
+                               kv_cache="packed")
 FP8_WIDE = QuantConfig(dtype="fp8_e4m3", accum="wide")
 INT8_DMAC = QuantConfig(dtype="int8", accum="mgs_dmac")

@@ -1,0 +1,172 @@
+"""Packed-FP8 quantized KV cache for decode serving.
+
+Serving decode is memory-bound on the KV cache: every decode step streams
+the whole cache through the score/value contractions. A bf16 cache costs
+2 bytes/element of HBM traffic per step *and* (under an fp8 QuantConfig)
+re-quantizes the full cache every step — the absmax/round work grows with
+the context length even though all but one entry is unchanged. This
+module stores the cache the way the paper stores operands (PAPER.md §4):
+**packed FP8 codes**, 1 byte/element, plus one float32 scale per cached
+(position, head) entry:
+
+    k[b, s, h, :] == decode_bits(k_codes[b, s, h, :]) * k_scale[b, s, h]
+
+The per-entry scale is what makes the cache *append-only*: a new entry's
+absmax never touches old entries, so :func:`append_kv` quantizes exactly
+the ``T`` new positions and ``dynamic_update_slice``-writes them — old
+codes and scales are bit-frozen for the life of the request
+(``tests/test_kvcache.py`` pins this property). Decode attention then
+consumes the codes directly: the MGS flash-decode kernel
+(:mod:`repro.kernels.mgs_attention`) decodes them in VMEM and runs the
+exact limb-summation contractions, so the narrow cache *improves* on
+naive fp8 attention accuracy instead of trading it away — the paper's
+accumulation argument applied to the serving hot path.
+
+Layout (leading dims free — per-layer stacks prepend axes):
+
+* ``k_codes`` / ``v_codes``: ``(..., KV, S, hd)`` uint8 packed codes
+  (:func:`repro.core.formats.encode_bits`).
+* ``k_scale`` / ``v_scale``: ``(..., KV, S)`` float32 dequantization
+  scales (absmax of the entry's ``hd`` values over the format range).
+
+The kv-head axis sits **before** the sequence axis so the decode step's
+flash-kernel view ``(B * KV, S, hd)`` is a pure reshape of adjacent
+dims: the hot loop never transposes (= copies) the cache planes.
+Appends transpose only the ``T`` fresh entries — O(new), not O(S).
+
+``QuantizedKVCache`` is a NamedTuple of arrays, so it passes through
+``jax.lax.scan`` / ``jax.jit`` like any pytree: the model's
+scan-over-layers slices the stacked planes along the leading layer axis
+transparently (``models.transformer``).
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.formats import (E4M3, FPFormat, decode_bits, encode_bits,
+                                round_to_format)
+
+__all__ = ["QuantizedKVCache", "quantize_kv", "append_kv",
+           "init_quantized_kv", "dequantize_kv", "kv_cache_bytes"]
+
+
+class QuantizedKVCache(NamedTuple):
+    """Packed-code KV cache planes (one attention layer's view).
+
+    The stacked multi-layer cache (``models.init_cache``) holds the same
+    four planes with a leading ``layers`` axis; ``lax.scan`` slices them
+    into this per-layer view.
+    """
+
+    k_codes: jnp.ndarray   # (..., KV, S, hd) uint8
+    v_codes: jnp.ndarray   # (..., KV, S, hd) uint8
+    k_scale: jnp.ndarray   # (..., KV, S) float32
+    v_scale: jnp.ndarray   # (..., KV, S) float32
+
+
+def quantize_kv(x, fmt: FPFormat = E4M3) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Quantize K or V entries to packed codes + per-entry scales.
+
+    Args:
+      x: ``(..., hd)`` float K or V vectors.
+      fmt: narrow-exponent FP8 cache format (``QuantConfig.kv_fmt``).
+
+    Returns:
+      ``(codes, scale)`` — ``(..., hd)`` uint8 packed codes and ``(...)``
+      float32 scales such that ``decode_bits(codes) * scale[..., None]``
+      reconstructs the quantized values. The scale is the entry's absmax
+      mapped onto the format's max finite value (the standard FP8 recipe,
+      per (position, head) so appends never re-scale old entries). All
+      reductions are over the static trailing ``hd`` axis, so the result
+      is independent of how leading (mesh-sharded) axes are laid out —
+      the bit-identity contract of docs/serving.md.
+    """
+    x = x.astype(jnp.float32)
+    amax = jnp.maximum(jnp.max(jnp.abs(x), axis=-1),
+                       jnp.finfo(jnp.float32).tiny)
+    scale = amax / fmt.max_finite
+    q = round_to_format(x / scale[..., None], fmt)
+    return encode_bits(q, fmt), scale
+
+
+def init_quantized_kv(lead, n_heads: int, seq: int,
+                      head_dim: int) -> QuantizedKVCache:
+    """Allocate an all-zero packed cache.
+
+    ``lead`` carries the leading axes (e.g. ``(layers, batch)``); the
+    planes come out ``(*lead, n_heads, seq, head_dim)`` / scale
+    ``(*lead, n_heads, seq)`` — heads before sequence, so the decode
+    view is a reshape (module docstring). Code 0 decodes to +0.0 and a
+    0.0 scale keeps the product exactly zero, so unwritten positions
+    contribute nothing even before the validity mask lands.
+    """
+    full = tuple(lead) + (n_heads, seq, head_dim)
+    srow = tuple(lead) + (n_heads, seq)
+    return QuantizedKVCache(
+        k_codes=jnp.zeros(full, jnp.uint8),
+        v_codes=jnp.zeros(full, jnp.uint8),
+        k_scale=jnp.zeros(srow, jnp.float32),
+        v_scale=jnp.zeros(srow, jnp.float32))
+
+
+def append_kv(cache: QuantizedKVCache, k_new, v_new, pos,
+              fmt: FPFormat = E4M3) -> QuantizedKVCache:
+    """Write new K/V entries at ``pos``, re-quantizing **only** them.
+
+    Args:
+      cache: per-layer ``(B, KV, S, hd)`` cache view.
+      k_new / v_new: ``(B, T, KV, hd)`` fresh projections (prefill: the
+        whole prompt; decode: T == 1) — the layer layout; only these
+        ``T`` entries are transposed into the cache's (KV, S) order.
+      pos: starting sequence position (traced scalar is fine).
+      fmt: the cache's code format.
+
+    Returns:
+      The cache with positions ``[pos, pos + T)`` replaced. Every other
+      code/scale element is carried through untouched (a pure
+      ``dynamic_update_slice``), which is what keeps append O(T) instead
+      of O(S) in quantization work.
+    """
+    kc, ks = quantize_kv(k_new, fmt)
+    vc, vs = quantize_kv(v_new, fmt)
+    kc, vc = kc.transpose(0, 2, 1, 3), vc.transpose(0, 2, 1, 3)
+    ks, vs = ks.transpose(0, 2, 1), vs.transpose(0, 2, 1)
+    at4 = (0, 0, pos, 0)
+    at3 = (0, 0, pos)
+    return QuantizedKVCache(
+        k_codes=jax.lax.dynamic_update_slice(cache.k_codes, kc, at4),
+        v_codes=jax.lax.dynamic_update_slice(cache.v_codes, vc, at4),
+        k_scale=jax.lax.dynamic_update_slice(cache.k_scale, ks, at3),
+        v_scale=jax.lax.dynamic_update_slice(cache.v_scale, vs, at3))
+
+
+def dequantize_kv(cache: QuantizedKVCache, fmt: FPFormat = E4M3,
+                  dtype=jnp.float32) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Reconstruct float K/V from the packed planes (tests / fallbacks).
+
+    The hot decode path never calls this — the flash kernel decodes codes
+    in VMEM — but error-bound tests and non-MGS consumers need the float
+    view: ``value = decode_bits(code) * scale``.
+    """
+    k = decode_bits(cache.k_codes, fmt, jnp.float32) * cache.k_scale[..., None]
+    v = decode_bits(cache.v_codes, fmt, jnp.float32) * cache.v_scale[..., None]
+    return k.astype(dtype), v.astype(dtype)
+
+
+def kv_cache_bytes(batch: int, seq: int, kv_heads: int, head_dim: int, *,
+                   quantized: bool, float_itemsize: int = 2) -> int:
+    """Analytic HBM bytes of one layer's K+V cache.
+
+    ``quantized``: 1 byte/element of codes plus 4 bytes per (position,
+    head) scale; float: ``float_itemsize`` bytes/element (bf16 default).
+    Used by ``benchmarks/decode_bench.py`` and the docs/serving.md memory
+    table — decode streams this much per layer per step.
+    """
+    elems = batch * seq * kv_heads * head_dim
+    if quantized:
+        return 2 * (elems + 4 * batch * seq * kv_heads)
+    return 2 * elems * float_itemsize

@@ -142,6 +142,97 @@ def test_moe_active_params_lower():
     assert cfg.n_active_params() < 0.5 * cfg.n_params()
 
 
+def test_moe_gather_routing_matches_dense_reference():
+    """ISSUE-5 satellite: the gather-based MoE dispatch/combine
+    reproduces an independently-coded dense reference (per-token loop
+    over the same rank-major capacity assignment) to f32 rounding."""
+    import dataclasses
+    import math
+    from repro.models.common import ParamFactory
+    from repro.models.moe import _n_groups, moe_apply, moe_init
+
+    cfg = dataclasses.replace(reduced_config("dbrx-132b"), top_k=3)
+    f = ParamFactory(jax.random.PRNGKey(0), jnp.float32)
+    moe_init(f, cfg)
+    p, _ = f.collect()
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(0, 1, (2, 16, cfg.d_model)).astype(
+        np.float32))
+    y, _ = moe_apply(p, x, cfg)
+
+    E, k, (B, T, d) = cfg.n_experts, cfg.top_k, x.shape
+    G = _n_groups(B * T, cfg)
+    g = B * T // G
+    C = max(1, int(math.ceil(k * g * cfg.capacity_factor / E)))
+    xg = np.asarray(x).reshape(G, g, d)
+    logits = np.einsum("gtd,de->gte", xg, np.asarray(p["wr"]))
+    probs = np.asarray(jax.nn.softmax(jnp.asarray(logits), axis=-1))
+    eidx = np.argsort(-probs, axis=-1)[..., :k]
+    gates = -np.sort(-probs, axis=-1)[..., :k]
+    gates = gates / np.maximum(gates.sum(-1, keepdims=True), 1e-9)
+
+    def expert(e, xt):
+        hg = xt @ np.asarray(p["wg"])[e]
+        hu = xt @ np.asarray(p["wu"])[e]
+        return ((hg / (1 + np.exp(-hg))) * hu) @ np.asarray(p["wd"])[e]
+
+    yref = np.zeros((G, g, d), np.float32)
+    for gi in range(G):
+        count = {e: 0 for e in range(E)}
+        for r in range(k):              # rank-major, then token-major
+            for t in range(g):
+                e = eidx[gi, t, r]
+                if count[e] < C:
+                    count[e] += 1
+                    yref[gi, t] += gates[gi, t, r] * expert(e, xg[gi, t])
+    got = np.asarray(y).reshape(G, g, d)
+    np.testing.assert_allclose(got, yref, rtol=2e-5, atol=2e-5)
+
+
+def test_chunked_attention_matches_dense_with_padding():
+    """ISSUE-5 satellite: the chunked online-softmax path with a
+    non-chunk-aligned key length matches dense attention — including the
+    bidirectional (whisper-encoder) case, where the old silent
+    zero-padding *attended* the padded keys. Padding is now explicit
+    masked sentinel positions; `_sdpa_chunked` itself rejects unaligned
+    inputs with a clear error."""
+    import dataclasses
+    rng = np.random.default_rng(0)
+    # causal, T=10 not divisible by chunk=4
+    cfg = dataclasses.replace(reduced_config("deepseek-7b"),
+                              compute_dtype="float32")
+    params, _ = init_params(cfg, jax.random.PRNGKey(0))
+    toks = jnp.asarray(rng.integers(1, cfg.vocab, (2, 10)), jnp.int32)
+    ld, _ = forward(params, dataclasses.replace(cfg, attn_chunk=0),
+                    {"tokens": toks})
+    lc, _ = forward(params, dataclasses.replace(cfg, attn_chunk=4),
+                    {"tokens": toks})
+    np.testing.assert_allclose(np.asarray(lc), np.asarray(ld),
+                               rtol=2e-5, atol=2e-5)
+    # bidirectional: whisper encoder, encoder_len=16 not divisible by 5
+    wcfg = dataclasses.replace(reduced_config("whisper-tiny"),
+                               compute_dtype="float32")
+    wparams, _ = init_params(wcfg, jax.random.PRNGKey(0))
+    batch = {"tokens": jnp.asarray(rng.integers(1, wcfg.vocab, (2, 8)),
+                                   jnp.int32),
+             "audio_embeds": jnp.asarray(
+                 rng.normal(0, 1, (2, wcfg.encoder_len,
+                                   wcfg.d_model)).astype(np.float32))}
+    ld, _ = forward(wparams, dataclasses.replace(wcfg, attn_chunk=0), batch)
+    lc, _ = forward(wparams, dataclasses.replace(wcfg, attn_chunk=5), batch)
+    np.testing.assert_allclose(np.asarray(lc), np.asarray(ld),
+                               rtol=2e-5, atol=2e-5)
+    # unaligned direct call is a clear error, not silent padding
+    from repro.models.attention import _sdpa_chunked
+    q = jnp.zeros((1, 2, 1, 1, 4), jnp.float32)
+    kv = jnp.zeros((1, 10, 1, 4), jnp.float32)
+    pos = jnp.zeros((1, 2), jnp.int32)
+    kpos = jnp.zeros((1, 10), jnp.int32)
+    with pytest.raises(ValueError, match="chunk-aligned"):
+        _sdpa_chunked(q, kv, kv, pos, kpos, causal=True, window=0,
+                      is_global=True, chunk=4)
+
+
 def test_window_mask_effect():
     """A token outside every local window changes global-layer outputs
     only; with all-local tiny window, far context is invisible."""

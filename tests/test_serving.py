@@ -115,6 +115,19 @@ def test_quantized_serving_prepares_weights_once(rng):
     assert PREP_STATS["prepared"] == n_init
 
 
+def test_warmup_plen_buckets(rng):
+    """Bucketed prefill-length warmup compiles without touching served
+    stats, validates its bounds, and a subsequent run still serves."""
+    cfg, engine = _engine()
+    assert engine.warmup([8, 16, 8]) == [8, 16]   # de-duplicated, sorted
+    with pytest.raises(ValueError, match="out of range"):
+        engine.warmup([engine.max_len])
+    reqs = [Request(rid=0, prompt=rng.integers(1, cfg.vocab, 8).astype(
+        np.int32), max_new_tokens=2)]
+    stats = engine.run(reqs)
+    assert stats["decode_tokens"] == 2            # warmup never counted
+
+
 def test_summation_module_orderings(rng):
     """Low-precision summation error ordering on heavy-tailed data."""
     vals = rng.standard_t(3, 4096).astype(np.float32)

@@ -146,6 +146,50 @@ def test_sharded_engine_prepares_once_per_process():
     assert res["hits"]
 
 
+@pytest.mark.slow
+def test_moe_sharded_bit_identity_top_k3():
+    """ISSUE-5 satellite: with the gather-based MoE dispatch/combine, an
+    MoE arch (top_k=3 — where the old one-hot combine einsum's k
+    nonzero terms could reassociate across meshes) produces
+    bit-identical logits on 1 vs forced-8 devices."""
+    out = _run("""
+    import dataclasses, json
+    import jax, jax.numpy as jnp, numpy as np
+    from repro.configs import reduced_config
+    from repro.launch.mesh import make_mesh, make_serve_mesh
+    from repro.launch.serve import ServeEngine
+    from repro.models import init_cache, init_params
+    from repro.parallel.sharding import use_rules
+    from repro.quant import QuantConfig
+
+    cfg = dataclasses.replace(
+        reduced_config("granite-moe-1b-a400m"), top_k=3,
+        quant=QuantConfig(dtype="fp8_e4m3", accum="mgs_exact",
+                          use_kernel=True, fused=True,
+                          block_m=32, block_n=32, block_k=32))
+    params, dims = init_params(cfg, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    prompt = rng.integers(1, cfg.vocab, 6).astype(np.int32)
+    toks = jnp.asarray(np.stack([prompt, prompt]))
+
+    def logits_on(mesh):
+        e = ServeEngine(cfg, mesh, batch=2, max_len=12, params=params,
+                        dims=dims)
+        cache, _ = init_cache(cfg, 2, 12)
+        with use_rules(e.rules):
+            lg, _ = e._prefill(e.params, {"tokens": toks}, cache)
+        return np.asarray(lg)
+
+    l1 = logits_on(make_mesh((1, 1), ("data", "model")))
+    l8 = logits_on(make_serve_mesh())
+    print(json.dumps({"ndev": jax.device_count(),
+                      "bitwise": bool((l1 == l8).all())}))
+    """, timeout=800)
+    res = json.loads(out.strip().splitlines()[-1])
+    assert res["ndev"] == 8
+    assert res["bitwise"]
+
+
 # ---------------------------------------------------------------------------
 # native multi-device tests (the forced-8-device CI shard)
 # ---------------------------------------------------------------------------
