@@ -33,9 +33,11 @@ LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
 
 # Modules whose public API must be covered by README/docs prose. CLI
 # entry points (``main``) are exempt — they are documented as commands,
-# not symbols.
+# not symbols. The runtime modules joined with ISSUE-6: the fault-
+# tolerance layer is public serving API and must stay documented.
 API_MODULES = ("repro.launch.serve", "repro.launch.replica",
-               "repro.quant.kvcache")
+               "repro.quant.kvcache", "repro.runtime.checkpoint",
+               "repro.runtime.elastic", "repro.runtime.fault_tolerance")
 API_SKIP = {"main"}
 
 

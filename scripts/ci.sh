@@ -27,10 +27,20 @@ XLA_FLAGS="--xla_force_host_platform_device_count=8" \
 # tokens on an 8-device mesh == single device (flash-decode in the loop).
 XLA_FLAGS="--xla_force_host_platform_device_count=8" \
     python -m pytest -x -q -m multidevice tests/test_kvcache.py
+# Chaos shard (ISSUE-6): replica killed mid-drain by injected faults on
+# an 8-device fleet — zero requests dropped, requeued tokens bitwise
+# identical to the fault-free single-engine run, PREP_STATS flat.
+XLA_FLAGS="--xla_force_host_platform_device_count=8" \
+    python -m pytest -x -q -m multidevice tests/test_failover.py
 
 # Decode-bench smoke (ISSUE-5): analytic HBM accounting + measured
 # float-vs-packed decode wall time; refreshes BENCH_decode.json.
 python -m benchmarks.run decode
+
+# Failover-benchmark smoke (ISSUE-6): injected replica kill vs fault-free
+# baseline at R=2,4 — recovery latency + throughput restore; refreshes
+# BENCH_failover.json.
+python -m benchmarks.run failover
 
 # Replica-driver example smoke: 2 replica engines on 2 forced host
 # devices, shared prepared planes, tokens identical to single engine.

@@ -61,7 +61,7 @@ def make_serve_mesh(model_parallel: int | None = None):
 
 
 def carve_submeshes(replicas: int, *, model_parallel: int | None = None,
-                    devices=None) -> list:
+                    devices=None, exclude=()) -> list:
     """Partition the device set into ``replicas`` disjoint serving meshes.
 
     The replica-group serving driver (:mod:`repro.launch.replica`) runs
@@ -78,6 +78,10 @@ def carve_submeshes(replicas: int, *, model_parallel: int | None = None,
       devices: explicit device list to carve (default ``jax.devices()``).
         Devices are assigned to replicas in contiguous runs, so on real
         hardware neighbouring chips (fast ICI) land in the same replica.
+      exclude: device ids to drop before carving — the fleet-restart
+        path after a device failure (``repro.runtime.elastic``): carve
+        the surviving set, leaving known-bad chips out. The post-
+        exclusion count must still divide evenly.
 
     Returns:
       A list of R ``("data", "model")`` meshes with pairwise-disjoint
@@ -85,6 +89,9 @@ def carve_submeshes(replicas: int, *, model_parallel: int | None = None,
       model_parallel)`` where ``per = device_count // replicas``.
     """
     devs = list(devices) if devices is not None else list(jax.devices())
+    if exclude:
+        bad = set(exclude)
+        devs = [d for d in devs if d.id not in bad]
     n = len(devs)
     if replicas < 1 or n % replicas:
         raise ValueError(f"replicas={replicas} does not divide the "

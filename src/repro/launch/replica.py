@@ -34,17 +34,37 @@ only on the group's contents (never on which devices ran it), the
 driver's outputs are invariant to the scheduler policy and to R, and
 equal to a single engine serving the same requests in the same order.
 
+Fault tolerance (the self-healing fleet)
+----------------------------------------
+Every worker serves its groups under a retry-with-backoff loop and a
+per-group watchdog deadline; repeated failure escalates to the
+supervisor path (:meth:`ReplicaServeDriver._fail_replica`): the replica
+is marked unhealthy, its queued **and** in-flight requests are reset and
+requeued onto surviving replicas (group composition preserved, so
+outputs stay invariant), and a replacement engine is rebuilt on the
+replica's healthy device set
+(:func:`repro.runtime.elastic.replacement_mesh` + :func:`transfer_tree`
+— zero re-quantization, ``quant.PREP_STATS`` stays flat across
+recovery). Because every engine is deterministic, a requeued request's
+logits are **bitwise identical** on whichever replica re-runs it — the
+exactness guarantee that turns failover testing from a tolerance
+argument into an equality assert (``tests/test_failover.py``,
+``benchmarks/failover.py``). Deterministic fault injection for those
+tests threads through ``injector=``
+(:class:`repro.runtime.fault_tolerance.FaultInjector`).
+
 Lifecycle::
 
     driver = ReplicaServeDriver(cfg, replicas=4, batch=8, max_len=128)
     driver.warmup(prompt_len=32)        # compile prefill/decode per replica
     futs = driver.submit_many(reqs)     # async: Future -> completed Request
     driver.drain()                      # flush partial group, wait for all
-    print(driver.stats())
+    print(driver.stats())               # incl. per-replica health states
     driver.close()                      # or use it as a context manager
 
-See docs/replica_serving.md for the architecture walkthrough and the
-throughput-vs-determinism trade-off against ``shard_batch=True``.
+See docs/replica_serving.md for the architecture walkthrough, the
+fault-tolerance states, and the throughput-vs-determinism trade-off
+against ``shard_batch=True``.
 """
 
 from __future__ import annotations
@@ -64,6 +84,9 @@ from repro.configs.base import ModelConfig
 from repro.launch.mesh import carve_submeshes
 from repro.launch.serve import Request, make_engine
 from repro.quant.calibrate import CalibrationTable
+from repro.runtime.elastic import replacement_mesh
+from repro.runtime.fault_tolerance import (FaultInjector, PoisonedDeviceError,
+                                           ReplicaHealth, backoff_delay)
 
 __all__ = ["ReplicaServeDriver", "transfer_tree"]
 
@@ -126,11 +149,27 @@ class ReplicaServeDriver:
       calibration: optional pre-built table installed on every engine.
       scheduler: group -> replica assignment policy. ``"round_robin"``
         cycles replicas in dispatch order; ``"least_loaded"`` picks the
-        replica with the fewest queued + in-flight groups. Outputs are
-        identical under either (see module docstring).
+        replica with the fewest queued + in-flight groups, preferring
+        fully healthy replicas over suspect ones. Both skip unhealthy /
+        rebuilding / dead replicas. Outputs are identical under either
+        (see module docstring).
       model_parallel: model-axis size of each sub-mesh (default: all of
         the replica's devices — pure TP).
       devices: explicit device list to carve (default all visible).
+      injector: optional
+        :class:`repro.runtime.fault_tolerance.FaultInjector` — bound
+        per replica and threaded into every ``engine.run`` (chaos
+        tests / the ``failover`` benchmark). Warmup jobs are never
+        injected.
+      max_retries: in-place retries per group before the supervisor
+        declares the replica failed (poisoned-device faults skip
+        straight to failover — the device set itself is bad).
+      deadline_s: per-group watchdog budget handed to ``engine.run``;
+        a group exceeding it raises ``DeadlineExceeded`` and enters the
+        same retry/failover path.
+      backoff_base_s / backoff_cap_s: retry backoff shape
+        (:func:`repro.runtime.fault_tolerance.backoff_delay`; jitter is
+        deterministic, seeded per replica).
 
     Every engine keeps ``shard_batch=False`` (the deterministic layout),
     so per-request logits are bit-identical to a single-device run; the
@@ -142,11 +181,26 @@ class ReplicaServeDriver:
                  eos_id: Optional[int] = None,
                  calibration: Optional[CalibrationTable] = None,
                  scheduler: str = "round_robin",
-                 model_parallel: Optional[int] = None, devices=None):
+                 model_parallel: Optional[int] = None, devices=None,
+                 injector: Optional[FaultInjector] = None,
+                 max_retries: int = 2,
+                 deadline_s: Optional[float] = None,
+                 backoff_base_s: float = 0.02,
+                 backoff_cap_s: float = 0.5):
         if scheduler not in SCHEDULERS:
             raise ValueError(f"scheduler {scheduler!r} not in {SCHEDULERS}")
         self.batch = batch
         self.scheduler = scheduler
+        self.cfg = cfg
+        self._engine_kwargs = dict(batch=batch, max_len=max_len, seed=seed,
+                                   eos_id=eos_id)
+        self._calibration = calibration
+        self._injector = injector
+        self._max_retries = max_retries
+        self._deadline_s = deadline_s
+        self._backoff = dict(base_s=backoff_base_s, cap_s=backoff_cap_s)
+        self._seed = seed
+        self._warmup_plan: Optional[tuple] = None
         self.meshes = carve_submeshes(replicas, model_parallel=model_parallel,
                                       devices=devices)
         first = make_engine(cfg, self.meshes[0], batch=batch,
@@ -171,8 +225,11 @@ class ReplicaServeDriver:
         self._t0: Optional[float] = None
         self._stats: Dict[str, Any] = {
             "prefill_tokens": 0, "decode_tokens": 0, "requests": 0,
-            "groups": 0, "busy_s": 0.0,
+            "groups": 0, "busy_s": 0.0, "retries": 0, "failovers": 0,
+            "requeued_requests": 0, "rebuilds": 0,
             "groups_per_replica": [0] * replicas}
+        self.health = [ReplicaHealth() for _ in range(replicas)]
+        self._events: List[Dict[str, Any]] = []
         self._closed = False
         self._queues: List["queue.Queue"] = [queue.Queue()
                                              for _ in range(replicas)]
@@ -186,67 +243,248 @@ class ReplicaServeDriver:
     # -- worker ------------------------------------------------------------
 
     def _worker(self, idx: int):
-        engine, q = self.engines[idx], self._queues[idx]
+        q = self._queues[idx]
         while True:
             job = q.get()
             if job is None:
                 q.task_done()
                 return
             try:
-                if job.warmup is not None:
-                    buckets, max_new, seed = job.warmup
-                    engine.warmup(buckets, max_new=max_new, seed=seed)
-                    results = [None] * len(job.futures)
-                else:
-                    stats = engine.run(job.requests)
-                    if job.counted:
-                        with self._lock:
-                            self._stats["prefill_tokens"] += stats[
-                                "prefill_tokens"]
-                            self._stats["decode_tokens"] += stats[
-                                "decode_tokens"]
-                            self._stats["requests"] += len(job.requests)
-                            self._stats["groups"] += 1
-                            self._stats["groups_per_replica"][idx] += 1
-                            self._stats["busy_s"] += stats["wall_s"]
-                    results = job.requests
-                for r, fut in zip(results, job.futures):
-                    # a caller may have cancelled one future of the
-                    # group while it was queued; the batch still ran, so
-                    # deliver the others instead of poisoning them with
-                    # the cancelled one's InvalidStateError.
-                    try:
-                        fut.set_result(r)
-                    except InvalidStateError:
-                        pass
-            except BaseException as e:          # propagate into the futures
+                self._run_job(idx, job)
+            except BaseException as e:
+                # defensive: _run_job owns failure handling; anything
+                # escaping it (a bug in the failover path itself) must
+                # not strand the futures.
                 delivered = False
                 for fut in job.futures:
                     if not fut.done():
                         fut.set_exception(e)
                         delivered = True
                 if not delivered:
-                    # every future already done (e.g. all cancelled while
-                    # queued): nobody is listening, but an engine failure
-                    # must not vanish silently.
                     import traceback
-                    print(f"replica-serve-{idx}: engine failure with no "
-                          f"live futures to notify:", file=sys.stderr)
+                    print(f"replica-serve-{idx}: failure with no live "
+                          f"futures to notify:", file=sys.stderr)
                     traceback.print_exception(type(e), e, e.__traceback__)
             finally:
                 with self._lock:
                     self._inflight[idx] -= 1
                 q.task_done()
 
+    @staticmethod
+    def _deliver(job: _Job, results):
+        for r, fut in zip(results, job.futures):
+            # a caller may have cancelled one future of the group while
+            # it was queued; the batch still ran, so deliver the others
+            # instead of poisoning them with the cancelled one's
+            # InvalidStateError.
+            try:
+                fut.set_result(r)
+            except InvalidStateError:
+                pass
+
+    @staticmethod
+    def _reset_requests(requests: List[Request]):
+        """Roll a group back to its as-submitted state before a re-run.
+
+        A fault can land mid-decode, leaving partial ``out_tokens``;
+        since engines are deterministic, a clean re-run of the *same*
+        group reproduces every token bitwise — which is only true if the
+        re-run starts from the same blank state the first run saw.
+        """
+        for r in requests:
+            r.out_tokens.clear()
+            r.done = False
+
+    def _log_event(self, event: str, idx: int, **fields):
+        rec = {"event": event, "replica": idx, "t": time.time(), **fields}
+        with self._lock:
+            self._events.append(rec)
+
+    def _run_job(self, idx: int, job: _Job):
+        engine = self.engines[idx]
+        if job.warmup is not None:
+            buckets, max_new, seed = job.warmup
+            engine.warmup(buckets, max_new=max_new, seed=seed)
+            self._deliver(job, [None] * len(job.futures))
+            return
+        attempts = 0
+        while True:
+            bound = (self._injector.bind(idx)
+                     if self._injector is not None else None)
+            try:
+                stats = engine.run(job.requests, injector=bound,
+                                   deadline_s=self._deadline_s)
+            except BaseException as err:
+                attempts += 1
+                self._reset_requests(job.requests)
+                poisoned = (err.device_ids
+                            if isinstance(err, PoisonedDeviceError) else ())
+                retryable = attempts <= self._max_retries and not poisoned
+                with self._lock:
+                    self.health[idx].record_failure(err)
+                    if retryable:
+                        self._stats["retries"] += 1
+                self._log_event(
+                    "fault", idx, attempt=attempts, retrying=retryable,
+                    error=f"{type(err).__name__}: {err}")
+                if retryable:
+                    time.sleep(backoff_delay(attempts,
+                                             seed=self._seed + idx,
+                                             **self._backoff))
+                    continue
+                self._fail_replica(idx, job, err, poisoned)
+                return
+            with self._lock:
+                self.health[idx].record_success(stats["wall_s"])
+                if job.counted:
+                    self._stats["prefill_tokens"] += stats["prefill_tokens"]
+                    self._stats["decode_tokens"] += stats["decode_tokens"]
+                    self._stats["requests"] += len(job.requests)
+                    self._stats["groups"] += 1
+                    self._stats["groups_per_replica"][idx] += 1
+                    self._stats["busy_s"] += stats["wall_s"]
+            self._deliver(job, job.requests)
+            return
+
+    # -- supervisor: drain, requeue, rebuild -------------------------------
+
+    def _fail_replica(self, idx: int, job: _Job, err: BaseException,
+                      poisoned=()):
+        """Retries exhausted (or the device set is poisoned): fail over.
+
+        Runs on the failing replica's own worker thread. Marks the
+        replica ``rebuilding`` (the schedulers stop routing to it),
+        drains its queue, requeues the queued + in-flight requests onto
+        surviving replicas — whole groups, composition untouched, so the
+        deterministic engines reproduce their logits bitwise — and then
+        rebuilds a replacement engine on the healthy device subset. With
+        no survivors, requests are held and dispatched to the rebuilt
+        replica itself; only if the rebuild also fails do their futures
+        carry the error.
+        """
+        t_detect = time.time()
+        with self._lock:
+            self.health[idx].force("rebuilding")
+            self._stats["failovers"] += 1
+        # drain: everything still queued behind the failed in-flight job
+        q = self._queues[idx]
+        drained, saw_sentinel = [job], False
+        n_popped = 0
+        while True:
+            try:
+                j = q.get_nowait()
+            except queue.Empty:
+                break
+            n_popped += 1
+            if j is None:        # close() sentinel: re-posted after rebuild
+                saw_sentinel = True
+                continue
+            drained.append(j)
+        requeue: List[_Job] = []
+        for j in drained:
+            if j.warmup is not None:   # warmup is best-effort; don't requeue
+                self._deliver(j, [None] * len(j.futures))
+                continue
+            self._reset_requests(j.requests)
+            requeue.append(j)
+        n_requests = sum(len(j.requests) for j in requeue)
+        with self._lock:
+            self._inflight[idx] -= n_popped
+            self._stats["requeued_requests"] += n_requests
+            survivors = [i for i in range(len(self.engines))
+                         if i != idx and self.health[i].schedulable()]
+            if survivors:
+                for j in requeue:
+                    self._dispatch_locked(j)
+                held = []
+            else:
+                held = requeue
+        # the popped jobs were counted by their original put(); balance
+        # the queue's join() accounting now that they live elsewhere.
+        for _ in range(n_popped):
+            q.task_done()
+        self._log_event("drain_requeue", idx, requests=n_requests,
+                        queued_jobs=len(drained) - 1,
+                        survivors=len(survivors),
+                        error=f"{type(err).__name__}: {err}")
+        ok = self._rebuild_replica(idx, exclude=poisoned, t_detect=t_detect)
+        if held:
+            if ok:
+                with self._lock:
+                    for j in held:
+                        self._dispatch_locked(j, idx=idx)
+            else:
+                for j in held:
+                    for fut in j.futures:
+                        if not fut.done():
+                            fut.set_exception(err)
+        if saw_sentinel:
+            q.put(None)
+
+    def _rebuild_replica(self, idx: int, exclude=(), *,
+                         t_detect: float) -> bool:
+        """Build a replacement engine on the replica's healthy devices.
+
+        Re-meshes around the exclusion set
+        (:func:`repro.runtime.elastic.replacement_mesh` keeps the model
+        axis width) and constructs the engine from a *transfer* of a
+        surviving engine's prepared planes (:func:`transfer_tree`) — a
+        pure ``device_put``, no re-quantization, so
+        ``quant.PREP_STATS`` stays flat across recovery and the
+        replacement serves bit-identical logits by construction. Replays
+        the driver's last warmup plan so the replica rejoins at full
+        speed. Returns False (replica ``dead``) when fewer than
+        model-axis-width healthy devices remain.
+        """
+        try:
+            mesh = replacement_mesh(self.meshes[idx], exclude=exclude)
+            with self._lock:
+                donors = [i for i in range(len(self.engines))
+                          if i != idx and self.health[i].schedulable()]
+            donor = self.engines[donors[0]] if donors else self.engines[idx]
+            engine = make_engine(
+                self.cfg, mesh, params=transfer_tree(donor.params, mesh),
+                dims=donor.dims, calibration=self._calibration,
+                **self._engine_kwargs)
+            if self._warmup_plan is not None:
+                buckets, max_new, seed = self._warmup_plan
+                engine.warmup(buckets, max_new=max_new, seed=seed)
+        except Exception as e:
+            with self._lock:
+                self.health[idx].force("dead")
+            self._log_event("replica_dead", idx,
+                            reason=f"{type(e).__name__}: {e}")
+            return False
+        self.engines[idx] = engine
+        self.meshes[idx] = mesh
+        with self._lock:
+            self.health[idx].reset()
+            self._stats["rebuilds"] += 1
+        self._log_event("rebuilt", idx, excluded=list(exclude),
+                        devices=len(list(mesh.devices.flat)),
+                        recovery_s=time.time() - t_detect)
+        return True
+
     # -- dispatch ----------------------------------------------------------
 
+    def _schedulable_locked(self) -> List[int]:
+        return [i for i in range(len(self._queues))
+                if self.health[i].schedulable()]
+
     def _pick_replica_locked(self) -> int:
+        live = self._schedulable_locked()
+        if not live:
+            raise RuntimeError("no schedulable replicas (all unhealthy or "
+                               "rebuilding; see driver.stats()['health'])")
         if self.scheduler == "least_loaded":
-            return min(range(len(self._queues)),
-                       key=lambda i: self._inflight[i])
-        idx = self._rr
-        self._rr = (self._rr + 1) % len(self._queues)
-        return idx
+            return min(live, key=lambda i: (
+                self._inflight[i], self.health[i].state != "healthy", i))
+        for _ in range(len(self._queues)):
+            idx = self._rr
+            self._rr = (self._rr + 1) % len(self._queues)
+            if idx in live:
+                return idx
+        return live[0]
 
     def _dispatch_locked(self, job: _Job, idx: Optional[int] = None):
         if self._closed:
@@ -298,10 +536,21 @@ class ReplicaServeDriver:
             self._flush_locked()
 
     def drain(self):
-        """Flush and block until every dispatched request has completed."""
+        """Flush and block until every dispatched request has completed.
+
+        Failover can move work between queues mid-drain (a failed
+        replica's jobs requeue onto survivors — possibly onto a queue
+        already joined this pass), so the join loops until a full pass
+        finds every queue empty and nothing in flight.
+        """
         self.flush()
-        for q in self._queues:
-            q.join()
+        while True:
+            for q in self._queues:
+                q.join()
+            with self._lock:
+                busy = any(self._inflight) or bool(self._pending)
+            if not busy:
+                return
 
     def warmup(self, prompt_len: Optional[int] = None, max_new: int = 1, *,
                plen_buckets: Optional[Sequence[int]] = None, seed: int = 0):
@@ -330,9 +579,14 @@ class ReplicaServeDriver:
                              "plen_buckets")
         buckets = tuple(sorted({int(b) for b in (
             plen_buckets if plen_buckets is not None else [prompt_len])}))
+        # remember the plan: a rebuilt replacement engine replays it
+        # before rejoining the fleet (docs/replica_serving.md).
+        self._warmup_plan = (buckets, max_new, seed)
         futs: List[Future] = []
         with self._lock:
             for idx in range(self.replicas):
+                if self.health[idx].state == "dead":
+                    continue      # nobody will ever consume its queue
                 fut: Future = Future()
                 futs.append(fut)
                 self._dispatch_locked(
@@ -358,7 +612,20 @@ class ReplicaServeDriver:
         return table
 
     _COUNTERS = ("prefill_tokens", "decode_tokens", "requests", "groups",
-                 "busy_s")
+                 "busy_s", "retries", "failovers", "requeued_requests",
+                 "rebuilds")
+
+    def events(self) -> List[Dict[str, Any]]:
+        """Structured fault/recovery event log (chronological).
+
+        Each entry carries ``event`` (``"fault"``, ``"drain_requeue"``,
+        ``"rebuilt"``, ``"replica_dead"``), ``replica``, a ``t``
+        timestamp, and event-specific fields (``recovery_s`` on
+        ``"rebuilt"`` — the detect-to-serving latency the ``failover``
+        benchmark reports).
+        """
+        with self._lock:
+            return [dict(e) for e in self._events]
 
     def run(self, requests: Sequence[Request]) -> Dict[str, Any]:
         """Synchronous convenience mirroring ``ServeEngine.run``: submit
@@ -405,6 +672,7 @@ class ReplicaServeDriver:
             out = dict(self._stats,
                        groups_per_replica=list(
                            self._stats["groups_per_replica"]))
+            out["health"] = [h.snapshot() for h in self.health]
             t0 = self._t0
         out["replicas"] = self.replicas
         out["scheduler"] = self.scheduler

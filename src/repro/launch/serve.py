@@ -303,14 +303,53 @@ class ServeEngine:
             self.apply_calibration(table)
         return table
 
-    def run(self, requests: List[Request]) -> Dict[str, Any]:
-        """Serve a list of requests in fixed-size batches."""
+    def run(self, requests: List[Request], *, injector=None,
+            deadline_s: Optional[float] = None,
+            should_abort=None) -> Dict[str, Any]:
+        """Serve a list of requests in fixed-size batches.
+
+        The keyword-only arguments are the fault-tolerance seam the
+        replica fleet threads through (``repro.runtime.fault_tolerance``,
+        docs/replica_serving.md):
+
+        * ``injector`` — a bound :class:`~repro.runtime.fault_tolerance.
+          FaultInjector` view; its ``before_group()`` hook runs as each
+          request group starts and ``on_decode(step)`` before each decode
+          step, so chaos tests can raise / hang / poison at a
+          deterministic point in the stream.
+        * ``deadline_s`` — per-group watchdog: if a group (prefill +
+          decode) exceeds this wall-clock budget, the engine raises
+          :class:`~repro.runtime.fault_tolerance.DeadlineExceeded` at the
+          next step boundary (cooperative — it catches hangs that
+          surface between device calls, e.g. an injected straggler).
+        * ``should_abort`` — callable polled at the same boundaries; a
+          True return raises ``DeadlineExceeded`` (the supervisor's
+          abort path for draining a replica that is being retired).
+
+        On any raise the engine itself stays serviceable (per-group
+        state — batch, cache — is rebuilt from scratch each group), but
+        the current group's requests may hold partial ``out_tokens``;
+        the caller owns resetting them before a re-run.
+        """
+        from repro.runtime.fault_tolerance import DeadlineExceeded
         t_start = time.time()
         n_prefill_tokens = 0
         n_decode_tokens = 0
         for i in range(0, len(requests), self.batch):
             group = requests[i:i + self.batch]
-            pad = self.batch - len(group)
+            t_group = time.time()
+
+            def _watchdog():
+                if should_abort is not None and should_abort():
+                    raise DeadlineExceeded("aborted by supervisor")
+                if (deadline_s is not None
+                        and time.time() - t_group > deadline_s):
+                    raise DeadlineExceeded(
+                        f"group exceeded deadline_s={deadline_s}")
+
+            if injector is not None:
+                injector.before_group()
+            _watchdog()
             plen = max(len(r.prompt) for r in group)
             toks = np.zeros((self.batch, plen), np.int32)
             for j, r in enumerate(group):
@@ -320,9 +359,13 @@ class ServeEngine:
             with use_rules(self.rules):
                 logits, cache = self._prefill(self.params, batch, cache)
                 n_prefill_tokens += plen * len(group)
+                _watchdog()
                 cur = jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
                 max_new = max(r.max_new_tokens for r in group)
-                for _ in range(max_new):
+                for step in range(max_new):
+                    if injector is not None:
+                        injector.on_decode(step + 1)
+                    _watchdog()
                     for j, r in enumerate(group):
                         if not r.done and len(r.out_tokens) < r.max_new_tokens:
                             tok = int(cur[j, 0])

@@ -71,14 +71,40 @@ def save(directory: str, step: int, tree, extra: Optional[Dict] = None,
     for key, leaf in flat.items():
         arr = np.asarray(leaf)
         fn = _fname(key)
-        np.save(os.path.join(tmp, fn), arr)
+        with open(os.path.join(tmp, fn), "wb") as f:
+            np.save(f, arr)
+            f.flush()
+            os.fsync(f.fileno())
         manifest["keys"][key] = {"file": fn, "shape": list(arr.shape),
                                  "dtype": str(arr.dtype)}
     with open(os.path.join(tmp, _MANIFEST), "w") as f:
         json.dump(manifest, f)
+        f.flush()
+        os.fsync(f.fileno())
     os.replace(tmp, final)  # atomic publish
+    _fsync_dir(directory)   # make the rename itself durable
     _prune(directory, keep)
     return final
+
+
+def _fsync_dir(directory: str):
+    """fsync the directory entry so the atomic rename is crash-durable.
+
+    Without it a power loss can roll back the ``os.replace`` even though
+    the leaf files themselves were fsynced — the classic
+    rename-without-dir-sync hole. Best-effort on platforms where
+    directories cannot be opened for sync.
+    """
+    try:
+        fd = os.open(directory, os.O_RDONLY)
+    except OSError:
+        return
+    try:
+        os.fsync(fd)
+    except OSError:
+        pass
+    finally:
+        os.close(fd)
 
 
 def latest_step(directory: str) -> Optional[int]:

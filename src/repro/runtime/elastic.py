@@ -14,9 +14,11 @@ from __future__ import annotations
 from typing import Optional, Sequence, Tuple
 
 import jax
+import numpy as np
 from jax.sharding import Mesh
 
-__all__ = ["plan_mesh", "make_elastic_mesh", "reshard"]
+__all__ = ["plan_mesh", "make_elastic_mesh", "reshard",
+           "replacement_mesh"]
 
 
 def plan_mesh(n_devices: int, model_parallel: int,
@@ -49,9 +51,42 @@ def make_elastic_mesh(model_parallel: int,
     n = 1
     for s in shape:
         n *= s
-    import numpy as np
     dev_array = np.array(healthy[:n]).reshape(shape)
     return Mesh(dev_array, axes)
+
+
+def replacement_mesh(mesh: Mesh, exclude: Sequence[int] = (),
+                     model_parallel: Optional[int] = None) -> Mesh:
+    """Largest healthy mesh rebuilt from a failed mesh's own devices.
+
+    The replica-fleet supervisor's re-mesh step: keep the model
+    (tensor-parallel) axis width — TP degree is baked into kernel-level
+    shapes and layer divisibility — drop the excluded (poisoned) device
+    ids, and shrink the data axis to the largest **divisor of the
+    original data width** that fits the survivors (excess devices idle).
+    The divisor constraint is what lets the supervisor ``device_put``
+    existing prepared planes straight onto the replacement: any array
+    dimension the old data axis sharded is divisible by the old width,
+    hence by every divisor of it — an arbitrary smaller width (say 3
+    survivors of 4) would reject the transfer. Raises ``ValueError``
+    when fewer than ``model_parallel`` healthy devices remain (the
+    replica is dead; its traffic stays redistributed to the surviving
+    replicas).
+    """
+    mp = (model_parallel if model_parallel is not None
+          else dict(mesh.shape).get("model", 1))
+    bad = set(exclude)
+    devs = [d for d in mesh.devices.flat if d.id not in bad]
+    if len(devs) < mp:
+        raise ValueError(
+            f"only {len(devs)} healthy devices remain; need at least "
+            f"model_parallel={mp}")
+    old_data = dict(mesh.shape).get("data", 1)
+    data = max(len(devs) // mp, 1)
+    while old_data % data:
+        data -= 1
+    grid = np.asarray(devs[:data * mp], dtype=object).reshape(data, mp)
+    return Mesh(grid, ("data", "model"))
 
 
 def reshard(tree, shardings):

@@ -1,50 +1,396 @@
-"""Fault tolerance: preemption handling, retry-with-restore, stragglers.
+"""Fault tolerance: injection, detection, backoff, and health tracking.
 
-The contract for thousands-of-nodes operation:
+This module is the substrate of the self-healing replica fleet
+(:mod:`repro.launch.replica`) and the training recovery loop:
 
+* **Fault injection** — :class:`FaultInjector` drives deterministic,
+  seed-addressed faults (raise-on-Nth-group, hang-past-deadline,
+  poisoned device) through the seam :meth:`ServeEngine.run
+  <repro.launch.serve.ServeEngine.run>` exposes. Chaos tests
+  (``tests/test_failover.py``) and the ``failover`` benchmark use it to
+  prove the headline invariant: kill a replica mid-drain, zero requests
+  dropped, every requeued request's logits **bitwise identical** to the
+  fault-free run.
+* **Backoff** — :func:`backoff_delay` computes capped exponential
+  backoff with *deterministic* jitter (seeded, so retry schedules are
+  reproducible across runs and distinct across replicas). Both the
+  replica worker retry path and :func:`run_with_recovery` use it.
+* **Health** — :class:`ReplicaHealth` keeps a per-replica latency EMA
+  (the :class:`StragglerMonitor` idiom moved to replica granularity)
+  plus consecutive-failure tracking, and derives the health state the
+  driver's scheduler and supervisor act on:
+  ``healthy -> suspect -> unhealthy`` from failures, with the overlay
+  states ``rebuilding`` / ``dead`` forced by the supervisor during
+  recovery.
 * **Preemption** (SIGTERM from the scheduler): finish the current step,
   write a final checkpoint, exit cleanly. ``PreemptionHandler`` exposes a
-  ``should_stop`` flag the train loop polls once per step.
-* **Crash recovery**: ``run_with_recovery`` wraps the train loop; on an
+  ``should_stop`` flag the loop polls once per step. Signal handlers can
+  only be installed from the main thread — constructed anywhere else
+  (e.g. a replica worker thread) the handler degrades to an explicit
+  no-op with a warning instead of raising.
+* **Crash recovery**: ``run_with_recovery`` wraps a run loop; on an
   exception it restores from the latest checkpoint and replays, up to
-  ``max_restarts`` (backed by the atomic checkpoints — a mid-save crash
-  can never corrupt the restore point).
-* **Stragglers**: ``StragglerMonitor`` keeps a per-host EMA of step times;
-  hosts slower than ``threshold`` x the median are flagged. On a
-  single-controller SPMD system you cannot drop a host mid-step, so the
-  mitigation is a *grace restart*: checkpoint, remove the host from the
-  device set, re-mesh (runtime/elastic.py) and resume — the monitor's
-  ``plan()`` returns exactly that recommendation. The detection logic is
-  unit-tested with simulated timing traces.
+  ``max_restarts``, sleeping a capped-exponential backoff between
+  attempts and emitting one structured log line per attempt (backed by
+  the atomic checkpoints — a mid-save crash can never corrupt the
+  restore point; ``runtime/checkpoint.py``).
+* **Stragglers**: ``StragglerMonitor`` keeps a per-host EMA of step
+  times; hosts slower than ``threshold`` x the median are flagged for a
+  grace restart (checkpoint, drop the host, re-mesh via
+  ``runtime/elastic.py``, resume).
 """
 
 from __future__ import annotations
 
 import dataclasses
+import json
 import signal
+import sys
+import threading
 import time
-from typing import Callable, Dict, List, Optional
+import warnings
+from typing import Callable, Dict, List, Optional, Tuple
 
 import numpy as np
 
-__all__ = ["PreemptionHandler", "StragglerMonitor", "run_with_recovery"]
+__all__ = [
+    "PreemptionHandler", "StragglerMonitor", "run_with_recovery",
+    "backoff_delay", "ReplicaHealth", "FaultSpec", "FaultInjector",
+    "InjectedFault", "PoisonedDeviceError", "DeadlineExceeded",
+]
+
+
+# ---------------------------------------------------------------------------
+# fault exceptions
+# ---------------------------------------------------------------------------
+
+
+class InjectedFault(RuntimeError):
+    """A deterministic fault raised by :class:`FaultInjector`."""
+
+
+class PoisonedDeviceError(InjectedFault):
+    """An injected device failure: the listed device ids are unusable.
+
+    The replica supervisor treats this as non-retryable on the same
+    device set — it excludes ``device_ids`` and rebuilds the replica on
+    the remaining healthy devices
+    (:func:`repro.runtime.elastic.replacement_mesh`).
+    """
+
+    def __init__(self, device_ids: Tuple[int, ...], msg: str = ""):
+        super().__init__(msg or f"poisoned devices: {tuple(device_ids)}")
+        self.device_ids = tuple(device_ids)
+
+
+class DeadlineExceeded(RuntimeError):
+    """The per-group watchdog deadline (or a supervisor abort) fired."""
+
+
+# ---------------------------------------------------------------------------
+# deterministic capped exponential backoff
+# ---------------------------------------------------------------------------
+
+
+def backoff_delay(attempt: int, *, base_s: float = 0.05,
+                  cap_s: float = 2.0, factor: float = 2.0,
+                  jitter: float = 0.25, seed: int = 0) -> float:
+    """Capped exponential backoff with deterministic jitter.
+
+    ``attempt`` is 1-based: delay ``base_s * factor**(attempt-1)``,
+    capped at ``cap_s``, then scaled by a jitter factor in
+    ``[1 - jitter, 1 + jitter]`` drawn from an rng seeded on
+    ``(seed, attempt)`` — the schedule is reproducible for a given seed
+    (pass a per-replica seed to de-synchronize replicas without losing
+    determinism). ``base_s <= 0`` disables the delay entirely.
+    """
+    if base_s <= 0:
+        return 0.0
+    delay = min(cap_s, base_s * factor ** (max(int(attempt), 1) - 1))
+    if jitter:
+        u = float(np.random.default_rng(
+            [abs(int(seed)), max(int(attempt), 1)]).uniform(-1.0, 1.0))
+        delay *= 1.0 + jitter * u
+    return float(min(delay, cap_s))
+
+
+# ---------------------------------------------------------------------------
+# deterministic fault injection
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultSpec:
+    """One deterministic fault to inject into the serving stack.
+
+    Fires on the ``group``-th request-group *execution* on replica
+    ``replica`` (0-based; retried executions of the same group count, so
+    ``count > max_retries`` exhausts the worker's retry budget and
+    forces a failover). Kinds:
+
+    * ``"raise"`` — raise :class:`InjectedFault` (a transient worker
+      crash; retryable on the same replica).
+    * ``"hang"`` — sleep ``hang_s`` inside the group (a straggler /
+      hung collective; the engine's watchdog then raises
+      :class:`DeadlineExceeded` once past ``deadline_s``).
+    * ``"poison"`` — raise :class:`PoisonedDeviceError` naming
+      ``device_ids`` (a dead chip; non-retryable — the supervisor must
+      re-mesh around the exclusion set).
+    """
+
+    kind: str                              # "raise" | "hang" | "poison"
+    replica: int = 0                       # -1 = any replica
+    group: int = 0                         # Nth group execution (0-based)
+    count: int = 1                         # consecutive executions hit
+    after_decode_steps: int = 0            # 0 = at group start
+    hang_s: float = 0.25
+    device_ids: Tuple[int, ...] = ()
+    probability: float = 1.0               # seed-decided when < 1
+
+    def __post_init__(self):
+        if self.kind not in ("raise", "hang", "poison"):
+            raise ValueError(f"unknown fault kind {self.kind!r}")
+        if self.kind == "poison" and not self.device_ids:
+            raise ValueError("poison fault needs device_ids")
+
+
+class FaultInjector:
+    """Deterministic, seed-driven fault injection for the replica fleet.
+
+    Thread-safe; one injector serves every replica. The driver binds a
+    per-replica view (:meth:`bind`) and threads it into
+    :meth:`ServeEngine.run <repro.launch.serve.ServeEngine.run>`, which
+    calls ``before_group()`` as each request group starts and
+    ``on_decode(step)`` before each decode step. Group indices count
+    *executions* per replica (retries increment them), so a spec with
+    ``count=k`` fails k consecutive attempts — the lever chaos tests use
+    to push a replica from transient fault to failover.
+
+    Every decision is deterministic: specs address (replica, group)
+    directly, and sub-1 ``probability`` specs are decided by an rng
+    seeded on ``(seed, replica, group)`` — the same seed always injects
+    the same faults. :meth:`fired` returns the structured log of every
+    injected event.
+    """
+
+    def __init__(self, specs=(), seed: int = 0):
+        self.specs = tuple(specs)
+        self.seed = int(seed)
+        self._lock = threading.Lock()
+        self._exec: Dict[int, int] = {}     # replica -> groups started
+        self._fired: List[dict] = []
+
+    def bind(self, replica: int) -> "_ReplicaInjector":
+        """A per-replica handle for one ``ServeEngine.run`` call."""
+        return _ReplicaInjector(self, int(replica))
+
+    def fired(self) -> List[dict]:
+        """Structured log of injected events (kind/replica/group/step/t)."""
+        with self._lock:
+            return [dict(e) for e in self._fired]
+
+    # -- internal ----------------------------------------------------------
+
+    def _begin_group(self, replica: int) -> int:
+        with self._lock:
+            g = self._exec.get(replica, 0)
+            self._exec[replica] = g + 1
+        return g
+
+    def _matches(self, replica: int, group: int, step: int):
+        out = []
+        for spec in self.specs:
+            if spec.replica not in (-1, replica):
+                continue
+            if not (spec.group <= group < spec.group + spec.count):
+                continue
+            if spec.after_decode_steps != step:
+                continue
+            if spec.probability < 1.0:
+                u = float(np.random.default_rng(
+                    [self.seed, replica + 1, group + 1]).random())
+                if u >= spec.probability:
+                    continue
+            out.append(spec)
+        return out
+
+    def _fire(self, replica: int, group: int, step: int):
+        for spec in self._matches(replica, group, step):
+            with self._lock:
+                self._fired.append({
+                    "kind": spec.kind, "replica": replica, "group": group,
+                    "step": step, "t": time.time()})
+            if spec.kind == "hang":
+                time.sleep(spec.hang_s)
+            elif spec.kind == "poison":
+                raise PoisonedDeviceError(
+                    spec.device_ids,
+                    f"injected poisoned devices {spec.device_ids} on "
+                    f"replica {replica} group {group}")
+            else:
+                raise InjectedFault(
+                    f"injected fault on replica {replica} group {group}"
+                    + (f" decode step {step}" if step else ""))
+
+
+class _ReplicaInjector:
+    """The bound view ``ServeEngine.run`` calls into (one replica)."""
+
+    def __init__(self, parent: FaultInjector, replica: int):
+        self._parent = parent
+        self._replica = replica
+        self._group: Optional[int] = None
+
+    def before_group(self):
+        self._group = self._parent._begin_group(self._replica)
+        self._parent._fire(self._replica, self._group, 0)
+
+    def on_decode(self, step: int):
+        if self._group is not None and step > 0:
+            self._parent._fire(self._replica, self._group, step)
+
+
+# ---------------------------------------------------------------------------
+# replica-level health (the StragglerMonitor EMA, per replica)
+# ---------------------------------------------------------------------------
+
+
+class ReplicaHealth:
+    """Per-replica health: group-latency EMA + consecutive-failure state.
+
+    States derived from consecutive failures — ``"healthy"`` (none),
+    ``"suspect"`` (some, below ``unhealthy_after``), ``"unhealthy"``
+    (at/above it) — plus two supervisor-forced overlay states:
+    ``"rebuilding"`` while a replacement engine is under construction
+    and ``"dead"`` when no healthy device set remains. The scheduler
+    dispatches only to ``healthy``/``suspect`` replicas
+    (:meth:`schedulable`), preferring ``healthy`` under
+    ``least_loaded``.
+
+    The latency EMA absorbs :class:`StragglerMonitor` at replica
+    granularity: :meth:`is_straggler` flags a replica whose smoothed
+    group latency exceeds ``straggler_ratio`` x a fleet reference (the
+    median of the other replicas' EMAs).
+    """
+
+    def __init__(self, ema: float = 0.8, unhealthy_after: int = 3,
+                 straggler_ratio: float = 3.0):
+        self.ema = float(ema)
+        self.unhealthy_after = int(unhealthy_after)
+        self.straggler_ratio = float(straggler_ratio)
+        self.latency_ema: Optional[float] = None
+        self.successes = 0
+        self.failures = 0
+        self.consecutive_failures = 0
+        self.last_error: Optional[str] = None
+        self._forced: Optional[str] = None
+
+    @property
+    def state(self) -> str:
+        if self._forced is not None:
+            return self._forced
+        if self.consecutive_failures >= self.unhealthy_after:
+            return "unhealthy"
+        if self.consecutive_failures > 0:
+            return "suspect"
+        return "healthy"
+
+    def schedulable(self) -> bool:
+        return self.state in ("healthy", "suspect")
+
+    def record_success(self, latency_s: float):
+        self.successes += 1
+        self.consecutive_failures = 0
+        if self.latency_ema is None:
+            self.latency_ema = float(latency_s)
+        else:
+            self.latency_ema = (self.ema * self.latency_ema
+                                + (1.0 - self.ema) * float(latency_s))
+
+    def record_failure(self, err: Optional[BaseException] = None):
+        self.failures += 1
+        self.consecutive_failures += 1
+        if err is not None:
+            self.last_error = f"{type(err).__name__}: {err}"
+
+    def force(self, state: str):
+        """Supervisor overlay: ``"rebuilding"`` / ``"dead"`` (or None)."""
+        if state not in (None, "rebuilding", "dead"):
+            raise ValueError(f"cannot force state {state!r}")
+        self._forced = state
+
+    def reset(self):
+        """Replacement engine online: clear failures and overlays."""
+        self._forced = None
+        self.consecutive_failures = 0
+        self.latency_ema = None
+
+    def is_straggler(self, reference_s: Optional[float]) -> bool:
+        return (self.latency_ema is not None and reference_s is not None
+                and reference_s > 0
+                and self.latency_ema > self.straggler_ratio * reference_s)
+
+    def snapshot(self) -> dict:
+        return {"state": self.state, "latency_ema_s": self.latency_ema,
+                "successes": self.successes, "failures": self.failures,
+                "consecutive_failures": self.consecutive_failures,
+                "last_error": self.last_error}
+
+
+# ---------------------------------------------------------------------------
+# preemption
+# ---------------------------------------------------------------------------
 
 
 class PreemptionHandler:
-    """Installs SIGTERM/SIGINT handlers that request a graceful stop."""
+    """Installs SIGTERM/SIGINT handlers that request a graceful stop.
+
+    ``signal.signal`` raises ``ValueError`` off the main thread (the
+    replica driver's workers are threads), so construction elsewhere
+    degrades to a warned no-op: ``should_stop`` stays poll-able (always
+    False unless :meth:`request_stop` is called) and :meth:`restore`
+    does nothing. Usable as a context manager — ``__exit__`` restores
+    the previous handlers.
+    """
 
     def __init__(self, signals=(signal.SIGTERM,)):
         self.should_stop = False
         self._prev = {}
+        self.installed = (threading.current_thread()
+                          is threading.main_thread())
+        if not self.installed:
+            warnings.warn(
+                "PreemptionHandler: signal handlers can only be installed "
+                "from the main thread; running as a no-op (should_stop "
+                "stays False unless request_stop() is called)",
+                RuntimeWarning, stacklevel=2)
+            return
         for sig in signals:
             self._prev[sig] = signal.signal(sig, self._handler)
 
     def _handler(self, signum, frame):
         self.should_stop = True
 
+    def request_stop(self):
+        """Programmatic stop request (the signal-free path)."""
+        self.should_stop = True
+
     def restore(self):
         for sig, prev in self._prev.items():
             signal.signal(sig, prev)
+        self._prev = {}
+
+    def __enter__(self) -> "PreemptionHandler":
+        return self
+
+    def __exit__(self, *exc):
+        self.restore()
+        return False
+
+
+# ---------------------------------------------------------------------------
+# stragglers (per-host; the per-replica version is ReplicaHealth)
+# ---------------------------------------------------------------------------
 
 
 @dataclasses.dataclass
@@ -88,25 +434,52 @@ class StragglerMonitor:
                                action=action)
 
 
+# ---------------------------------------------------------------------------
+# crash recovery
+# ---------------------------------------------------------------------------
+
+
 def run_with_recovery(run_fn: Callable[[Optional[int]], int],
                       restore_step_fn: Callable[[], Optional[int]],
                       max_restarts: int = 3,
-                      backoff_s: float = 0.0) -> int:
+                      backoff_s: float = 0.0, *,
+                      backoff_cap_s: float = 30.0,
+                      jitter: float = 0.25,
+                      seed: int = 0,
+                      on_attempt: Optional[Callable[[dict], None]] = None
+                      ) -> int:
     """Run ``run_fn(resume_step)`` to completion with restore-on-crash.
 
     ``run_fn`` returns the final step; ``restore_step_fn`` returns the
-    latest durable checkpoint step (or None). Re-raises after the restart
-    budget is exhausted.
+    latest durable checkpoint step (or None). Re-raises after the
+    restart budget is exhausted. Between attempts it sleeps a capped
+    exponential backoff with deterministic jitter
+    (:func:`backoff_delay`; ``backoff_s`` is the base, 0 disables the
+    sleep) and emits one structured JSON log line per restart to stderr
+    — ``{"event": "recovery_restart", "attempt": ..., "resume_step":
+    ..., "error": ..., "backoff_s": ...}`` — also passed to
+    ``on_attempt`` when given.
     """
     attempts = 0
     while True:
+        resume = restore_step_fn()
         try:
-            return run_fn(restore_step_fn())
+            return run_fn(resume)
         except KeyboardInterrupt:
             raise
-        except Exception:
+        except Exception as e:
             attempts += 1
             if attempts > max_restarts:
                 raise
-            if backoff_s:
-                time.sleep(backoff_s)
+            delay = backoff_delay(attempts, base_s=backoff_s,
+                                  cap_s=backoff_cap_s, jitter=jitter,
+                                  seed=seed)
+            event = {"event": "recovery_restart", "attempt": attempts,
+                     "max_restarts": max_restarts, "resume_step": resume,
+                     "error": f"{type(e).__name__}: {e}",
+                     "backoff_s": round(delay, 6)}
+            print(json.dumps(event), file=sys.stderr, flush=True)
+            if on_attempt is not None:
+                on_attempt(event)
+            if delay:
+                time.sleep(delay)

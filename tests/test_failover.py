@@ -1,0 +1,509 @@
+"""Self-healing replica fleet (ISSUE-6): fault injection, retry,
+drain-and-requeue failover, bit-identical recovery.
+
+The headline invariant: kill a replica mid-drain and (a) zero requests
+are dropped, (b) every requeued request's tokens/logits are **bitwise
+identical** to the fault-free single-engine run (deterministic engines
+make failover an equality assert, not a tolerance argument), and (c)
+``quant.PREP_STATS`` stays flat across the rebuild (the replacement
+engine is a ``transfer_tree`` placement, never a re-quantization).
+
+Multi-device behaviour runs in subprocesses with forced host devices
+(the main pytest process sees exactly 1 device); the kill-mid-drain
+test is additionally marked ``multidevice`` for the forced-8-device
+chaos shard in scripts/ci.sh.
+"""
+
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+
+_SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+def _run(code: str, devices: int = 8, timeout: int = 600):
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
+    env["PYTHONPATH"] = _SRC + os.pathsep + env.get("PYTHONPATH", "")
+    out = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                         capture_output=True, text=True, timeout=timeout,
+                         env=env)
+    assert out.returncode == 0, out.stderr[-4000:]
+    return out.stdout
+
+
+_SETUP = """
+    import dataclasses, json
+    import jax, jax.numpy as jnp, numpy as np
+    from repro.configs import reduced_config
+    from repro.launch.mesh import make_mesh
+    from repro.launch.replica import ReplicaServeDriver
+    from repro.launch.serve import Request, ServeEngine
+    from repro.models import init_cache, init_params
+    from repro.quant import PREP_STATS, QuantConfig
+    from repro.runtime.fault_tolerance import FaultInjector, FaultSpec
+
+    cfg = dataclasses.replace(reduced_config("deepseek-7b"), quant=
+        QuantConfig(dtype="fp8_e4m3", accum="mgs_exact"))
+    params, dims = init_params(cfg, jax.random.PRNGKey(0))
+
+    def make_requests(n, plen=8, max_new=3):
+        rng = np.random.default_rng(0)
+        return [Request(rid=i, prompt=rng.integers(
+                    1, cfg.vocab, plen).astype(np.int32),
+                    max_new_tokens=max_new) for i in range(n)]
+"""
+
+
+# ---------------------------------------------------------------------------
+# fault-injection substrate (single device)
+# ---------------------------------------------------------------------------
+
+
+def test_fault_injector_deterministic_addressing():
+    from repro.runtime.fault_tolerance import (FaultInjector, FaultSpec,
+                                               InjectedFault)
+
+    spec = FaultSpec(kind="raise", replica=1, group=2, count=2)
+    inj = FaultInjector([spec], seed=7)
+    b0 = inj.bind(0)
+    for _ in range(5):            # replica 0 never targeted
+        b0.before_group()
+    b1 = inj.bind(1)
+    b1.before_group()             # group 0: clean
+    b1.before_group()             # group 1: clean
+    with pytest.raises(InjectedFault):
+        b1.before_group()         # group 2: fires
+    with pytest.raises(InjectedFault):
+        b1.before_group()         # group 3: count=2 window
+    b1.before_group()             # group 4: past the window
+    kinds = [(e["replica"], e["group"]) for e in inj.fired()]
+    assert kinds == [(1, 2), (1, 3)]
+
+
+def test_fault_injector_decode_step_and_any_replica():
+    from repro.runtime.fault_tolerance import (FaultInjector, FaultSpec,
+                                               InjectedFault)
+
+    inj = FaultInjector([FaultSpec(kind="raise", replica=-1, group=0,
+                                   after_decode_steps=2)])
+    b = inj.bind(3)
+    b.before_group()              # group start clean
+    b.on_decode(1)                # step 1 clean
+    with pytest.raises(InjectedFault):
+        b.on_decode(2)            # fires mid-stream
+    assert inj.fired()[0]["step"] == 2
+
+
+def test_fault_injector_probability_is_seed_deterministic():
+    from repro.runtime.fault_tolerance import (FaultInjector, FaultSpec,
+                                               InjectedFault)
+
+    spec = FaultSpec(kind="raise", replica=-1, group=0, count=64,
+                     probability=0.5)
+
+    def firing_groups(seed):
+        inj = FaultInjector([spec], seed=seed)
+        b = inj.bind(0)
+        out = []
+        for g in range(64):
+            try:
+                b.before_group()
+            except InjectedFault:
+                out.append(g)
+        return out
+
+    a, b_, c = firing_groups(1), firing_groups(1), firing_groups(2)
+    assert a == b_                     # same seed -> same fault schedule
+    assert a != c                      # different seed -> different one
+    assert 0 < len(a) < 64             # actually probabilistic
+
+
+def test_poison_spec_requires_devices_and_carries_ids():
+    from repro.runtime.fault_tolerance import (FaultInjector, FaultSpec,
+                                               PoisonedDeviceError)
+
+    with pytest.raises(ValueError):
+        FaultSpec(kind="poison")
+    inj = FaultInjector([FaultSpec(kind="poison", device_ids=(3, 5))])
+    b = inj.bind(0)
+    with pytest.raises(PoisonedDeviceError) as ei:
+        b.before_group()
+    assert ei.value.device_ids == (3, 5)
+
+
+def test_replica_health_state_machine():
+    from repro.runtime.fault_tolerance import ReplicaHealth
+
+    h = ReplicaHealth(ema=0.5, unhealthy_after=2)
+    assert h.state == "healthy" and h.schedulable()
+    h.record_failure(RuntimeError("x"))
+    assert h.state == "suspect" and h.schedulable()
+    h.record_failure()
+    assert h.state == "unhealthy" and not h.schedulable()
+    h.record_success(1.0)
+    assert h.state == "healthy"
+    h.record_success(3.0)
+    assert h.latency_ema == pytest.approx(2.0)     # 0.5*1 + 0.5*3
+    h.force("rebuilding")
+    assert h.state == "rebuilding" and not h.schedulable()
+    h.force("dead")
+    assert h.state == "dead"
+    with pytest.raises(ValueError):
+        h.force("zombie")
+    h.reset()
+    assert h.state == "healthy" and h.latency_ema is None
+    assert h.snapshot()["failures"] == 2
+    # straggler flag rides the EMA against a fleet reference
+    h.record_success(10.0)
+    assert h.is_straggler(1.0) and not h.is_straggler(None)
+
+
+def test_replacement_mesh_keeps_model_axis():
+    import jax
+
+    from repro.launch.mesh import make_mesh
+    from repro.runtime.elastic import replacement_mesh
+
+    mesh = make_mesh((1, 1), ("data", "model"))
+    re = replacement_mesh(mesh)
+    assert dict(re.shape) == {"data": 1, "model": 1}
+    dev = list(mesh.devices.flat)[0]
+    with pytest.raises(ValueError):
+        replacement_mesh(mesh, exclude=(dev.id,))   # nothing left
+
+
+# ---------------------------------------------------------------------------
+# engine seam + driver retry (single device)
+# ---------------------------------------------------------------------------
+
+
+def _reduced_cfg():
+    import dataclasses
+
+    from repro.configs import reduced_config
+    from repro.quant import QuantConfig
+    return dataclasses.replace(
+        reduced_config("deepseek-7b"),
+        quant=QuantConfig(dtype="fp8_e4m3", accum="mgs_exact"))
+
+
+def _requests(cfg, n, max_new=3):
+    from repro.launch.serve import Request
+    rng = np.random.default_rng(0)
+    return [Request(rid=i, prompt=rng.integers(1, cfg.vocab, 8).astype(
+        np.int32), max_new_tokens=max_new) for i in range(n)]
+
+
+def test_engine_seam_deadline_and_recovery():
+    """Injected hang trips the watchdog; the engine stays serviceable and
+    a clean re-run after reset reproduces tokens bitwise."""
+    from repro.launch.mesh import make_mesh
+    from repro.launch.serve import ServeEngine
+    from repro.runtime.fault_tolerance import (DeadlineExceeded,
+                                               FaultInjector, FaultSpec)
+
+    cfg = _reduced_cfg()
+    engine = ServeEngine(cfg, make_mesh((1, 1), ("data", "model")),
+                         batch=2, max_len=24)
+    want = _requests(cfg, 2)
+    engine.run(want)
+
+    inj = FaultInjector([FaultSpec(kind="hang", replica=0, group=0,
+                                   hang_s=0.3)])
+    got = _requests(cfg, 2)
+    with pytest.raises(DeadlineExceeded):
+        engine.run(got, injector=inj.bind(0), deadline_s=0.05)
+    assert inj.fired()[0]["kind"] == "hang"
+    with pytest.raises(DeadlineExceeded):
+        engine.run(got, should_abort=lambda: True)
+    for r in got:                      # caller-owned reset, then re-run
+        r.out_tokens.clear()
+        r.done = False
+    engine.run(got)
+    assert [r.out_tokens for r in got] == [r.out_tokens for r in want]
+
+
+def test_driver_transient_fault_retries_in_place():
+    """A mid-decode injected crash (partial out_tokens!) is retried on
+    the same replica after reset; outputs stay bitwise equal to the
+    fault-free run and health returns to healthy."""
+    from repro.launch.replica import ReplicaServeDriver
+    from repro.runtime.fault_tolerance import FaultInjector, FaultSpec
+
+    cfg = _reduced_cfg()
+    want = _requests(cfg, 5)
+    with ReplicaServeDriver(cfg, 1, batch=2, max_len=24) as d0:
+        d0.run(want)
+        params, dims = d0.engines[0].params, d0.engines[0].dims
+
+    inj = FaultInjector([FaultSpec(kind="raise", replica=0, group=1,
+                                   after_decode_steps=2)])
+    got = _requests(cfg, 5)
+    with ReplicaServeDriver(cfg, 1, batch=2, max_len=24, params=params,
+                            dims=dims, injector=inj, max_retries=2,
+                            backoff_base_s=0.001) as d1:
+        stats = d1.run(got)
+        health = d1.stats()["health"]
+    assert [r.out_tokens for r in got] == [r.out_tokens for r in want]
+    assert stats["retries"] == 1
+    assert stats["failovers"] == 0
+    assert inj.fired()[0]["step"] == 2
+    assert health[0]["state"] == "healthy"
+    assert health[0]["failures"] == 1
+
+
+def test_driver_rebuilds_self_when_no_survivors():
+    """R=1 with retries exhausted: no survivor exists, so the requests
+    are held through the rebuild and served by the replacement engine —
+    still zero drops, still bitwise."""
+    from repro.launch.replica import ReplicaServeDriver
+    from repro.quant import PREP_STATS
+    from repro.runtime.fault_tolerance import FaultInjector, FaultSpec
+
+    cfg = _reduced_cfg()
+    want = _requests(cfg, 4)
+    with ReplicaServeDriver(cfg, 1, batch=2, max_len=24) as d0:
+        d0.run(want)
+        params, dims = d0.engines[0].params, d0.engines[0].dims
+
+    # group 0 fails on first dispatch and one retry -> failover; the
+    # rebuilt replica serves everything (group counter is past the spec)
+    inj = FaultInjector([FaultSpec(kind="raise", replica=0, group=0,
+                                   count=2)])
+    got = _requests(cfg, 4)
+    with ReplicaServeDriver(cfg, 1, batch=2, max_len=24, params=params,
+                            dims=dims, injector=inj, max_retries=1,
+                            backoff_base_s=0.001) as d1:
+        n0 = PREP_STATS["prepared"]
+        stats = d1.run(got)
+        rebuild_builds = PREP_STATS["prepared"] - n0
+        events = [e["event"] for e in d1.events()]
+    assert [r.out_tokens for r in got] == [r.out_tokens for r in want]
+    assert all(len(r.out_tokens) == 3 for r in got)
+    assert stats["failovers"] == 1 and stats["rebuilds"] == 1
+    assert rebuild_builds == 0          # transfer_tree, not re-preparation
+    assert "drain_requeue" in events and "rebuilt" in events
+
+
+# ---------------------------------------------------------------------------
+# failover across replicas (forced multi-device subprocesses)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.slow
+def test_failover_requeues_onto_survivor():
+    """R=2: replica 0 fails persistently mid-drain; its queued +
+    in-flight requests requeue onto replica 1, tokens stay bitwise equal
+    to the single-engine run, and the rebuild adds zero weight builds."""
+    out = _run(_SETUP + """
+    want = make_requests(8)
+    engine = ServeEngine(cfg, make_mesh((1, 1), ("data", "model")),
+                         batch=2, max_len=24, params=params, dims=dims)
+    engine.run(want)
+
+    inj = FaultInjector([FaultSpec(kind="raise", replica=0, group=0,
+                                   count=9)])
+    got = make_requests(8)
+    driver = ReplicaServeDriver(cfg, 2, batch=2, max_len=24, params=params,
+                                dims=dims, model_parallel=1, injector=inj,
+                                max_retries=1, backoff_base_s=0.001)
+    n0 = PREP_STATS["prepared"]
+    futs = driver.submit_many(got)
+    driver.drain()
+    done = [f.result(timeout=60) for f in futs]
+    rebuild_builds = PREP_STATS["prepared"] - n0
+    stats = driver.stats()
+    events = driver.events()
+    driver.close()
+    print(json.dumps({
+        "tokens_equal": [a.out_tokens == b.out_tokens
+                         for a, b in zip(got, want)],
+        "all_resolved": all(f.done() for f in futs),
+        "complete": all(len(r.out_tokens) == 3 for r in done),
+        "requeued": stats["requeued_requests"],
+        "failovers": stats["failovers"], "rebuilds": stats["rebuilds"],
+        "rebuild_builds": rebuild_builds,
+        "health": [h["state"] for h in stats["health"]],
+        "events": [e["event"] for e in events],
+        "recovery_s": [e["recovery_s"] for e in events
+                       if e["event"] == "rebuilt"]}))
+    """, devices=2, timeout=900)
+    res = json.loads(out.strip().splitlines()[-1])
+    assert all(res["tokens_equal"])
+    assert res["all_resolved"] and res["complete"]
+    assert res["requeued"] > 0
+    assert res["failovers"] == 1 and res["rebuilds"] == 1
+    assert res["rebuild_builds"] == 0
+    assert res["health"] == ["healthy", "healthy"]
+    assert "drain_requeue" in res["events"]
+    assert res["recovery_s"] and res["recovery_s"][0] > 0
+
+
+@pytest.mark.slow
+def test_chaos_poisoned_device_bitwise_recovery():
+    """ISSUE-6 acceptance (forced 8 devices): a poisoned device kills
+    replica 0 mid-stream (partial decode state), requests requeue with
+    zero drops, the replica re-meshes around the exclusion set, and
+    every output — tokens and prefill logits — is bitwise identical to
+    the fault-free single-engine run with PREP_STATS flat."""
+    out = _run(_SETUP + """
+    from repro.parallel.sharding import use_rules
+
+    want = make_requests(12)
+    engine = ServeEngine(cfg, make_mesh((1, 1), ("data", "model")),
+                         batch=2, max_len=24, params=params, dims=dims)
+    engine.run(want)
+
+    # R=2 over 8 devices at model_parallel=1: replica 0 owns devices
+    # {0..3} as a (4, 1) mesh. Poison device 0 two groups in, mid-
+    # decode: the replacement re-meshes on the 3 survivors at the
+    # largest divisor data width (2 — so existing data-sharded planes
+    # transfer), idling one device, and keeps serving.
+    inj = FaultInjector([FaultSpec(kind="poison", replica=0, group=1,
+                                   after_decode_steps=2, device_ids=(0,))])
+    got = make_requests(12)
+    driver = ReplicaServeDriver(cfg, 2, batch=2, max_len=24, params=params,
+                                dims=dims, model_parallel=1, injector=inj,
+                                backoff_base_s=0.001)
+    driver.warmup(prompt_len=8, max_new=3)
+    n0 = PREP_STATS["prepared"]
+    futs = driver.submit_many(got)
+    driver.drain()
+    done = [f.result(timeout=120) for f in futs]
+    recovery_builds = PREP_STATS["prepared"] - n0
+    stats = driver.stats()
+
+    # bitwise logits from the REBUILT replica vs the single engine
+    toks = jnp.asarray(np.stack([r.prompt for r in make_requests(2)]))
+    def prefill_logits(e):
+        cache, _ = init_cache(cfg, 2, 24)
+        with use_rules(e.rules):
+            lg, _ = e._prefill(e.params, {"tokens": toks}, cache)
+        return np.asarray(lg)
+    lg_rebuilt = prefill_logits(driver.engines[0])
+    lg_single = prefill_logits(engine)
+    new_ids = [d.id for d in driver.meshes[0].devices.flat]
+    driver.close()
+
+    print(json.dumps({
+        "ndev": jax.device_count(),
+        "tokens_equal": [a.out_tokens == b.out_tokens
+                         for a, b in zip(got, want)],
+        "zero_dropped": all(f.done() and len(r.out_tokens) == 3
+                            for f, r in zip(futs, done)),
+        "recovery_builds": recovery_builds,
+        "rebuilt_excludes_poisoned": 0 not in new_ids,
+        "rebuilt_ndev": len(new_ids),
+        "logits_bitwise": bool((lg_rebuilt == lg_single).all()),
+        "failovers": stats["failovers"], "rebuilds": stats["rebuilds"],
+        "retries": stats["retries"],
+        "health": [h["state"] for h in stats["health"]]}))
+    """, timeout=900)
+    res = json.loads(out.strip().splitlines()[-1])
+    assert res["ndev"] == 8
+    assert all(res["tokens_equal"])
+    assert res["zero_dropped"]
+    assert res["recovery_builds"] == 0
+    assert res["rebuilt_excludes_poisoned"] and res["rebuilt_ndev"] == 2
+    assert res["logits_bitwise"]
+    assert res["failovers"] == 1 and res["rebuilds"] == 1
+    assert res["retries"] == 0          # poison skips the retry budget
+    assert res["health"] == ["healthy", "healthy"]
+
+
+@pytest.mark.slow
+def test_dead_replica_drains_to_survivors():
+    """Poisoning a replica's entire device set leaves nothing to rebuild
+    on: the replica goes dead, yet all of its traffic completes on the
+    survivor — zero drops even in the worst case."""
+    out = _run(_SETUP + """
+    want = make_requests(8)
+    engine = ServeEngine(cfg, make_mesh((1, 1), ("data", "model")),
+                         batch=2, max_len=24, params=params, dims=dims)
+    engine.run(want)
+
+    inj = FaultInjector([FaultSpec(kind="poison", replica=0, group=0,
+                                   device_ids=(0,))])
+    got = make_requests(8)
+    driver = ReplicaServeDriver(cfg, 2, batch=2, max_len=24, params=params,
+                                dims=dims, model_parallel=1, injector=inj,
+                                backoff_base_s=0.001)
+    futs = driver.submit_many(got)
+    driver.drain()
+    [f.result(timeout=60) for f in futs]
+    stats = driver.stats()
+    driver.close()
+    print(json.dumps({
+        "tokens_equal": [a.out_tokens == b.out_tokens
+                         for a, b in zip(got, want)],
+        "health": [h["state"] for h in stats["health"]],
+        "rebuilds": stats["rebuilds"],
+        "survivor_groups": stats["groups_per_replica"][1]}))
+    """, devices=2, timeout=900)
+    res = json.loads(out.strip().splitlines()[-1])
+    assert all(res["tokens_equal"])
+    assert res["health"] == ["dead", "healthy"]
+    assert res["rebuilds"] == 0
+    assert res["survivor_groups"] == 4          # every group, incl. requeued
+
+
+# ---------------------------------------------------------------------------
+# native multi-device chaos test (the forced-8-device CI shard)
+# ---------------------------------------------------------------------------
+
+
+def _native_device_count():
+    import jax
+    return jax.device_count()
+
+
+@pytest.mark.multidevice
+@pytest.mark.skipif(_native_device_count() < 8,
+                    reason="needs XLA_FLAGS forced >= 8 host devices "
+                           "(scripts/ci.sh chaos shard)")
+def test_native_kill_replica_mid_drain_zero_dropped_bitwise():
+    """The CI chaos shard: R=2 carved from 8 native devices, replica 0
+    killed mid-drain by persistent injected faults — zero dropped, every
+    token bitwise equal to the fault-free single-engine run."""
+    from repro.launch.mesh import make_mesh
+    from repro.launch.replica import ReplicaServeDriver
+    from repro.launch.serve import ServeEngine
+    from repro.quant import PREP_STATS
+    from repro.runtime.fault_tolerance import FaultInjector, FaultSpec
+
+    import jax
+
+    from repro.models import init_params
+
+    cfg = _reduced_cfg()
+    shared_params, dims = init_params(cfg, jax.random.PRNGKey(0))
+    want = _requests(cfg, 8)
+    engine = ServeEngine(cfg, make_mesh((1, 1), ("data", "model")),
+                         batch=2, max_len=24, params=shared_params,
+                         dims=dims)
+    engine.run(want)
+
+    inj = FaultInjector([FaultSpec(kind="raise", replica=0, group=0,
+                                   count=9)])
+    got = _requests(cfg, 8)
+    with ReplicaServeDriver(cfg, 2, batch=2, max_len=24,
+                            params=shared_params, dims=dims,
+                            model_parallel=1, injector=inj, max_retries=1,
+                            backoff_base_s=0.001) as driver:
+        n0 = PREP_STATS["prepared"]
+        futs = driver.submit_many(got)
+        driver.drain()
+        done = [f.result(timeout=120) for f in futs]
+        stats = driver.stats()
+        assert PREP_STATS["prepared"] == n0     # recovery never re-prepares
+    assert all(f.done() for f in futs)
+    assert all(len(r.out_tokens) == 3 for r in done)
+    assert [r.out_tokens for r in got] == [r.out_tokens for r in want]
+    assert stats["failovers"] >= 1
+    assert stats["requeued_requests"] > 0

@@ -1,10 +1,12 @@
 """Runtime substrate: checkpoint atomicity/round-trip/async/prune,
 preemption, straggler planning, recovery, data pipeline determinism."""
 
+import json
 import os
 import signal
 import threading
 import time
+import warnings
 
 import jax
 import jax.numpy as jnp
@@ -15,7 +17,7 @@ from repro.data import DataConfig, SyntheticLM
 from repro.runtime import checkpoint as ckpt
 from repro.runtime.elastic import plan_mesh
 from repro.runtime.fault_tolerance import (PreemptionHandler,
-                                           StragglerMonitor,
+                                           StragglerMonitor, backoff_delay,
                                            run_with_recovery)
 
 
@@ -80,6 +82,83 @@ def test_restore_missing_key_raises(tmp_path):
         ckpt.restore(d, template={"a": jnp.ones(3), "b": jnp.ones(2)})
 
 
+def test_checkpoint_crash_mid_write_keeps_prior_restore_point(tmp_path,
+                                                              monkeypatch):
+    """A crash while writing leaves (simulated np.save failure on the
+    second leaf) must leave the previous checkpoint fully restorable and
+    ``latest_step`` unchanged — the atomic tmp-then-rename contract."""
+    d = str(tmp_path / "ck")
+    tree = _tree()
+    ckpt.save(d, 5, tree, extra={"mark": "good"})
+
+    calls = {"n": 0}
+    real_save = np.save
+
+    def crashing_save(f, arr, *a, **k):
+        calls["n"] += 1
+        if calls["n"] == 2:
+            raise OSError("disk died mid-write")
+        return real_save(f, arr, *a, **k)
+
+    monkeypatch.setattr(np, "save", crashing_save)
+    with pytest.raises(OSError):
+        ckpt.save(d, 6, tree)
+    monkeypatch.undo()
+
+    assert ckpt.latest_step(d) == 5           # crashed save never published
+    step, restored, extra = ckpt.restore(d, template=tree)
+    assert step == 5 and extra["mark"] == "good"
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    # the same step saves cleanly afterwards (stale .tmp is replaced)
+    ckpt.save(d, 6, tree)
+    assert ckpt.latest_step(d) == 6
+
+
+def test_checkpoint_crash_during_manifest_keeps_prior(tmp_path,
+                                                      monkeypatch):
+    """Crash after the leaves but during the manifest write: still no
+    partial checkpoint visible (the manifest gate in latest_step)."""
+    d = str(tmp_path / "ck")
+    tree = _tree()
+    ckpt.save(d, 1, tree)
+
+    def crashing_dump(obj, f, *a, **k):
+        raise OSError("crash during manifest")
+
+    monkeypatch.setattr(json, "dump", crashing_dump)
+    with pytest.raises(OSError):
+        ckpt.save(d, 2, tree)
+    monkeypatch.undo()
+    assert ckpt.latest_step(d) == 1
+    step, _, _ = ckpt.restore(d, template=tree)
+    assert step == 1
+
+
+def test_async_checkpointer_surfaces_crash_and_recovers(tmp_path,
+                                                        monkeypatch):
+    """A background-save crash is re-raised on wait(); the prior restore
+    point survives and the next save succeeds."""
+    d = str(tmp_path / "ck")
+    tree = _tree()
+    saver = ckpt.AsyncCheckpointer()
+    saver.save(d, 1, tree)
+    saver.wait()
+
+    def crashing_save(f, arr, *a, **k):
+        raise OSError("async disk death")
+
+    monkeypatch.setattr(np, "save", crashing_save)
+    saver.save(d, 2, tree)
+    with pytest.raises(OSError):
+        saver.wait()
+    monkeypatch.undo()
+    assert ckpt.latest_step(d) == 1
+    saver.save(d, 2, tree)
+    saver.wait()
+    assert ckpt.latest_step(d) == 2
+
+
 def test_preemption_handler():
     h = PreemptionHandler(signals=(signal.SIGUSR1,))
     assert not h.should_stop
@@ -87,6 +166,87 @@ def test_preemption_handler():
     time.sleep(0.05)
     assert h.should_stop
     h.restore()
+
+
+def test_preemption_handler_off_main_thread_is_warned_noop():
+    """Constructed in a worker thread (as the replica driver might),
+    the handler must not raise — it degrades to a warned no-op whose
+    should_stop stays poll-able."""
+    out = {}
+
+    def build():
+        with warnings.catch_warnings(record=True) as w:
+            warnings.simplefilter("always")
+            h = PreemptionHandler()
+            out["warned"] = any(issubclass(x.category, RuntimeWarning)
+                                for x in w)
+        out["installed"] = h.installed
+        out["stop_before"] = h.should_stop
+        h.request_stop()
+        out["stop_after"] = h.should_stop
+        h.restore()                 # must be safe with nothing installed
+
+    t = threading.Thread(target=build)
+    t.start()
+    t.join()
+    assert out == {"warned": True, "installed": False,
+                   "stop_before": False, "stop_after": True}
+
+
+def test_preemption_handler_context_manager():
+    prev = signal.getsignal(signal.SIGUSR1)
+    with PreemptionHandler(signals=(signal.SIGUSR1,)) as h:
+        assert h.installed
+        os.kill(os.getpid(), signal.SIGUSR1)
+        time.sleep(0.05)
+        assert h.should_stop
+    assert signal.getsignal(signal.SIGUSR1) is prev   # __exit__ restored
+
+
+def test_backoff_delay_deterministic_capped():
+    a = [backoff_delay(i, base_s=0.05, cap_s=2.0, seed=3)
+         for i in range(1, 10)]
+    b = [backoff_delay(i, base_s=0.05, cap_s=2.0, seed=3)
+         for i in range(1, 10)]
+    assert a == b                                     # reproducible
+    assert a != [backoff_delay(i, base_s=0.05, cap_s=2.0, seed=4)
+                 for i in range(1, 10)]               # seed-distinct
+    assert all(d <= 2.0 for d in a)                   # hard cap
+    assert all(d > 0 for d in a)
+    # jitter-free midpoints grow geometrically until the cap
+    clean = [backoff_delay(i, base_s=0.05, cap_s=2.0, jitter=0.0, seed=0)
+             for i in range(1, 8)]
+    assert clean[:3] == [0.05, 0.1, 0.2] and clean[-1] == 2.0
+    assert backoff_delay(5, base_s=0.0) == 0.0        # disabled
+
+
+def test_run_with_recovery_structured_logging(capsys):
+    """Each restart emits one JSON line to stderr and invokes
+    on_attempt with the same event dict."""
+    seen = []
+    calls = []
+
+    def run(resume):
+        calls.append(resume)
+        if len(calls) < 3:
+            raise RuntimeError("node failure")
+        return 7
+
+    steps = iter([None, 40, 80])
+    out = run_with_recovery(run, lambda: next(steps), max_restarts=3,
+                            backoff_s=0.001, seed=11,
+                            on_attempt=seen.append)
+    assert out == 7
+    lines = [json.loads(ln) for ln in capsys.readouterr().err.splitlines()
+             if ln.strip().startswith("{")]
+    events = [e for e in lines if e.get("event") == "recovery_restart"]
+    assert [e["attempt"] for e in events] == [1, 2]
+    assert [e["resume_step"] for e in events] == [None, 40]
+    assert all("node failure" in e["error"] for e in events)
+    assert events == seen
+    # backoff in the log matches the deterministic schedule
+    assert events[0]["backoff_s"] == pytest.approx(
+        backoff_delay(1, base_s=0.001, cap_s=30.0, seed=11), abs=1e-6)
 
 
 def test_straggler_monitor_flags_slow_host():
