@@ -32,6 +32,11 @@ XLA_FLAGS="--xla_force_host_platform_device_count=8" \
 # identical to the fault-free single-engine run, PREP_STATS flat.
 XLA_FLAGS="--xla_force_host_platform_device_count=8" \
     python -m pytest -x -q -m multidevice tests/test_failover.py
+# Continuous-batching shard (ISSUE-7): the ragged-traffic determinism
+# harness on an 8-device mesh — slot-level admission over the paged KV
+# pool, per-request tokens identical to the single-device engine.
+XLA_FLAGS="--xla_force_host_platform_device_count=8" \
+    python -m pytest -x -q -m multidevice tests/test_continuous.py
 
 # Decode-bench smoke (ISSUE-5): analytic HBM accounting + measured
 # float-vs-packed decode wall time; refreshes BENCH_decode.json.
@@ -41,6 +46,16 @@ python -m benchmarks.run decode
 # baseline at R=2,4 — recovery latency + throughput restore; refreshes
 # BENCH_failover.json.
 python -m benchmarks.run failover
+
+# Serving-benchmark smoke (ISSUE-7): seeded Poisson ragged traffic,
+# continuous batching vs fixed groups — p50/p99 latency + tok/s;
+# refreshes BENCH_serving.json.
+python -m benchmarks.run serving
+
+# Continuous-batching CLI smoke: slot-level serving end to end through
+# the __main__ entry point (FP8_MGS_SERVE_PAGED preset, reduced tiles).
+python -m repro.launch.serve --reduced --continuous \
+    --batch 2 --n-requests 4 --prompt-len 8 --max-new 4
 
 # Replica-driver example smoke: 2 replica engines on 2 forced host
 # devices, shared prepared planes, tokens identical to single engine.

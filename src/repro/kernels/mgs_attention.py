@@ -11,10 +11,10 @@ online softmax across key chunks — scores never round-trip HBM.
 
 Structure (one ``(T, D)`` query slice attending ``(S, D)`` keys/values):
 
-* grid = S-chunks, sequential ("arbitrary"); the softmax running state
-  (row max ``m``, denominator ``l``, output accumulator ``o``) lives in
-  VMEM scratch across the grid, exactly like the matmul kernels' class
-  accumulators live across the K grid axis.
+* grid = (slices, S-chunks), sequential ("arbitrary"); the softmax
+  running state (row max ``m``, denominator ``l``, output accumulator
+  ``o``) lives in VMEM scratch across the chunk axis, exactly like the
+  matmul kernels' class accumulators live across the K grid axis.
 * the query's decoded limbs are cached in VMEM scratch on the first
   chunk (the activation-stationary trick from ``mgs_matmul``): q is
   decoded once, not once per chunk.
@@ -30,6 +30,27 @@ Structure (one ``(T, D)`` query slice attending ``(S, D)`` keys/values):
   same bit-twiddling as the dmac kernel) — then the weight/value limb
   contraction runs exactly and one per-row f32 scale rescales the
   chunk's contribution.
+
+**Ragged lengths / paged blocks.** Both contractions walk the cache as
+fixed ``chunk``-key tiles addressed through a *block table*: the kernel
+grid is ``(N, nb)`` and a scalar-prefetch table ``bt[n, j]`` names the
+physical tile the ``j``-th logical chunk of slice ``n`` lives in
+(``pltpu.PrefetchScalarGridSpec`` — index maps read the table, so the
+DMA engine fetches through it). The dense entry point
+(:func:`mgs_flash_attention`) passes an identity table over a reshaped
+contiguous cache; the paged entry point
+(:func:`mgs_paged_flash_attention`) passes a vLLM-style block pool +
+per-slice tables. A per-slice ``live`` length gates every chunk update
+(``@pl.when(j * chunk < live[n])``): chunks past the live prefix are
+skipped — dead tiles clamp their table index to the last live chunk so
+no out-of-range DMA is issued — which makes a short context's decode
+cost track *its own* length, not the longest co-scheduled one.
+Skipping is bitwise-identical to walking inert tails (zero codes and
+scales, large-negative bias): an inert chunk's probabilities underflow
+to exactly ``+0.0`` (``exp(-1e30 - m)``), so ``alpha == 1``,
+``l + 0.0 == l`` and ``o + 0.0 == o`` leave every running quantity
+bit-unchanged — ``tests/test_paged_kv.py`` pins this at ragged,
+length-0 and block-boundary lengths.
 
 Bit-identity contract: every chunk update — both contractions, the
 running-max/exp/rescale algebra, and the **shape-independent pairwise
@@ -57,7 +78,7 @@ from .mgs_matmul import (_CompilerParams, _decode_limbs, _limb_split,
                          _round_decompose_e4m3)
 
 __all__ = ["mgs_flash_attention", "mgs_flash_attention_ref",
-           "flash_chunk_limit"]
+           "mgs_paged_flash_attention", "flash_chunk_limit"]
 
 _TINY = 1e-30
 _MAX_PAIR = _N_LIMBS * (1 << (_LIMB_BASE - 1)) ** 2  # per-K-elem class bound
@@ -163,70 +184,111 @@ def _attn_tile_step(lq, k_codes, v_codes, qk_row, v_row, bias, m, l, o,
     return m_new, l_new, o_new
 
 
+def _last_live_chunk(live, chunk):
+    """Index of the last live chunk per slice, clamped to 0.
+
+    Dead grid steps clamp their block-table lookup here so the DMA engine
+    never chases a table entry past the live prefix (free slots hold
+    zeroed tables; the trash block would still be in-range, but
+    re-fetching the last live tile keeps the prefetch stream monotone).
+    """
+    return jnp.maximum(-(-live // chunk) - 1, 0).astype(jnp.int32)
+
+
 # ---------------------------------------------------------------------------
-# Pallas kernel
+# Pallas kernel — grid (N slices, nb chunks), block-table indirection
 # ---------------------------------------------------------------------------
 
 
-def _flash_kernel(qc_ref, kc_ref, vc_ref, qk_ref, vs_ref, bias_ref, o_ref,
-                  q_limbs, m_ref, l_ref, acc_ref, *, nsteps: int,
-                  fmt: FPFormat):
-    j = pl.program_id(0)
+def _flash_kernel(bt_ref, live_ref, last_ref, qc_ref, kp_ref, vp_ref,
+                  qk_ref, vs_ref, bias_ref, o_ref, q_limbs, m_ref, l_ref,
+                  acc_ref, *, nsteps: int, chunk: int, fmt: FPFormat):
+    del bt_ref, last_ref  # consumed by the index maps, not the body
+    n = pl.program_id(0)
+    j = pl.program_id(1)
 
     @pl.when(j == 0)
     def _init():
-        # decode q once into the K-resident limb scratch (the
+        # decode q once into the chunk-resident limb scratch (the
         # activation-stationary trick: every later chunk reuses it)
-        lq0 = _decode_limbs(qc_ref[...], fmt)
+        lq0 = _decode_limbs(qc_ref[0], fmt)
         for a in range(_N_LIMBS):
             q_limbs[a] = lq0[a]
         m_ref[...] = jnp.full_like(m_ref, -jnp.inf)
         l_ref[...] = jnp.zeros_like(l_ref)
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
-    lq = [q_limbs[a] for a in range(_N_LIMBS)]
-    m_new, l_new, o_new = _attn_tile_step(
-        lq, kc_ref[...], vc_ref[...], qk_ref[...], vs_ref[...],
-        bias_ref[...], m_ref[...], l_ref[...], acc_ref[...], fmt)
-    m_ref[...] = m_new
-    l_ref[...] = l_new
-    acc_ref[...] = o_new
+    # masked-chunk early-exit: chunks past the slice's live prefix leave
+    # every running quantity untouched (bitwise == walking inert tails)
+    @pl.when(j * chunk < live_ref[n])
+    def _update():
+        lq = [q_limbs[a] for a in range(_N_LIMBS)]
+        m_new, l_new, o_new = _attn_tile_step(
+            lq, kp_ref[0], vp_ref[0], qk_ref[...], vs_ref[...],
+            bias_ref[...], m_ref[...], l_ref[...], acc_ref[...], fmt)
+        m_ref[...] = m_new
+        l_ref[...] = l_new
+        acc_ref[...] = o_new
 
     @pl.when(j == nsteps - 1)
     def _done():
-        o_ref[...] = acc_ref[...] / jnp.maximum(l_ref[...], _TINY)
+        o_ref[0] = acc_ref[...] / jnp.maximum(l_ref[...], _TINY)
 
 
-def _flash_pallas_one(q_codes, k_codes, v_codes, qk_scale, v_scale, bias,
-                      fmt: FPFormat, chunk: int, interpret: bool):
-    """One (T, D) x (S, D) slice through the Pallas kernel (vmapped)."""
-    T, D = q_codes.shape
-    Sp = k_codes.shape[0]
-    nsteps = Sp // chunk
-    return pl.pallas_call(
-        functools.partial(_flash_kernel, nsteps=nsteps, fmt=fmt),
-        grid=(nsteps,),
+def _flash_pallas(q_codes, k_pool, v_pool, bt, live, qk_scale, v_scale,
+                  bias, fmt: FPFormat, interpret: bool):
+    """All (T, D) slices through one block-table Pallas launch.
+
+    ``k_pool`` / ``v_pool`` are physical ``(P, chunk, D)`` tile pools;
+    ``bt[n, j]`` names slice ``n``'s ``j``-th tile. The scale/bias rows
+    stay *logical* ``(N, nb * chunk)`` — the caller gathers them through
+    the table (they are ~1/D of the code traffic), which keeps the
+    kernel's scalar-prefetch surface to the table + live lengths.
+    """
+    N, T, D = q_codes.shape
+    nb = bt.shape[1]
+    chunk = k_pool.shape[1]
+    last = _last_live_chunk(live, chunk)
+
+    def _at_table(n, j, bt_, lv, lt):
+        del lv
+        return (bt_[n, jnp.minimum(j, lt[n])], 0, 0)
+
+    def _at_row(n, j, bt_, lv, lt):
+        del bt_, lv
+        return (n, jnp.minimum(j, lt[n]))
+
+    def _at_slice(n, j, bt_, lv, lt):
+        del j, bt_, lv, lt
+        return (n, 0, 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,
+        grid=(N, nb),
         in_specs=[
-            pl.BlockSpec((T, D), lambda j: (0, 0)),
-            pl.BlockSpec((chunk, D), lambda j: (j, 0)),
-            pl.BlockSpec((chunk, D), lambda j: (j, 0)),
-            pl.BlockSpec((1, chunk), lambda j: (0, j)),
-            pl.BlockSpec((1, chunk), lambda j: (0, j)),
-            pl.BlockSpec((1, chunk), lambda j: (0, j)),
+            pl.BlockSpec((1, T, D), _at_slice),
+            pl.BlockSpec((1, chunk, D), _at_table),
+            pl.BlockSpec((1, chunk, D), _at_table),
+            pl.BlockSpec((1, chunk), _at_row),
+            pl.BlockSpec((1, chunk), _at_row),
+            pl.BlockSpec((1, chunk), _at_row),
         ],
-        out_specs=pl.BlockSpec((T, D), lambda j: (0, 0)),
-        out_shape=jax.ShapeDtypeStruct((T, D), jnp.float32),
+        out_specs=pl.BlockSpec((1, T, D), _at_slice),
         scratch_shapes=[
             pltpu.VMEM((_N_LIMBS, T, D), jnp.int8),
             pltpu.VMEM((T, 1), jnp.float32),
             pltpu.VMEM((T, 1), jnp.float32),
             pltpu.VMEM((T, D), jnp.float32),
         ],
+    )
+    return pl.pallas_call(
+        functools.partial(_flash_kernel, nsteps=nb, chunk=chunk, fmt=fmt),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((N, T, D), jnp.float32),
         compiler_params=_CompilerParams(
-            dimension_semantics=("arbitrary",)),
+            dimension_semantics=("arbitrary", "arbitrary")),
         interpret=interpret,
-    )(q_codes, k_codes, v_codes, qk_scale.reshape(1, Sp),
-      v_scale.reshape(1, Sp), bias.reshape(1, Sp))
+    )(bt, live, last, q_codes, k_pool, v_pool, qk_scale, v_scale, bias)
 
 
 # ---------------------------------------------------------------------------
@@ -234,36 +296,54 @@ def _flash_pallas_one(q_codes, k_codes, v_codes, qk_scale, v_scale, bias,
 # ---------------------------------------------------------------------------
 
 
-def _flash_ref_one(q_codes, k_codes, v_codes, qk_scale, v_scale, bias,
-                   fmt: FPFormat, chunk: int):
-    T, D = q_codes.shape
-    Sp = k_codes.shape[0]
-    nc = Sp // chunk
-    lq = _decode_limbs(q_codes, fmt)
-    kc = k_codes.reshape(nc, chunk, D)
-    vc = v_codes.reshape(nc, chunk, D)
-    qkc = qk_scale.reshape(nc, 1, chunk)
-    vsc = v_scale.reshape(nc, 1, chunk)
-    bc = bias.reshape(nc, 1, chunk)
+def _flash_ref(q_codes, k_pool, v_pool, bt, live, qk_scale, v_scale, bias,
+               fmt: FPFormat):
+    """Pure-jnp twin of :func:`_flash_pallas` — table gather via
+    ``jnp.take``, dead chunks masked out of the scan carry (selecting the
+    old carry is bitwise the kernel's skipped update)."""
+    N, T, D = q_codes.shape
+    nb = bt.shape[1]
+    chunk = k_pool.shape[1]
 
-    def step(carry, xs):
-        m, l, o = carry
-        kb, vb, qkb, vsb, bb = xs
-        return _attn_tile_step(lq, kb, vb, qkb, vsb, bb, m, l, o, fmt), None
+    def one(qc, bt_n, live_n, qk, vs, bs):
+        lq = _decode_limbs(qc, fmt)
+        kc = jnp.take(k_pool, bt_n, axis=0)
+        vc = jnp.take(v_pool, bt_n, axis=0)
+        qkc = qk.reshape(nb, 1, chunk)
+        vsc = vs.reshape(nb, 1, chunk)
+        bc = bs.reshape(nb, 1, chunk)
 
-    m0 = jnp.full((T, 1), -jnp.inf, jnp.float32)
-    l0 = jnp.zeros((T, 1), jnp.float32)
-    o0 = jnp.zeros((T, D), jnp.float32)
-    (m, l, o), _ = jax.lax.scan(step, (m0, l0, o0), (kc, vc, qkc, vsc, bc))
-    return o / jnp.maximum(l, _TINY)
+        def step(carry, xs):
+            kb, vb, qkb, vsb, bb, j = xs
+            upd = _attn_tile_step(lq, kb, vb, qkb, vsb, bb, *carry, fmt)
+            keep = j * chunk < live_n
+            return tuple(jnp.where(keep, u, c)
+                         for u, c in zip(upd, carry)), None
+
+        m0 = jnp.full((T, 1), -jnp.inf, jnp.float32)
+        l0 = jnp.zeros((T, 1), jnp.float32)
+        o0 = jnp.zeros((T, D), jnp.float32)
+        (m, l, o), _ = jax.lax.scan(
+            step, (m0, l0, o0),
+            (kc, vc, qkc, vsc, bc, jnp.arange(nb, dtype=jnp.int32)))
+        return o / jnp.maximum(l, _TINY)
+
+    return jax.vmap(one)(q_codes, bt, live, qk_scale, v_scale, bias)
 
 
-def mgs_flash_attention_ref(q, k_codes, v_codes, qk_scale, v_scale, bias,
-                            fmt: FPFormat = E4M3, *, chunk: int = 256):
-    """Pure-jnp oracle of :func:`mgs_flash_attention` (``use_kernel=False``
-    path). Same signature and — by construction — the same bits."""
-    return mgs_flash_attention(q, k_codes, v_codes, qk_scale, v_scale, bias,
-                               fmt, chunk=chunk, use_kernel=False)
+def _dispatch(q_codes, k_pool, v_pool, bt, live, qk_scale, v_scale, bias,
+              fmt: FPFormat, use_kernel: bool, interpret):
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    if k_pool.shape[1] > flash_chunk_limit():
+        raise ValueError(f"chunk {k_pool.shape[1]} exceeds the int32 "
+                         f"class-accumulator bound {flash_chunk_limit()}")
+    live = live.astype(jnp.int32)
+    if use_kernel:
+        return _flash_pallas(q_codes, k_pool, v_pool, bt, live, qk_scale,
+                             v_scale, bias, fmt, interpret)
+    return _flash_ref(q_codes, k_pool, v_pool, bt, live, qk_scale,
+                      v_scale, bias, fmt)
 
 
 # ---------------------------------------------------------------------------
@@ -271,12 +351,22 @@ def mgs_flash_attention_ref(q, k_codes, v_codes, qk_scale, v_scale, bias,
 # ---------------------------------------------------------------------------
 
 
+def mgs_flash_attention_ref(q, k_codes, v_codes, qk_scale, v_scale, bias,
+                            fmt: FPFormat = E4M3, *, chunk: int = 256,
+                            lengths=None):
+    """Pure-jnp oracle of :func:`mgs_flash_attention` (``use_kernel=False``
+    path). Same signature and — by construction — the same bits."""
+    return mgs_flash_attention(q, k_codes, v_codes, qk_scale, v_scale, bias,
+                               fmt, chunk=chunk, use_kernel=False,
+                               lengths=lengths)
+
+
 @functools.partial(
     jax.jit, static_argnames=("fmt", "chunk", "use_kernel", "interpret"))
 def mgs_flash_attention(q, k_codes, v_codes, qk_scale, v_scale, bias,
                         fmt: FPFormat = E4M3, *, chunk: int = 256,
                         use_kernel: bool = True,
-                        interpret: bool | None = None):
+                        interpret: bool | None = None, lengths=None):
     """Flash-style exact-MGS attention over packed-code keys/values.
 
     Args:
@@ -305,14 +395,19 @@ def mgs_flash_attention(q, k_codes, v_codes, qk_scale, v_scale, bias,
       use_kernel: Pallas kernel (TPU; interpret mode on CPU) vs the
         pure-jnp reference — bit-identical either way.
       interpret: Pallas interpret mode (default: not on TPU).
+      lengths: optional ``(N,)`` int32 live key counts. When given,
+        chunks whose first key is ``>= lengths[n]`` are skipped (the
+        masked-chunk early-exit) — bitwise-identical to the full walk
+        whenever the skipped tail is inert (zero codes/scales,
+        large-negative bias), which both the engine's zero-initialized
+        dense cache and this function's own padding guarantee. ``None``
+        walks every chunk (the pre-ragged behavior, bit for bit).
 
     Returns:
       ``(N, T, D)`` float32 attention outputs,
       ``softmax(qk_scale * (q @ k^T) + bias) @ (v * v_scale)`` with both
       contractions exact under MGS limb summation.
     """
-    if interpret is None:
-        interpret = jax.default_backend() != "tpu"
     N, T, D = q.shape
     S = k_codes.shape[1]
     assert k_codes.shape == (N, S, D) and v_codes.shape == (N, S, D), (
@@ -320,9 +415,6 @@ def mgs_flash_attention(q, k_codes, v_codes, qk_scale, v_scale, bias,
     assert qk_scale.shape == (N, S) and v_scale.shape == (N, S), (
         qk_scale.shape, v_scale.shape)
     assert bias.shape == (N, S), (bias.shape, (N, S))
-    if chunk > flash_chunk_limit():
-        raise ValueError(f"chunk {chunk} exceeds the int32 class-"
-                         f"accumulator bound {flash_chunk_limit()}")
     nc = -(-S // chunk)
     Sp = nc * chunk
     pad = Sp - S
@@ -335,9 +427,76 @@ def mgs_flash_attention(q, k_codes, v_codes, qk_scale, v_scale, bias,
         qk_scale = jnp.pad(qk_scale, ((0, 0), (0, pad)))
         v_scale = jnp.pad(v_scale, ((0, 0), (0, pad)))
         bias = jnp.pad(bias, ((0, 0), (0, pad)), constant_values=-1e30)
-    if use_kernel:
-        fn = functools.partial(_flash_pallas_one, fmt=fmt, chunk=chunk,
-                               interpret=interpret)
+    # the contiguous cache is a degenerate pool: slice n's chunk j is
+    # physical tile n * nc + j (identity block table)
+    k_pool = k_codes.reshape(N * nc, chunk, D)
+    v_pool = v_codes.reshape(N * nc, chunk, D)
+    bt = jnp.arange(N * nc, dtype=jnp.int32).reshape(N, nc)
+    if lengths is None:
+        live = jnp.full((N,), Sp, jnp.int32)
     else:
-        fn = functools.partial(_flash_ref_one, fmt=fmt, chunk=chunk)
-    return jax.vmap(fn)(q_codes, k_codes, v_codes, qk_scale, v_scale, bias)
+        assert lengths.shape == (N,), (lengths.shape, N)
+        live = jnp.clip(lengths.astype(jnp.int32), 0, Sp)
+    return _dispatch(q_codes, k_pool, v_pool, bt, live, qk_scale, v_scale,
+                     bias, fmt, use_kernel, interpret)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("fmt", "use_kernel", "interpret"))
+def mgs_paged_flash_attention(q, k_pool, v_pool, block_table, lengths,
+                              qk_scale, v_scale, bias,
+                              fmt: FPFormat = E4M3, *,
+                              use_kernel: bool = True,
+                              interpret: bool | None = None):
+    """Flash-style exact-MGS attention over a **paged** packed-code pool.
+
+    The paged twin of :func:`mgs_flash_attention`: keys/values live in a
+    physical block pool shared by every slice, and each slice walks its
+    own block table — the serving engine's continuous-batching layout
+    (``quant.kvcache.PagedKVCache``), where a slot's logical cache is
+    scattered over whatever blocks the allocator handed it.
+
+    Args:
+      q: ``(N, T, D)`` format-exact FP8 query values.
+      k_pool / v_pool: ``(P, bs, D)`` uint8 physical code pools —
+        ``bs`` (the block size) is the kernel's chunk; the caller
+        flattens per-head pools into the leading ``P`` axis
+        (``PagedKVCache`` planes are ``(P, KV, bs, hd)``, a pure
+        reshape).
+      block_table: ``(N, nb)`` int32 physical tile ids —
+        ``pool[block_table[n, j]]`` holds keys
+        ``[j * bs, (j + 1) * bs)`` of slice ``n``. Entries past
+        ``ceil(lengths[n] / bs)`` are never read (their DMAs are
+        clamped to the last live tile and their updates gated off), so
+        free slots may leave their tables zeroed.
+      lengths: ``(N,)`` int32 live key counts (0 = dead slice: the
+        output row is exactly zero).
+      qk_scale / v_scale / bias: ``(N, nb * bs)`` f32 *logical* rows,
+        exactly as in the dense entry point — the caller gathers scale
+        rows through the table (``gather_paged_kv`` rows are ~1/D of
+        the code traffic) and computes bias from positions.
+      fmt / use_kernel / interpret: as in :func:`mgs_flash_attention`.
+
+    Returns:
+      ``(N, T, D)`` float32 attention outputs. Bitwise-identical to
+      running the dense kernel over the gathered contiguous cache with
+      the same ``lengths`` (and hence to an isolated single-request
+      dense run — the continuous-batching determinism contract,
+      ``tests/test_continuous.py``).
+    """
+    N, T, D = q.shape
+    P, bs, Dp = k_pool.shape
+    nb = block_table.shape[1]
+    S = nb * bs
+    assert Dp == D and v_pool.shape == (P, bs, D), (k_pool.shape,
+                                                    v_pool.shape, q.shape)
+    assert block_table.shape == (N, nb), (block_table.shape, N)
+    assert lengths.shape == (N,), (lengths.shape, N)
+    assert qk_scale.shape == (N, S) and v_scale.shape == (N, S), (
+        qk_scale.shape, v_scale.shape, (N, S))
+    assert bias.shape == (N, S), (bias.shape, (N, S))
+    q_codes = encode_bits(q, fmt)
+    live = jnp.clip(lengths.astype(jnp.int32), 0, S)
+    return _dispatch(q_codes, k_pool, v_pool,
+                     block_table.astype(jnp.int32), live, qk_scale,
+                     v_scale, bias, fmt, use_kernel, interpret)

@@ -170,6 +170,17 @@ class ReplicaServeDriver:
       backoff_base_s / backoff_cap_s: retry backoff shape
         (:func:`repro.runtime.fault_tolerance.backoff_delay`; jitter is
         deterministic, seeded per replica).
+      continuous: run one
+        :class:`~repro.launch.serve.ContinuousBatchingEngine` per
+        replica (``batch`` decode slots each) instead of group engines.
+        The scheduling unit becomes the *request*: ``submit`` dispatches
+        immediately and the replica's serve loop admits it between
+        decode steps of its in-flight work
+        (:meth:`_worker_continuous`). Requires the row-independent quant
+        preset (``per_row_act``); per-request outputs stay bit-identical
+        to an isolated run under any traffic. The fault-injection /
+        deadline / failover seam stays group-mode-only — passing
+        ``injector`` or ``deadline_s`` with ``continuous=True`` raises.
 
     Every engine keeps ``shard_batch=False`` (the deterministic layout),
     so per-request logits are bit-identical to a single-device run; the
@@ -186,14 +197,23 @@ class ReplicaServeDriver:
                  max_retries: int = 2,
                  deadline_s: Optional[float] = None,
                  backoff_base_s: float = 0.02,
-                 backoff_cap_s: float = 0.5):
+                 backoff_cap_s: float = 0.5,
+                 continuous: bool = False):
         if scheduler not in SCHEDULERS:
             raise ValueError(f"scheduler {scheduler!r} not in {SCHEDULERS}")
+        if continuous and (injector is not None or deadline_s is not None):
+            # the chaos/watchdog seam is threaded through ServeEngine.run
+            # (group mode); the slot engine serves via .serve() and has
+            # no injection points — keep the failure story honest.
+            raise ValueError("fault injection / deadline_s are group-mode "
+                             "features; continuous=True does not support "
+                             "them (docs/serving.md)")
         self.batch = batch
         self.scheduler = scheduler
         self.cfg = cfg
+        self.continuous = continuous
         self._engine_kwargs = dict(batch=batch, max_len=max_len, seed=seed,
-                                   eos_id=eos_id)
+                                   eos_id=eos_id, continuous=continuous)
         self._calibration = calibration
         self._injector = injector
         self._max_retries = max_retries
@@ -206,7 +226,7 @@ class ReplicaServeDriver:
         first = make_engine(cfg, self.meshes[0], batch=batch,
                             max_len=max_len, params=params, dims=dims,
                             seed=seed, eos_id=eos_id,
-                            calibration=calibration)
+                            calibration=calibration, continuous=continuous)
         self.engines = [first]
         for mesh in self.meshes[1:]:
             # shared prepared planes: transfer, never re-prepare.
@@ -216,7 +236,8 @@ class ReplicaServeDriver:
             self.engines.append(make_engine(
                 cfg, mesh, batch=batch, max_len=max_len,
                 params=transfer_tree(first.params, mesh), dims=first.dims,
-                seed=seed, eos_id=eos_id, calibration=calibration))
+                seed=seed, eos_id=eos_id, calibration=calibration,
+                continuous=continuous))
 
         self._lock = threading.Lock()
         self._pending: List = []        # [(Request, Future)] awaiting a group
@@ -233,8 +254,9 @@ class ReplicaServeDriver:
         self._closed = False
         self._queues: List["queue.Queue"] = [queue.Queue()
                                              for _ in range(replicas)]
+        worker = self._worker_continuous if continuous else self._worker
         self._workers = [
-            threading.Thread(target=self._worker, args=(i,), daemon=True,
+            threading.Thread(target=worker, args=(i,), daemon=True,
                              name=f"replica-serve-{i}")
             for i in range(replicas)]
         for t in self._workers:
@@ -269,6 +291,105 @@ class ReplicaServeDriver:
                 with self._lock:
                     self._inflight[idx] -= 1
                 q.task_done()
+
+    def _worker_continuous(self, idx: int):
+        """Continuous-mode worker: one ``serve()`` absorbs queued traffic.
+
+        Jobs carry single requests (``submit`` dispatches immediately,
+        no group formation). The first blocking ``get`` starts an
+        ``engine.serve()`` whose ``feed`` hook drains everything that
+        queues up afterwards — new requests are admitted into free slots
+        *between decode steps* of the in-flight ones, which is the
+        continuous-batching scheduling the group worker cannot do. Each
+        request's future resolves from serve's ``on_done`` callback, the
+        moment that request finishes (not when its batch drains).
+        """
+        q = self._queues[idx]
+        while True:
+            job = q.get()
+            if job is None:
+                q.task_done()
+                return
+            if job.warmup is not None:
+                try:
+                    self._run_job(idx, job)
+                except BaseException as e:
+                    for fut in job.futures:
+                        if not fut.done():
+                            fut.set_exception(e)
+                finally:
+                    with self._lock:
+                        self._inflight[idx] -= 1
+                    q.task_done()
+                continue
+            jobs = [job]
+            deferred: List[_Job] = []
+            sentinel: List[Any] = []
+            futmap = {id(r): f
+                      for r, f in zip(job.requests, job.futures)}
+
+            def feed():
+                got: List[Request] = []
+                while True:
+                    try:
+                        j = q.get_nowait()
+                    except queue.Empty:
+                        return got
+                    if j is None:             # close() sentinel
+                        sentinel.append(j)
+                        return got
+                    if j.warmup is not None:  # run after this serve pass
+                        deferred.append(j)
+                        continue
+                    jobs.append(j)
+                    for r, f in zip(j.requests, j.futures):
+                        futmap[id(r)] = f
+                    got.extend(j.requests)
+
+            def on_done(req: Request):
+                fut = futmap.pop(id(req), None)
+                if fut is not None:
+                    try:
+                        fut.set_result(req)
+                    except InvalidStateError:
+                        pass
+
+            try:
+                stats = self.engines[idx].serve(
+                    list(job.requests), feed=feed, on_done=on_done)
+                with self._lock:
+                    self.health[idx].record_success(stats["wall_s"])
+                    self._stats["prefill_tokens"] += stats["prefill_tokens"]
+                    self._stats["decode_tokens"] += stats["decode_tokens"]
+                    n_req = sum(len(j.requests) for j in jobs)
+                    self._stats["requests"] += n_req
+                    self._stats["groups"] += len(jobs)
+                    self._stats["groups_per_replica"][idx] += len(jobs)
+                    self._stats["busy_s"] += stats["wall_s"]
+            except BaseException as e:
+                for j in jobs:
+                    for fut in j.futures:
+                        if not fut.done():
+                            fut.set_exception(e)
+            finally:
+                with self._lock:
+                    self._inflight[idx] -= len(jobs)
+                for _ in jobs:
+                    q.task_done()
+            for j in deferred:
+                try:
+                    self._run_job(idx, j)
+                except BaseException as e:
+                    for fut in j.futures:
+                        if not fut.done():
+                            fut.set_exception(e)
+                finally:
+                    with self._lock:
+                        self._inflight[idx] -= 1
+                    q.task_done()
+            if sentinel:
+                q.task_done()   # the consumed None
+                q.put(None)     # re-post: the next get() exits cleanly
 
     @staticmethod
     def _deliver(job: _Job, results):
@@ -521,9 +642,15 @@ class ReplicaServeDriver:
         with self._lock:
             if self._closed:
                 raise RuntimeError("driver is closed")
-            self._pending.append((request, fut))
-            if len(self._pending) >= self.batch:
-                self._flush_locked()
+            if self.continuous:
+                # the request is the scheduling unit: dispatch now, the
+                # replica's serve loop admits it at the next step
+                # boundary (no group formation latency)
+                self._dispatch_locked(_Job([request], [fut]))
+            else:
+                self._pending.append((request, fut))
+                if len(self._pending) >= self.batch:
+                    self._flush_locked()
         return fut
 
     def submit_many(self, requests: Sequence[Request]) -> List[Future]:

@@ -18,6 +18,7 @@ from __future__ import annotations
 import argparse
 import dataclasses
 import time
+from collections import deque
 from typing import Any, Dict, List, Optional
 
 import jax
@@ -28,14 +29,36 @@ from jax.sharding import NamedSharding
 from repro.configs import get_config, reduced_config
 from repro.configs.base import ModelConfig
 from repro.launch.mesh import make_mesh, make_serve_mesh
-from repro.models import (decode_step, init_cache, init_params, param_dims,
-                          prefill)
+from repro.models import (adopt_slot, decode_step, decode_step_paged,
+                          init_cache, init_paged_cache, init_params,
+                          param_dims, prefill, release_slot)
 from repro.parallel.sharding import make_rules, use_rules
-from repro.quant import (PreparedWeight, calibrating, prepare_logits_head,
-                         prepare_params)
+from repro.quant import (BlockAllocator, PreparedWeight, calibrating,
+                         prepare_logits_head, prepare_params)
 from repro.quant.calibrate import CalibrationTable
 
-__all__ = ["ServeEngine", "Request", "make_engine", "main"]
+__all__ = ["ServeEngine", "ContinuousBatchingEngine", "Request",
+           "bucket_for", "make_engine", "main"]
+
+
+def bucket_for(plen: int, buckets=None, *, block: int = 1) -> int:
+    """The padded prompt length a request of ``plen`` tokens is served at.
+
+    The smallest warmed bucket that fits, else ``plen`` rounded up to
+    ``block``. This is the single bucketing rule shared by
+    :meth:`ServeEngine.run` (group padding) and
+    :class:`ContinuousBatchingEngine` admission — a pure function of
+    ``(plen, buckets, block)``, never of engine state or co-traffic, so
+    two engines warmed with the same buckets prefill a given request at
+    the same compiled shape (the determinism harness relies on this,
+    and it is what keeps admission from recompiling for every distinct
+    prompt length between buckets).
+    """
+    if buckets:
+        for b in buckets:
+            if b >= plen:
+                return int(b)
+    return -(-plen // block) * block
 
 
 def _place_raw_leaves(params, dims, rules):
@@ -144,6 +167,7 @@ class ServeEngine:
         self.batch = batch
         self.max_len = max_len
         self.eos_id = eos_id
+        self._buckets: Optional[List[int]] = None  # set by warmup()
         # deterministic (default) serving layout: weights/planes
         # FSDP-sharded over the data axes, batch-indexed activations
         # replicated — local float-op shapes are then mesh-invariant,
@@ -239,6 +263,7 @@ class ServeEngine:
                     cur = jnp.argmax(logits, axis=-1)[:, None].astype(
                         jnp.int32)
             jax.block_until_ready(logits)
+        self._buckets = buckets
         return buckets
 
     def apply_calibration(self, table: CalibrationTable):
@@ -350,7 +375,12 @@ class ServeEngine:
             if injector is not None:
                 injector.before_group()
             _watchdog()
-            plen = max(len(r.prompt) for r in group)
+            # pad the group to the shared bucketing rule: after warmup,
+            # every in-range prompt length reuses a compiled shape
+            # (bucket_for falls back to the raw group max when no warmed
+            # bucket fits — the pre-warmup behavior)
+            plen = bucket_for(max(len(r.prompt) for r in group),
+                              self._buckets)
             toks = np.zeros((self.batch, plen), np.int32)
             for j, r in enumerate(group):
                 toks[j, plen - len(r.prompt):] = r.prompt  # left-pad
@@ -388,11 +418,274 @@ class ServeEngine:
                 "decode_tok_per_s": n_decode_tokens / max(dt, 1e-9)}
 
 
+@dataclasses.dataclass
+class _Slot:
+    """Book-keeping for one occupied decode slot (host-side only)."""
+    req: Request
+    blocks: List[int]
+    arrival: float
+    admit_s: float
+    cur: int                       # token to feed at the next decode step
+
+
+class ContinuousBatchingEngine(ServeEngine):
+    """Slot-level continuous batching over the paged KV pool.
+
+    Where :class:`ServeEngine` serves fixed groups (a whole batch
+    prefills together, decodes together, and the group's slowest request
+    gates every other member), this engine schedules **slots**: each of
+    the ``slots`` decode lanes holds one request, new requests are
+    admitted into free lanes *between decode steps of the in-flight
+    ones*, and finished requests release their lane (and their KV
+    blocks) immediately. Every compiled shape is fixed — prefill is
+    batch-1 at warmed bucket lengths, admission is one traced
+    ``adopt_slot`` scatter (slot id, physical block ids and the prefill
+    planes are all runtime values), and the decode step is always
+    ``(slots, 1)`` over the shared block pool
+    (``models.decode_step_paged``) — so steady-state traffic never
+    recompiles, whatever the arrival pattern.
+
+    Determinism contract: a request's logits and tokens are **bitwise
+    identical** to an isolated run of that request alone on the same
+    engine — independent of admission order, assigned slot, co-resident
+    requests, or pool block assignment — and its greedy tokens match an
+    isolated batch-1 :class:`ServeEngine` run warmed with the same
+    buckets. (Bit-level f32 reproducibility is scoped to the compiled
+    geometry — slot count and mesh — the same way the group engine's
+    guarantee is scoped to its mesh: XLA may reassociate unquantized f32
+    ops across *different* compiled batch shapes.) This needs
+    ``quant.per_row_act`` (row-independent linear quantization; the
+    constructor enforces it) on top of the packed cache: attention is
+    already per-slice, the paged kernel walks only the slot's own live
+    blocks, and free lanes decode into the trash block. See
+    docs/serving.md and tests/test_continuous.py.
+
+    Restricted to plain dense decoder-only architectures (the
+    ``models.init_paged_cache`` guard); the replica fleet's fault
+    injection seam is group-mode only and not threaded through here.
+    """
+
+    def __init__(self, cfg: ModelConfig, mesh, *, slots: int, max_len: int,
+                 n_blocks: Optional[int] = None, params=None, dims=None,
+                 seed: int = 0, eos_id: Optional[int] = None,
+                 calibration: Optional[CalibrationTable] = None):
+        if not cfg.quant.per_row_act:
+            raise ValueError(
+                "ContinuousBatchingEngine requires quant.per_row_act=True: "
+                "per-tensor activation scales couple co-scheduled slots "
+                "through a shared absmax, breaking the traffic-invariance "
+                "contract (use e.g. quant.config.FP8_MGS_SERVE_PAGED)")
+        super().__init__(cfg, mesh, batch=1, max_len=max_len,
+                         params=params, dims=dims, seed=seed, eos_id=eos_id,
+                         calibration=calibration, deterministic=True)
+        self.slots = slots
+        self.block_size = cfg.quant.block_k
+        self.n_table = -(-max_len // self.block_size)
+        # default pool: every slot can hold a full table of live blocks
+        # (+ the reserved trash block 0)
+        self.n_blocks = (slots * self.n_table + 1 if n_blocks is None
+                         else n_blocks)
+        with use_rules(self.rules):
+            self.cache, self.cache_dims = init_paged_cache(
+                cfg, slots, max_len, self.n_blocks)
+        self.alloc = BlockAllocator(self.n_blocks)
+        self._free_slots = deque(range(slots))
+        self._cur = np.zeros((slots, 1), np.int32)
+        self._logits_log: Optional[Dict[int, List[np.ndarray]]] = None
+
+    def _build_jits(self):
+        super()._build_jits()
+        cfg = self.cfg
+        self._decode_paged = jax.jit(
+            lambda p, t, c: decode_step_paged(p, cfg, t, c),
+            donate_argnums=(2,))
+        self._adopt = jax.jit(adopt_slot, donate_argnums=(0,))
+        self._release = jax.jit(release_slot, donate_argnums=(0,))
+
+    def warmup(self, plen_buckets, *, max_new: int = 1, seed: int = 0):
+        """Compile the admission + decode path at the bucket lengths.
+
+        Serves one dummy request per bucket through the *real*
+        admit/decode/release cycle, which compiles batch-1 prefill and
+        the ``adopt_slot`` scatter per bucket plus the (bucket-
+        independent) paged decode step and release — afterwards,
+        admitting any prompt that ``bucket_for`` maps into a warmed
+        bucket costs zero compilations. The pool is empty again on
+        return.
+        """
+        buckets = sorted({int(b) for b in plen_buckets})
+        bad = [b for b in buckets
+               if b <= 0
+               or -(-(b + max_new) // self.block_size) > self.n_table]
+        if bad:
+            raise ValueError(f"warmup buckets {bad} out of range for "
+                             f"max_len={self.max_len}, max_new={max_new}")
+        self._buckets = buckets
+        rng = np.random.default_rng(seed)
+        for plen in buckets:
+            req = Request(rid=-1,
+                          prompt=rng.integers(1, self.cfg.vocab, plen)
+                          .astype(np.int32),
+                          max_new_tokens=max_new)
+            self.serve([req])
+        return buckets
+
+    def _admit(self, req: Request, arrival: float, t0: float,
+               active: Dict[int, _Slot]) -> Optional[_Slot]:
+        """Try to admit one request; None if no slot/blocks right now."""
+        plen = len(req.prompt)
+        bucket = bucket_for(plen, self._buckets, block=self.block_size)
+        n_alloc = -(-(bucket + req.max_new_tokens) // self.block_size)
+        if n_alloc > self.n_table:
+            raise ValueError(
+                f"request {req.rid}: bucket {bucket} + "
+                f"max_new {req.max_new_tokens} needs {n_alloc} blocks > "
+                f"table width {self.n_table} (raise max_len)")
+        if not self._free_slots or self.alloc.n_free < n_alloc:
+            return None
+        slot = self._free_slots.popleft()
+        blocks = self.alloc.alloc(n_alloc)
+        toks = np.zeros((1, bucket), np.int32)
+        toks[0, bucket - plen:] = req.prompt          # left-pad
+        pcache, _ = init_cache(self.cfg, 1, bucket)
+        logits, pcache = self._prefill(self.params, self._make_batch(toks),
+                                       pcache)
+        phys = np.zeros(self.n_table, np.int32)       # tail -> trash block
+        phys[:n_alloc] = blocks
+        self.cache = self._adopt(self.cache, pcache,
+                                 jnp.asarray(slot, jnp.int32),
+                                 jnp.asarray(phys))
+        tok = int(jnp.argmax(logits[0]))
+        st = _Slot(req=req, blocks=blocks, arrival=arrival,
+                   admit_s=time.monotonic() - t0, cur=tok)
+        active[slot] = st
+        self._harvest(slot, st, active, np.asarray(logits[0]))
+        return st
+
+    def _harvest(self, slot: int, st: _Slot, active: Dict[int, _Slot],
+                 logits_row: np.ndarray):
+        """Record one generated token; release the slot when done."""
+        st.req.out_tokens.append(st.cur)
+        if self._logits_log is not None:
+            self._logits_log.setdefault(st.req.rid, []).append(
+                logits_row.copy())
+        if (self.eos_id is not None and st.cur == self.eos_id) \
+                or len(st.req.out_tokens) >= st.req.max_new_tokens:
+            st.req.done = True
+            self.cache = self._release(self.cache,
+                                       jnp.asarray(slot, jnp.int32))
+            self.alloc.free(st.blocks)
+            self._free_slots.append(slot)
+            self._cur[slot, 0] = 0
+            del active[slot]
+
+    def serve(self, requests: List[Request], *, arrivals=None,
+              record_logits: bool = False, feed=None,
+              on_done=None) -> Dict[str, Any]:
+        """Serve requests with continuous (slot-level) admission.
+
+        ``arrivals``: optional per-request arrival offsets in seconds
+        (same order as ``requests``); a request becomes admissible once
+        that much wall-clock has elapsed. Default: everything is
+        admissible immediately (admission order = list order —
+        deterministic, which the invariance tests permute on purpose).
+
+        ``feed``: optional zero-arg callable polled once per scheduling
+        round; any :class:`Request` list it returns joins the waiting
+        queue *mid-flight* — new traffic is admitted between decode
+        steps of the in-flight requests (the replica driver's continuous
+        dispatch rides this hook). ``on_done``: optional per-request
+        completion callback, invoked the moment a request finishes
+        (its slot is already released).
+
+        With ``record_logits`` the returned stats carry
+        ``stats["logits"][rid]``: the f32 logits row behind each emitted
+        token — the observable the determinism harness compares bitwise.
+
+        Returns the :meth:`ServeEngine.run`-style stats dict plus
+        ``steps`` (decode steps run), and per-request
+        ``timing[rid] = (arrival_s, admit_s, done_s)``.
+        """
+        if arrivals is None:
+            arrivals = [0.0] * len(requests)
+        if len(arrivals) != len(requests):
+            raise ValueError("arrivals must parallel requests")
+        self._logits_log: Optional[Dict[int, List[np.ndarray]]] = (
+            {} if record_logits else None)
+        t0 = time.monotonic()
+        waiting = deque(zip(arrivals, requests))
+        active: Dict[int, _Slot] = {}
+        timing: Dict[int, Any] = {}
+        n_prefill = n_decode = n_steps = 0
+
+        def finish(req: Request, arrival: float, admit_s: float):
+            nonlocal n_decode
+            n_decode += len(req.out_tokens)
+            timing[req.rid] = (arrival, admit_s, time.monotonic() - t0)
+            if on_done is not None:
+                on_done(req)
+
+        with use_rules(self.rules):
+            while True:
+                now = time.monotonic() - t0
+                if feed is not None:
+                    for req in feed():
+                        waiting.append((now, req))
+                while waiting and waiting[0][0] <= now:
+                    arr, req = waiting[0]
+                    st = self._admit(req, arr, t0, active)
+                    if st is None:
+                        break
+                    waiting.popleft()
+                    n_prefill += bucket_for(len(req.prompt), self._buckets,
+                                            block=self.block_size)
+                    if req.done:                      # done at first token
+                        finish(req, arr, st.admit_s)
+                if not active:
+                    if waiting:
+                        time.sleep(min(1e-3, max(0.0,
+                                                 waiting[0][0] - now)))
+                        continue
+                    break
+                for slot, st in active.items():
+                    self._cur[slot, 0] = st.cur
+                logits, self.cache = self._decode_paged(
+                    self.params, jnp.asarray(self._cur), self.cache)
+                n_steps += 1
+                rows = np.asarray(logits)
+                for slot in list(active):
+                    st = active[slot]
+                    st.cur = int(rows[slot].argmax())
+                    self._harvest(slot, st, active, rows[slot])
+                    if st.req.done:
+                        finish(st.req, st.arrival, st.admit_s)
+        dt = time.monotonic() - t0
+        stats: Dict[str, Any] = {
+            "prefill_tokens": n_prefill, "decode_tokens": n_decode,
+            "steps": n_steps, "wall_s": dt,
+            "decode_tok_per_s": n_decode / max(dt, 1e-9),
+            "timing": timing}
+        if record_logits:
+            stats["logits"] = self._logits_log
+        self._logits_log = None
+        return stats
+
+    def run(self, requests: List[Request], **kw) -> Dict[str, Any]:
+        """Group-mode entry point is replaced by :meth:`serve`."""
+        if kw:
+            raise NotImplementedError(
+                "fault-injection/deadline seams are group-mode only "
+                "(ServeEngine.run); the continuous engine serves via "
+                ".serve()")
+        return self.serve(requests)
+
+
 def make_engine(cfg: ModelConfig, mesh, *, batch: int, max_len: int,
                 params=None, dims=None, seed: int = 0,
                 eos_id: Optional[int] = None,
                 calibration: Optional[CalibrationTable] = None,
-                deterministic: bool = True) -> ServeEngine:
+                deterministic: bool = True,
+                continuous: bool = False) -> ServeEngine:
     """Engine factory — one construction point for every driver.
 
     A thin, keyword-only wrapper over :class:`ServeEngine` so the CLI
@@ -400,8 +693,19 @@ def make_engine(cfg: ModelConfig, mesh, *, batch: int, max_len: int,
     (:class:`repro.launch.replica.ReplicaServeDriver`), and tests all
     build engines through one signature: pass ``params`` (prepared trees
     included — preparation is idempotent) to share weights across
-    engines, and ``calibration`` to start pre-calibrated.
+    engines, and ``calibration`` to start pre-calibrated. With
+    ``continuous=True`` the returned engine is a
+    :class:`ContinuousBatchingEngine` with ``batch`` decode slots
+    (always deterministic — that layout is its contract).
     """
+    if continuous:
+        if not deterministic:
+            raise ValueError("continuous engines are deterministic by "
+                             "construction (per-request bit-identity is "
+                             "their contract)")
+        return ContinuousBatchingEngine(
+            cfg, mesh, slots=batch, max_len=max_len, params=params,
+            dims=dims, seed=seed, eos_id=eos_id, calibration=calibration)
     return ServeEngine(cfg, mesh, batch=batch, max_len=max_len,
                        params=params, dims=dims, seed=seed, eos_id=eos_id,
                        calibration=calibration, deterministic=deterministic)
@@ -427,6 +731,14 @@ def main():
     ap.add_argument("--scheduler", default="round_robin",
                     choices=("round_robin", "least_loaded"),
                     help="replica dispatch policy (--replicas > 1)")
+    ap.add_argument("--continuous", action="store_true",
+                    help="slot-level continuous batching over the paged "
+                         "KV pool (ContinuousBatchingEngine): per-request "
+                         "admission/release instead of fixed groups, "
+                         "bit-identical per-request outputs under any "
+                         "traffic; forces the FP8_MGS_SERVE_PAGED quant "
+                         "preset; incompatible with --replicas > 1 here "
+                         "(use ReplicaServeDriver(continuous=True))")
     ap.add_argument("--no-deterministic", action="store_true",
                     help="batch-over-data throughput layout instead of "
                          "the deterministic (cross-mesh bit-identical) "
@@ -442,6 +754,16 @@ def main():
 
     cfg = (reduced_config(args.arch) if args.reduced
            else get_config(args.arch))
+    if args.continuous:
+        if args.replicas > 1 or args.no_deterministic:
+            ap.error("--continuous is a single-engine mode here and is "
+                     "always deterministic")
+        from repro.quant.config import FP8_MGS_SERVE_PAGED
+        q = FP8_MGS_SERVE_PAGED
+        if args.reduced:    # CPU-friendly tiles + jnp reference path
+            q = q.replace(use_kernel=False, fused=False,
+                          block_m=32, block_n=32, block_k=32)
+        cfg = dataclasses.replace(cfg, quant=q)
     rng = np.random.default_rng(0)
     reqs = [Request(rid=i,
                     prompt=rng.integers(1, cfg.vocab,
@@ -465,8 +787,13 @@ def main():
             data_p, model_p = (int(x) for x in args.mesh.split("x"))
             mesh = make_mesh((data_p, model_p), ("data", "model"))
         engine = make_engine(cfg, mesh, batch=args.batch, max_len=max_len,
-                             deterministic=not args.no_deterministic)
-        stats = engine.run(reqs)
+                             deterministic=not args.no_deterministic,
+                             continuous=args.continuous)
+        if args.continuous:
+            engine.warmup([args.prompt_len], max_new=1)
+            stats = engine.serve(reqs)
+        else:
+            stats = engine.run(reqs)
     print(stats)
     for r in reqs[:2]:
         print(f"req {r.rid}: {r.out_tokens[:10]}")

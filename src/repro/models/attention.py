@@ -17,8 +17,10 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
-from repro.kernels.mgs_attention import mgs_flash_attention
-from repro.quant import QuantizedKVCache, append_kv, qeinsum
+from repro.kernels.mgs_attention import (mgs_flash_attention,
+                                         mgs_paged_flash_attention)
+from repro.quant import (PagedKVCache, QuantizedKVCache, append_kv,
+                         paged_append_kv, qeinsum)
 from repro.quant.quantize import quantize_fp8
 from .common import ParamFactory, apply_rope
 from .linear import proj
@@ -202,7 +204,8 @@ def _pad_kv_to_chunk(k, v, k_pos, chunk: int):
     return k, v, k_pos
 
 
-def _sdpa_packed_cache(q, cache: QuantizedKVCache, bias, quant):
+def _sdpa_packed_cache(q, cache: QuantizedKVCache, bias, quant,
+                       lengths=None):
     """Decode attention over the packed-FP8 cache: the MGS flash kernel.
 
     q: (B, T=1, KV, G, hd) compute-dtype queries. cache planes:
@@ -222,6 +225,12 @@ def _sdpa_packed_cache(q, cache: QuantizedKVCache, bias, quant):
     — 1 byte/element of cache HBM traffic, no score round-trips), and
     every reduction is shape-independent, so the cross-mesh bit-identity
     guarantee covers the packed-cache decode step.
+
+    ``lengths`` (``(B,)`` live key counts) turns on the kernel's
+    masked-chunk early-exit: chunks past a row's live prefix are
+    skipped, bitwise-identical to walking them because the cache's
+    unwritten tail is exactly inert (zero codes and scales from
+    ``init_quantized_kv``, large-negative bias from the validity mask).
     """
     B, T, KV, G, hd = q.shape
     S = cache.k_codes.shape[2]
@@ -241,9 +250,62 @@ def _sdpa_packed_cache(q, cache: QuantizedKVCache, bias, quant):
     vc = cache.v_codes.reshape(B * KV, S, hd)
     bias2 = jnp.broadcast_to(bias.reshape(B, 1, S), (B, KV, S)).reshape(
         B * KV, S)
+    live = (None if lengths is None
+            else jnp.repeat(lengths.astype(jnp.int32), KV))
     out = mgs_flash_attention(qvals, kc, vc, qk, vs, bias2, fmt,
                               chunk=quant.block_k,
-                              use_kernel=quant.use_kernel)
+                              use_kernel=quant.use_kernel, lengths=live)
+    return out.reshape(B, KV, G, T, hd).transpose(0, 3, 1, 2, 4).astype(
+        q.dtype)
+
+
+def _sdpa_paged_cache(q, cache: PagedKVCache, block_table, bias, lengths,
+                      quant):
+    """Decode attention over the paged pool: the block-table MGS kernel.
+
+    The paged twin of :func:`_sdpa_packed_cache`. Codes never move — the
+    kernel (:func:`repro.kernels.mgs_attention.mgs_paged_flash_attention`)
+    walks each slot's blocks through a scalar-prefetched table, and only
+    the per-entry *scale rows* (~1/head_dim of the code bytes) are
+    gathered into logical (B*KV, S) order here, because they fold into
+    the per-key score/value multipliers before the kernel launch.
+    ``lengths`` are the per-slot live key counts (0 = free slot: that
+    row's every chunk is gated off and its output is exactly zero).
+    Per-slice query scales + per-entry cache scales + the gated walk
+    make each row's output a function of that slot's own history alone —
+    the continuous-batching invariance contract.
+    """
+    B, T, KV, G, hd = q.shape
+    bs = cache.k_codes.shape[2]
+    nb = block_table.shape[1]
+    S = nb * bs
+    fmt = quant.kv_fmt
+    q2 = q.transpose(0, 2, 3, 1, 4).reshape(B * KV, G * T * hd)
+    qt = quantize_fp8(q2, fmt, axis=1)
+    qvals = qt.q.reshape(B * KV, G * T, hd)
+    if quant.accum in ("mgs_exact", "mgs_dmac"):
+        from repro.quant.calibrate import observe
+        observe("attn.scores", qvals, fmt)
+    bt = block_table.astype(jnp.int32)
+    ks = jnp.take(cache.k_scale, bt.reshape(-1), axis=0)
+    vs = jnp.take(cache.v_scale, bt.reshape(-1), axis=0)
+    ks = ks.reshape(B, nb, KV, bs).transpose(0, 2, 1, 3).reshape(B * KV, S)
+    vs = vs.reshape(B, nb, KV, bs).transpose(0, 2, 1, 3).reshape(B * KV, S)
+    qk = (qt.scale * ks) * (hd ** -0.5)
+    # pool view (P, KV, bs, hd) -> (P*KV, bs, hd) is a pure reshape;
+    # slot b / head h / chunk j lives in physical tile bt[b, j]*KV + h
+    P = cache.k_codes.shape[0]
+    kp = cache.k_codes.reshape(P * KV, bs, hd)
+    vp = cache.v_codes.reshape(P * KV, bs, hd)
+    bt_nk = (bt[:, None, :] * KV
+             + jnp.arange(KV, dtype=jnp.int32)[None, :, None]).reshape(
+                 B * KV, nb)
+    live = jnp.repeat(lengths.astype(jnp.int32), KV)
+    bias2 = jnp.broadcast_to(bias.reshape(B, 1, S), (B, KV, S)).reshape(
+        B * KV, S)
+    out = mgs_paged_flash_attention(qvals, kp, vp, bt_nk, live, qk, vs,
+                                    bias2, fmt,
+                                    use_kernel=quant.use_kernel)
     return out.reshape(B, KV, G, T, hd).transpose(0, 3, 1, 2, 4).astype(
         q.dtype)
 
@@ -253,16 +315,21 @@ def attention_apply(p, x, cfg: ModelConfig, *, positions,
                     cache: Optional[KVCache] = None,
                     cache_pos=None,
                     cross_kv: Optional[KVCache] = None,
-                    kv_positions=None):
+                    kv_positions=None, block_table=None, lengths=None):
     """Self- or cross-attention.
 
     x: (B, T, d). positions: (B, T) int32 token positions of the queries.
-    cache: decode-time KV cache — a float :class:`KVCache` or a
-    packed-code :class:`repro.quant.QuantizedKVCache`; new K/V are
-    written at ``cache_pos``. With the packed cache, the decode step
-    (T == 1) attends the cache *codes* through the MGS flash-decode
-    kernel (:mod:`repro.kernels.mgs_attention`); prefill (T > 1) attends
-    the freshly-projected float K/V and only *stores* them quantized.
+    cache: decode-time KV cache — a float :class:`KVCache`, a
+    packed-code :class:`repro.quant.QuantizedKVCache`, or a paged
+    :class:`repro.quant.PagedKVCache` pool; new K/V are written at
+    ``cache_pos``. With the packed cache, the decode step (T == 1)
+    attends the cache *codes* through the MGS flash-decode kernel
+    (:mod:`repro.kernels.mgs_attention`); prefill (T > 1) attends the
+    freshly-projected float K/V and only *stores* them quantized. With
+    the paged pool (decode-only), ``cache_pos`` is a per-slot ``(B,)``
+    position vector, ``block_table`` ``(B, nb)`` names each slot's
+    physical blocks and ``lengths`` ``(B,)`` its live key count
+    (0 = free slot).
     cross_kv: precomputed encoder K/V (whisper decoder) — overrides
     self-attention K/V entirely.
     Returns (out (B, T, d), new_cache | None).
@@ -287,7 +354,25 @@ def attention_apply(p, x, cfg: ModelConfig, *, positions,
         k = proj(x, p["wk"], cfg.quant, site="attn.wk")   # (B,T,KV,hd)
         k = apply_rope(k, positions, cfg.rope_theta)
         v = proj(x, p["wv"], cfg.quant, site="attn.wv")
-        if isinstance(cache, QuantizedKVCache):
+        if isinstance(cache, PagedKVCache):
+            if T != 1:
+                raise NotImplementedError(
+                    "the paged pool is decode-only (T == 1): prompts are "
+                    "prefilled into a dense batch-1 cache and adopted "
+                    "into the pool (models.adopt_slot)")
+            new_cache = paged_append_kv(cache, k, v, cache_pos,
+                                        block_table, cfg.quant.kv_fmt)
+            bs = cache.k_codes.shape[2]
+            S = block_table.shape[1] * bs
+            k_pos = jnp.broadcast_to(
+                jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+            valid = k_pos <= positions[:, -1:]
+            k_pos = jnp.where(valid, k_pos, _POS_SENTINEL)
+            bias3 = _mask(positions, k_pos, causal=causal,
+                          window=cfg.window, is_global=is_global)
+            packed_out = _sdpa_paged_cache(q, new_cache, block_table,
+                                           bias3, lengths, cfg.quant)
+        elif isinstance(cache, QuantizedKVCache):
             # packed cache: re-quantize ONLY the new entries (per-entry
             # scales — old codes are bit-frozen, see quant.kvcache)
             new_cache = append_kv(cache, k, v, cache_pos, cfg.quant.kv_fmt)
@@ -301,8 +386,12 @@ def attention_apply(p, x, cfg: ModelConfig, *, positions,
                 k_pos = jnp.where(valid, k_pos, _POS_SENTINEL)
                 bias3 = _mask(positions, k_pos, causal=causal,
                               window=cfg.window, is_global=is_global)
-                packed_out = _sdpa_packed_cache(q, new_cache, bias3,
-                                                cfg.quant)
+                # masked-chunk early-exit: live keys end at the decode
+                # position (the unwritten tail is zero-inert, so
+                # skipping it is bitwise-identical to walking it)
+                packed_out = _sdpa_packed_cache(
+                    q, new_cache, bias3, cfg.quant,
+                    lengths=positions[:, -1] + 1)
             else:
                 # prefill: attend the fresh float K/V (the cache stores
                 # them quantized for the decode steps to come). This is

@@ -28,7 +28,8 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.parallel.sharding import constrain
-from repro.quant import QuantizedKVCache, init_quantized_kv, qeinsum
+from repro.quant import (PagedKVCache, QuantizedKVCache, init_paged_kv,
+                         init_quantized_kv, qeinsum)
 from .attention import KVCache, attention_apply, attention_init
 from .common import ParamFactory, dtype_of, grad_barrier, rms_norm
 from .ffn import ffn_apply, ffn_init
@@ -36,7 +37,8 @@ from .mamba import SSMCache, mamba_apply, mamba_decode_step, mamba_init
 from .moe import moe_apply, moe_init
 
 __all__ = ["init_params", "param_dims", "forward", "loss_fn", "init_cache",
-           "prefill", "decode_step"]
+           "prefill", "decode_step", "init_paged_cache", "decode_step_paged",
+           "adopt_slot", "release_slot"]
 
 
 # ---------------------------------------------------------------------------
@@ -214,12 +216,13 @@ def param_dims(cfg: ModelConfig) -> Dict:
 
 
 def _dense_body(pl, x, positions, cfg: ModelConfig, is_global,
-                cache: Optional[KVCache], cache_pos, cross_kv, cross_p):
+                cache: Optional[KVCache], cache_pos, cross_kv, cross_p,
+                block_table=None, lengths=None):
     """One dense/moe layer. Returns (x, new_kv, aux)."""
     h, new_kv = attention_apply(
         pl["attn"], rms_norm(x, pl["ln1"], cfg.norm_eps), cfg,
         positions=positions, is_global=is_global, cache=cache,
-        cache_pos=cache_pos)
+        cache_pos=cache_pos, block_table=block_table, lengths=lengths)
     x = constrain(x + h, ("batch", "seq", "embed_act"))
     if cross_p is not None:
         hc, _ = attention_apply(
@@ -797,5 +800,166 @@ def decode_step(params, cfg: ModelConfig, tokens, cache):
         new_cache.update(**_kv_entries(kvs))
 
     new_cache["pos"] = pos + 1
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    return _logits(params, cfg, x)[:, 0], new_cache
+
+
+# ---------------------------------------------------------------------------
+# Serving: paged KV pool (continuous batching)
+# ---------------------------------------------------------------------------
+
+
+def _require_paged_arch(cfg: ModelConfig):
+    """The paged decode path covers plain dense decoder-only stacks.
+
+    Hybrid/SSM towers carry recurrent state (not paged), encoder-decoder
+    and vision archs have prefill-time side inputs, and MoE routing
+    couples tokens across the batch (expert capacity + per-expert-slice
+    quantization scales), which would break the continuous engine's
+    traffic-invariance contract. All of them keep the dense group engine.
+    """
+    if (cfg.is_hybrid or cfg.is_ssm_only or cfg.encoder_layers
+            or cfg.vision_prefix or cfg.is_moe):
+        raise NotImplementedError(
+            "paged decode supports plain dense attention-only stacks "
+            "(no SSM/hybrid, encoder-decoder, vision prefix, or MoE)")
+    if not cfg.quant.quantized_kv:
+        raise ValueError("paged decode requires quant.kv_cache='packed' "
+                         "(the pool stores packed FP8 codes)")
+
+
+def init_paged_cache(cfg: ModelConfig, slots: int, max_len: int,
+                     n_blocks: int):
+    """Allocate the paged decode state: shared block pool + slot tables.
+
+    Unlike :func:`init_cache` (one dense cache per batch), the paged
+    cache is a single physical pool of ``n_blocks`` KV blocks (block
+    size = ``cfg.quant.block_k``, the flash kernel's chunk) shared by
+    ``slots`` independent decode slots. Each slot owns a row of
+    ``block_table`` (logical block -> physical block, width
+    ``ceil(max_len / block_k)``) and a ``pos`` entry (its next write
+    position; ``pos == 0`` marks a free slot). Block 0 is the reserved
+    trash block (``quant.TRASH_BLOCK``): free slots' zeroed table rows
+    scatter their dead appends there, and the allocator never hands it
+    out. Returns ``(cache, dims)`` like :func:`init_cache`.
+    """
+    _require_paged_arch(cfg)
+    bs = cfg.quant.block_k
+    nb = -(-max_len // bs)
+    La = _n_attn_layers(cfg)
+    pool = init_paged_kv((La,), n_blocks, cfg.n_kv_heads, bs, cfg.head_dim)
+    cache: Dict[str, Any] = {
+        "k": pool.k_codes, "v": pool.v_codes,
+        "k_scale": pool.k_scale, "v_scale": pool.v_scale,
+        "block_table": jnp.zeros((slots, nb), jnp.int32),
+        "pos": jnp.zeros((slots,), jnp.int32),
+    }
+    d = ("layers", "blocks", "kv_heads", "block", "head_dim")
+    dims: Dict[str, Any] = {"k": d, "v": d, "k_scale": d[:-1],
+                            "v_scale": d[:-1],
+                            "block_table": ("slots", "table"),
+                            "pos": ("slots",)}
+    return cache, dims
+
+
+def _paged_kv_stack(cache) -> PagedKVCache:
+    return PagedKVCache(cache["k"], cache["v"], cache["k_scale"],
+                        cache["v_scale"])
+
+
+def _paged_kv_entries(kv: PagedKVCache) -> Dict[str, Any]:
+    return {"k": kv.k_codes, "v": kv.v_codes,
+            "k_scale": kv.k_scale, "v_scale": kv.v_scale}
+
+
+def adopt_slot(cache, prefill_cache, slot, phys):
+    """Copy a batch-1 dense prefill cache into pool blocks; activate slot.
+
+    ``prefill_cache`` is the packed dense cache produced by
+    :func:`prefill` at batch 1 (planes ``(La, 1, KV, S, hd)`` with ``S``
+    a multiple of the block size — :func:`init_cache` rounds the
+    sequence axis up to ``block_k``). ``phys`` is the slot's full
+    physical-block table row ``(nb,)`` int32: the first ``S // block``
+    entries receive the prefill content, the remaining *allocated*
+    entries are decode headroom, and unallocated tail entries must be
+    ``TRASH_BLOCK``. ``slot``/``phys`` and the prefill planes are all
+    traced, so one compilation serves every (bucket, slot, block
+    assignment) combination — admission never recompiles.
+    """
+    k = cache["k"]
+    La, P, KV, bs, hd = k.shape
+    pk = prefill_cache["k"]
+    S = pk.shape[3]
+    if S % bs:
+        raise ValueError(f"prefill length {S} not a multiple of block {bs}")
+    ns = S // bs
+    phys = phys.astype(jnp.int32)
+    pb = phys[:ns]
+
+    def blocks(plane):  # (La, 1, KV, S, ...) -> (La, ns, KV, bs, ...)
+        tail = plane.shape[4:]
+        p = plane.reshape((La, KV, ns, bs) + tail)
+        return jnp.moveaxis(p, 2, 1)
+
+    new = dict(cache)
+    new["k"] = k.at[:, pb].set(blocks(pk))
+    new["v"] = cache["v"].at[:, pb].set(blocks(prefill_cache["v"]))
+    new["k_scale"] = cache["k_scale"].at[:, pb].set(
+        blocks(prefill_cache["k_scale"]))
+    new["v_scale"] = cache["v_scale"].at[:, pb].set(
+        blocks(prefill_cache["v_scale"]))
+    new["block_table"] = cache["block_table"].at[slot].set(phys)
+    new["pos"] = cache["pos"].at[slot].set(
+        prefill_cache["pos"].astype(jnp.int32))
+    return new
+
+
+def release_slot(cache, slot):
+    """Free a slot: zero its table row (-> trash block) and its pos.
+
+    Purely logical — the slot's physical blocks keep their bits until
+    the allocator reassigns them and :func:`adopt_slot` overwrites them
+    in full. Freeing therefore cannot perturb any co-resident slot.
+    """
+    new = dict(cache)
+    new["block_table"] = cache["block_table"].at[slot].set(0)
+    new["pos"] = cache["pos"].at[slot].set(0)
+    return new
+
+
+def decode_step_paged(params, cfg: ModelConfig, tokens, cache):
+    """One decode step over the paged slot pool. tokens: (slots, 1).
+
+    Returns (logits (slots, V), cache). Every slot advances through the
+    same fixed-shape computation; a free slot (``pos == 0``) walks zero
+    KV chunks (its attention output is exactly 0) and appends into the
+    trash block, so its presence cannot change a live slot's bits —
+    with ``quant.per_row_act`` the whole step is row-independent, which
+    is the continuous engine's determinism contract.
+    """
+    _require_paged_arch(cfg)
+    params = _cast_params(params, cfg)
+    B = tokens.shape[0]
+    pos = cache["pos"]
+    bt = cache["block_table"]
+    live = pos > 0
+    lengths = jnp.where(live, pos + 1, 0)
+    x = _embed_tokens(params, cfg, tokens)
+    x = constrain(x, ("batch", "seq", "embed_act"))
+    positions = pos[:, None]
+
+    flags = _global_flags(cfg)
+
+    def body(x, xs):
+        pl, isg, kvl = xs
+        x, akv, _ = _dense_body(pl, x, positions, cfg, isg, kvl, pos,
+                                None, None, block_table=bt,
+                                lengths=lengths)
+        return x, akv
+    x, kvs = jax.lax.scan(
+        body, x, (params["layers"], flags, _paged_kv_stack(cache)))
+
+    new_cache = dict(cache, **_paged_kv_entries(kvs))
+    new_cache["pos"] = jnp.where(live, pos + 1, pos)
     x = rms_norm(x, params["final_norm"], cfg.norm_eps)
     return _logits(params, cfg, x)[:, 0], new_cache

@@ -4,8 +4,10 @@
 from .calibrate import (ActivationRecorder, CalibrationTable, calibrating,
                         current_recorder)
 from .config import ACCUMS, DTYPES, KV_CACHES, QuantConfig
-from .kvcache import (QuantizedKVCache, append_kv, dequantize_kv,
-                      init_quantized_kv, kv_cache_bytes, quantize_kv)
+from .kvcache import (TRASH_BLOCK, BlockAllocator, PagedKVCache,
+                      QuantizedKVCache, append_kv, dequantize_kv,
+                      gather_paged_kv, init_paged_kv, init_quantized_kv,
+                      kv_cache_bytes, paged_append_kv, quantize_kv)
 from .prepared import (PREP_STATS, PreparedWeight, clear_prepared_cache,
                        prepare_logits_head, prepare_params, prepare_unembed,
                        prepare_weight)
@@ -23,4 +25,6 @@ __all__ = ["ACCUMS", "DTYPES", "KV_CACHES", "QuantConfig", "qmatmul",
            "clear_prepared_cache", "ActivationRecorder", "CalibrationTable",
            "calibrating", "current_recorder", "QuantizedKVCache",
            "quantize_kv", "append_kv", "init_quantized_kv",
-           "dequantize_kv", "kv_cache_bytes"]
+           "dequantize_kv", "kv_cache_bytes", "PagedKVCache",
+           "BlockAllocator", "TRASH_BLOCK", "init_paged_kv",
+           "paged_append_kv", "gather_paged_kv"]

@@ -39,6 +39,17 @@ class QuantConfig:
       act_bits / weight_bits: integer operand widths for the int paths
         (the paper sweeps 5..8, §6.2.1).
       per_channel: per-output-channel weight scales (vs per-tensor).
+      per_row_act: per-row activation scales (vs per-tensor). Each
+        ``(..., K)`` activation row is absmax-scaled independently, so a
+        row's quantized codes depend only on that row's values — no
+        coupling through a batch-wide absmax. This is what makes a
+        decode step *row-independent* end to end (KV-cache scales and
+        decode attention are already per-slice): the continuous-batching
+        engine requires it, because its determinism contract is that a
+        request's logits do not depend on which requests happen to share
+        the batch (docs/serving.md; ``tests/test_continuous.py``). Off
+        by default — per-tensor is the baseline numerics every existing
+        pin test is anchored to.
       gate_subnormal: §5.3 subnormal gating of tiny products.
       use_kernel: route through the Pallas kernel (TPU target; tests run it
         in interpret mode). False = pure-jnp emulation path (XLA-compiled,
@@ -88,6 +99,7 @@ class QuantConfig:
     act_bits: int = 8
     weight_bits: int = 8
     per_channel: bool = False
+    per_row_act: bool = False
     gate_subnormal: bool = True
     use_kernel: bool = False
     fused: bool = False
@@ -222,5 +234,10 @@ FP8_MGS_SERVE = QuantConfig(dtype="fp8_e4m3", accum="mgs_exact",
 FP8_MGS_SERVE_KV = QuantConfig(dtype="fp8_e4m3", accum="mgs_exact",
                                use_kernel=True, fused=True,
                                kv_cache="packed")
+# Continuous-batching serving preset: packed cache + per-row activation
+# scales, making every decode step row-independent — the numerics the
+# paged slot engine (launch.serve.ContinuousBatchingEngine) requires for
+# its traffic-invariant bit-identity contract.
+FP8_MGS_SERVE_PAGED = FP8_MGS_SERVE_KV.replace(per_row_act=True)
 FP8_WIDE = QuantConfig(dtype="fp8_e4m3", accum="wide")
 INT8_DMAC = QuantConfig(dtype="int8", accum="mgs_dmac")

@@ -42,7 +42,8 @@ transparently (``models.transformer``).
 
 from __future__ import annotations
 
-from typing import NamedTuple, Tuple
+from collections import deque
+from typing import List, NamedTuple, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -51,7 +52,9 @@ from repro.core.formats import (E4M3, FPFormat, decode_bits, encode_bits,
                                 round_to_format)
 
 __all__ = ["QuantizedKVCache", "quantize_kv", "append_kv",
-           "init_quantized_kv", "dequantize_kv", "kv_cache_bytes"]
+           "init_quantized_kv", "dequantize_kv", "kv_cache_bytes",
+           "PagedKVCache", "BlockAllocator", "TRASH_BLOCK",
+           "init_paged_kv", "paged_append_kv", "gather_paged_kv"]
 
 
 class QuantizedKVCache(NamedTuple):
@@ -155,6 +158,169 @@ def dequantize_kv(cache: QuantizedKVCache, fmt: FPFormat = E4M3,
     k = decode_bits(cache.k_codes, fmt, jnp.float32) * cache.k_scale[..., None]
     v = decode_bits(cache.v_codes, fmt, jnp.float32) * cache.v_scale[..., None]
     return k.astype(dtype), v.astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Paged layout — block tables over the same packed code + scale planes
+# ---------------------------------------------------------------------------
+
+#: Physical block 0 is the **trash block**: free slots keep zeroed block
+#: tables, so their (gated, never-read) decode appends land here instead
+#: of corrupting a live slot's blocks. Its *content* is scratch — several
+#: free slots may scatter to the same (block, offset) in one step, and
+#: XLA leaves the winner unspecified — but nothing ever reads it: the
+#: flash kernel gates every chunk of a ``live == 0`` slice off, and
+#: :class:`BlockAllocator` never hands block 0 out.
+TRASH_BLOCK = 0
+
+
+class PagedKVCache(NamedTuple):
+    """Packed-code KV planes chopped into a physical block pool.
+
+    The paged twin of :class:`QuantizedKVCache` for continuous-batching
+    serving: the sequence axis is split into ``block_size`` tiles, and a
+    slot's logical cache is whatever pool blocks its block table names —
+    so admitting or releasing a request moves *table entries*, never
+    cache bytes, and the pool is shared by every slot. The block size
+    equals the flash kernel's chunk (``QuantConfig.block_k``), so each
+    physical block is exactly one kernel tile
+    (``kernels.mgs_paged_flash_attention`` walks the table directly via
+    scalar prefetch).
+
+    Per-entry scales carry over unchanged from the dense layout — they
+    are what keep appends O(new) and old codes bit-frozen — and the head
+    axis still precedes the in-block position axis, so the kernel's
+    ``(P * KV, bs, hd)`` pool view is a pure reshape.
+    """
+
+    k_codes: jnp.ndarray   # (..., P, KV, bs, hd) uint8
+    v_codes: jnp.ndarray   # (..., P, KV, bs, hd) uint8
+    k_scale: jnp.ndarray   # (..., P, KV, bs) float32
+    v_scale: jnp.ndarray   # (..., P, KV, bs) float32
+
+
+class BlockAllocator:
+    """Deterministic host-side FIFO pool allocator.
+
+    Pure Python bookkeeping (never traced): the engine allocates blocks
+    at admission and returns them at release. FIFO reuse keeps the
+    assignment a pure function of the admission/release *sequence* — two
+    replicas replaying the same schedule hand every request the same
+    physical blocks, which keeps even the (value-irrelevant) table
+    contents deterministic. Block :data:`TRASH_BLOCK` is reserved and
+    never handed out.
+    """
+
+    def __init__(self, n_blocks: int):
+        if n_blocks < 2:
+            raise ValueError(f"need >= 2 blocks (1 is the trash block), "
+                             f"got {n_blocks}")
+        self._free: deque = deque(range(1, n_blocks))
+
+    @property
+    def n_free(self) -> int:
+        return len(self._free)
+
+    def alloc(self, n: int) -> List[int]:
+        """Take ``n`` blocks (raises ``RuntimeError`` when exhausted)."""
+        if n > len(self._free):
+            raise RuntimeError(f"paged KV pool exhausted: want {n} blocks, "
+                               f"{len(self._free)} free")
+        return [self._free.popleft() for _ in range(n)]
+
+    def free(self, blocks: Sequence[int]) -> None:
+        """Return blocks to the pool (they may hold stale codes; the next
+        owner's prefill adoption overwrites every byte before its live
+        length ever covers them)."""
+        for b in blocks:
+            if b == TRASH_BLOCK:
+                raise ValueError("block 0 is the reserved trash block")
+            self._free.append(b)
+
+
+def init_paged_kv(lead, n_blocks: int, n_heads: int, block_size: int,
+                  head_dim: int) -> PagedKVCache:
+    """Allocate an all-zero block pool.
+
+    ``lead`` carries the leading axes (e.g. ``(layers,)``); the planes
+    come out ``(*lead, n_blocks, n_heads, block_size, head_dim)`` /
+    scale ``(*lead, n_blocks, n_heads, block_size)``. Zero codes/scales
+    make every unwritten entry exactly inert, same as the dense init.
+    """
+    full = tuple(lead) + (n_blocks, n_heads, block_size, head_dim)
+    srow = tuple(lead) + (n_blocks, n_heads, block_size)
+    return PagedKVCache(
+        k_codes=jnp.zeros(full, jnp.uint8),
+        v_codes=jnp.zeros(full, jnp.uint8),
+        k_scale=jnp.zeros(srow, jnp.float32),
+        v_scale=jnp.zeros(srow, jnp.float32))
+
+
+def paged_append_kv(cache: PagedKVCache, k_new, v_new, pos, block_table,
+                    fmt: FPFormat = E4M3) -> PagedKVCache:
+    """Write each slot's one new K/V entry through its block table.
+
+    The decode-step (``T == 1``) twin of :func:`append_kv`: quantize the
+    ``B`` fresh entries (per-entry scales, O(new) work) and scatter each
+    into physical block ``block_table[b, pos[b] // bs]`` at in-block
+    offset ``pos[b] % bs``. Old codes and scales are bit-frozen — the
+    scatter touches exactly one (position, head) row per slot.
+
+    Args:
+      cache: per-layer ``(P, KV, bs, hd)`` pool view.
+      k_new / v_new: ``(B, 1, KV, hd)`` fresh decode projections.
+      pos: ``(B,)`` int32 logical write positions (a free slot's
+        ``pos = 0`` lands in its zeroed table's :data:`TRASH_BLOCK`).
+      block_table: ``(B, nb)`` int32 physical block ids.
+      fmt: the cache's code format.
+
+    Returns:
+      The pool with one entry per slot replaced.
+    """
+    if k_new.shape[1] != 1:
+        raise ValueError(f"paged append is the decode step (T == 1); "
+                         f"prompts enter the pool via slot adoption "
+                         f"(models.adopt_slot), got T={k_new.shape[1]}")
+    bs = cache.k_codes.shape[-2]
+    pos = pos.astype(jnp.int32)
+    kc, ks = quantize_kv(k_new, fmt)
+    vc, vs = quantize_kv(v_new, fmt)
+    phys = jnp.take_along_axis(block_table.astype(jnp.int32),
+                               (pos // bs)[:, None], axis=1)[:, 0]
+    off = pos % bs
+    return PagedKVCache(
+        k_codes=cache.k_codes.at[phys, :, off, :].set(kc[:, 0]),
+        v_codes=cache.v_codes.at[phys, :, off, :].set(vc[:, 0]),
+        k_scale=cache.k_scale.at[phys, :, off].set(ks[:, 0]),
+        v_scale=cache.v_scale.at[phys, :, off].set(vs[:, 0]))
+
+
+def gather_paged_kv(cache: PagedKVCache,
+                    block_table) -> QuantizedKVCache:
+    """Materialize dense per-slot planes from the pool (tests / debug).
+
+    ``pool[block_table[b, j]]`` becomes positions ``[j * bs, (j+1) * bs)``
+    of slot ``b`` — the dense ``(B, KV, nb * bs, hd)`` view whose
+    dequantization must match the pre-paging cache bit for bit
+    (``tests/test_paged_kv.py``). The hot path never calls this; the
+    kernel reads the pool through the table in place.
+    """
+    bt = block_table.astype(jnp.int32)
+    B, nb = bt.shape
+    kc = jnp.take(cache.k_codes, bt.reshape(-1), axis=0)
+    vc = jnp.take(cache.v_codes, bt.reshape(-1), axis=0)
+    ks = jnp.take(cache.k_scale, bt.reshape(-1), axis=0)
+    vs = jnp.take(cache.v_scale, bt.reshape(-1), axis=0)
+    KV, bs, hd = kc.shape[1:]
+    kc = kc.reshape(B, nb, KV, bs, hd).transpose(0, 2, 1, 3, 4)
+    vc = vc.reshape(B, nb, KV, bs, hd).transpose(0, 2, 1, 3, 4)
+    ks = ks.reshape(B, nb, KV, bs).transpose(0, 2, 1, 3)
+    vs = vs.reshape(B, nb, KV, bs).transpose(0, 2, 1, 3)
+    return QuantizedKVCache(
+        k_codes=kc.reshape(B, KV, nb * bs, hd),
+        v_codes=vc.reshape(B, KV, nb * bs, hd),
+        k_scale=ks.reshape(B, KV, nb * bs),
+        v_scale=vs.reshape(B, KV, nb * bs))
 
 
 def kv_cache_bytes(batch: int, seq: int, kv_heads: int, head_dim: int, *,

@@ -93,7 +93,8 @@ def qmatmul(x, w, cfg: QuantConfig, out_dtype=None, *, bias=None,
             raise ValueError(f"PreparedWeight format {w.fmt_name!r} != "
                              f"config format {fmt.name!r}")
         margin = cfg.fp8_margin
-        qx = quantize_fp8(x, fmt, margin=margin)
+        qx = quantize_fp8(x, fmt, axis=-1 if cfg.per_row_act else None,
+                          margin=margin)
         if cfg.accum in ("mgs_exact", "mgs_dmac"):
             from .calibrate import observe
             observe(site, qx.q, fmt)
@@ -111,6 +112,12 @@ def qmatmul(x, w, cfg: QuantConfig, out_dtype=None, *, bias=None,
                 x_sigma = cfg.act_sigma(site)
                 if x_sigma is None and prepared:
                     x_sigma = w.act_sigma
+                # per-row activation scales don't fit the fused kernel's
+                # (1, N) epilogue row; rescale outside — the same f32
+                # elementwise epilogue, applied after the kernel instead
+                # of inside it (bit-identical either way, the fused
+                # epilogue contract)
+                in_kernel_epi = not cfg.per_row_act
                 out = kops.mgs_matmul(
                     qx.q, w_arg, fmt, mode, use_kernel=cfg.use_kernel,
                     fused=cfg.fused, gate_subnormal=cfg.gate_subnormal,
@@ -119,7 +126,11 @@ def qmatmul(x, w, cfg: QuantConfig, out_dtype=None, *, bias=None,
                     flush_period=_exact_flush_period(
                         cfg, w.limb_sigma if prepared else None, x_sigma),
                     schedule=cfg.schedule,
-                    scale=scale, bias=bias, activation=activation)
+                    scale=scale if in_kernel_epi else None,
+                    bias=bias if in_kernel_epi else None,
+                    activation=activation if in_kernel_epi else "none")
+                if not in_kernel_epi:
+                    out = kops.apply_epilogue(out, scale, bias, activation)
                 return out.astype(out_dtype)
             out = kops.mgs_matmul(
                 qx.q, w_arg, fmt, mode, use_kernel=cfg.use_kernel,
@@ -145,7 +156,9 @@ def qmatmul(x, w, cfg: QuantConfig, out_dtype=None, *, bias=None,
         if prepared:
             raise ValueError("PreparedWeight requires an fp8 QuantConfig")
         bits = cfg.int_bits
-        qx = quantize_int(x, min(bits, cfg.act_bits), symmetric=True)
+        qx = quantize_int(x, min(bits, cfg.act_bits),
+                          axis=-1 if cfg.per_row_act else None,
+                          symmetric=True)
         qw = quantize_int(w, min(bits, cfg.weight_bits),
                           axis=0 if cfg.per_channel else None, symmetric=True)
         scale = qx.scale * qw.scale

@@ -1,0 +1,353 @@
+"""Paged-KV block pool + masked-chunk ragged attention (ISSUE-7).
+
+Seeded, derandomized property-style suites (hypothesis is not in the
+image, so each property runs over a deterministic family of generated
+cases) pinning the contracts the continuous-batching engine leans on:
+
+* :class:`~repro.quant.kvcache.BlockAllocator` — alloc/free round-trips,
+  FIFO determinism (block assignment is a pure function of the
+  admission/release sequence), exhaustion, and the reserved trash block;
+* :func:`~repro.quant.kvcache.paged_append_kv` — append-only bit-freeze:
+  every pool byte outside the one written (position, head) row carries
+  through untouched, including across block boundaries;
+* dense/paged equivalence — ``dequantize_kv(gather_paged_kv(...))`` is
+  bitwise-equal to dequantizing the dense :func:`append_kv` cache at
+  arbitrary ragged lengths, whatever blocks the allocator handed out;
+* :func:`~repro.kernels.mgs_attention.mgs_paged_flash_attention` — the
+  Pallas kernel and the pure-jnp reference agree bitwise at ragged
+  length patterns including length-0 (dead slot) and exact
+  block-boundary lengths, and both match the dense kernel over the
+  gathered cache;
+* the masked-chunk early-exit (``lengths=``) on the dense entry point is
+  bitwise-identical to walking the zero-inert tail in full.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.formats import E4M3
+from repro.kernels.mgs_attention import (mgs_flash_attention,
+                                         mgs_flash_attention_ref,
+                                         mgs_paged_flash_attention)
+from repro.quant.kvcache import (BlockAllocator, QuantizedKVCache,
+                                 TRASH_BLOCK, append_kv, dequantize_kv,
+                                 gather_paged_kv, init_paged_kv,
+                                 init_quantized_kv, paged_append_kv,
+                                 quantize_kv)
+from repro.quant.quantize import quantize_fp8
+
+
+# ---------------------------------------------------------------------------
+# BlockAllocator properties
+# ---------------------------------------------------------------------------
+
+
+def test_allocator_roundtrip_restores_pool():
+    """alloc/free round-trips conserve the pool and never hand out the
+    trash block or a block twice."""
+    rng = np.random.default_rng(11)
+    for case in range(20):
+        n_blocks = int(rng.integers(3, 40))
+        alloc = BlockAllocator(n_blocks)
+        assert alloc.n_free == n_blocks - 1
+        held = []
+        for _ in range(30):
+            if held and rng.random() < 0.4:
+                alloc.free(held.pop(rng.integers(0, len(held))))
+                continue
+            want = int(rng.integers(1, 4))
+            if want > alloc.n_free:
+                continue
+            got = alloc.alloc(want)
+            assert TRASH_BLOCK not in got
+            flat = [b for blocks in held for b in blocks]
+            assert not set(got) & set(flat), "block handed out twice"
+            held.append(got)
+        for blocks in held:
+            alloc.free(blocks)
+        assert alloc.n_free == n_blocks - 1
+
+
+def test_allocator_fifo_is_pure_function_of_schedule():
+    """Two allocators replaying the same alloc/free sequence hand out
+    identical block lists — the replica bit-determinism precondition."""
+    rng = np.random.default_rng(5)
+    script = []
+    for _ in range(40):
+        if script and rng.random() < 0.35:
+            script.append(("free", int(rng.integers(0, len(script)))))
+        else:
+            script.append(("alloc", int(rng.integers(1, 3))))
+
+    def replay():
+        alloc = BlockAllocator(64)
+        got, live = [], {}
+        for i, (op, arg) in enumerate(script):
+            if op == "alloc":
+                blocks = alloc.alloc(arg)
+                live[i] = blocks
+                got.append(tuple(blocks))
+            elif arg in live:
+                alloc.free(live.pop(arg))
+        return got
+
+    assert replay() == replay()
+
+
+def test_allocator_exhaustion_and_trash_block():
+    alloc = BlockAllocator(4)  # blocks 1..3 allocatable
+    got = alloc.alloc(3)
+    assert sorted(got) == [1, 2, 3]
+    with pytest.raises(RuntimeError, match="exhausted"):
+        alloc.alloc(1)
+    with pytest.raises(ValueError, match="trash block"):
+        alloc.free([TRASH_BLOCK])
+    with pytest.raises(ValueError, match=">= 2 blocks"):
+        BlockAllocator(1)
+    alloc.free(got)
+    assert alloc.n_free == 3
+
+
+# ---------------------------------------------------------------------------
+# paged append: bit-freeze + dense equivalence
+# ---------------------------------------------------------------------------
+
+_KV, _HD, _BS = 2, 8, 4
+
+
+def test_paged_append_bit_freezes_everything_else(rng):
+    """A decode append touches exactly one (position, head) row per slot;
+    every other pool byte — other blocks, other offsets, other heads —
+    is bit-identical, including when slots sit at block boundaries
+    (offset 0 of a fresh block)."""
+    B = 3
+    P = 10
+    pool = init_paged_kv((), P, _KV, _BS, _HD)
+    # pre-fill the pool with recognizable garbage so freezes are visible
+    pool = pool._replace(
+        k_codes=jnp.asarray(rng.integers(0, 255, pool.k_codes.shape),
+                            jnp.uint8),
+        v_codes=jnp.asarray(rng.integers(0, 255, pool.v_codes.shape),
+                            jnp.uint8),
+        k_scale=jnp.asarray(rng.normal(0, 1, pool.k_scale.shape)
+                            .astype(np.float32)),
+        v_scale=jnp.asarray(rng.normal(0, 1, pool.v_scale.shape)
+                            .astype(np.float32)))
+    table = np.array([[1, 2, 3], [4, 5, 6], [7, 8, 9]], np.int32)
+    # positions: mid-block, block boundary (offset 0), last offset
+    for pos in (np.array([1, 4, 11]), np.array([0, 8, 3])):
+        k_new = jnp.asarray(rng.normal(0, 1, (B, 1, _KV, _HD))
+                            .astype(np.float32))
+        v_new = jnp.asarray(rng.normal(0, 1, (B, 1, _KV, _HD))
+                            .astype(np.float32))
+        new = paged_append_kv(pool, k_new, v_new, jnp.asarray(pos),
+                              jnp.asarray(table), E4M3)
+        touched = {(int(table[b, p // _BS]), int(p % _BS))
+                   for b, p in enumerate(pos)}
+        for plane in ("k_codes", "v_codes", "k_scale", "v_scale"):
+            a = np.asarray(getattr(pool, plane))
+            c = np.asarray(getattr(new, plane))
+            mask = np.ones(a.shape, bool)
+            for blk, off in touched:
+                mask[blk, :, off] = False
+            np.testing.assert_array_equal(a[mask], c[mask])
+        # and the written row equals quantizing the entry in isolation
+        kc, ks = quantize_kv(k_new, E4M3)
+        for b, p in enumerate(pos):
+            blk, off = int(table[b, p // _BS]), int(p % _BS)
+            np.testing.assert_array_equal(
+                np.asarray(new.k_codes[blk, :, off]),
+                np.asarray(kc[b, 0]))
+            np.testing.assert_array_equal(
+                np.asarray(new.k_scale[blk, :, off]),
+                np.asarray(ks[b, 0]))
+
+
+def test_paged_append_requires_single_token():
+    pool = init_paged_kv((), 4, _KV, _BS, _HD)
+    k = jnp.zeros((1, 2, _KV, _HD))
+    with pytest.raises(ValueError, match="adopt_slot"):
+        paged_append_kv(pool, k, k, jnp.zeros((1,), jnp.int32),
+                        jnp.zeros((1, 2), jnp.int32), E4M3)
+
+
+def test_paged_dense_dequantize_bitwise_ragged(rng):
+    """The headline layout property: build the same logical caches twice
+    — densely via append_kv and paged via allocator blocks + interleaved
+    decode appends — at ragged length families (length-0, partial block,
+    exact block boundary, full table), and require
+    dequantize(gather(paged)) == dequantize(dense) bit for bit."""
+    nb = 4
+    S = nb * _BS
+    for case, lengths in enumerate([(0, 5, 16, 9), (4, 0, 13, 8),
+                                    (16, 16, 0, 1), (3, 12, 7, 15)]):
+        B = len(lengths)
+        alloc = BlockAllocator(B * nb + 1)
+        pool = init_paged_kv((), B * nb + 1, _KV, _BS, _HD)
+        table = np.zeros((B, nb), np.int32)
+        denses = [init_quantized_kv((1,), _KV, S, _HD) for _ in range(B)]
+        for b, ln in enumerate(lengths):
+            if ln:
+                blocks = alloc.alloc(-(-ln // _BS))
+                table[b, :len(blocks)] = blocks
+        # grow slots token by token, round-robin, so writes from
+        # different slots interleave in pool history (order-free)
+        for step in range(max(lengths)):
+            for b, ln in enumerate(lengths):
+                if step >= ln:
+                    continue
+                k = jnp.asarray(rng.normal(0, 2, (1, 1, _KV, _HD))
+                                .astype(np.float32))
+                v = jnp.asarray(rng.normal(0, 2, (1, 1, _KV, _HD))
+                                .astype(np.float32))
+                denses[b] = append_kv(denses[b], k, v, step, E4M3)
+                pool = paged_append_kv(
+                    pool, k, v, jnp.asarray([step], jnp.int32),
+                    jnp.asarray(table[b:b + 1]), E4M3)
+        dense = QuantizedKVCache(*[
+            jnp.concatenate([getattr(d, f) for d in denses])
+            for f in QuantizedKVCache._fields])
+        kd_p, vd_p = dequantize_kv(gather_paged_kv(pool,
+                                                   jnp.asarray(table)), E4M3)
+        kd_d, vd_d = dequantize_kv(dense, E4M3)
+        for b, ln in enumerate(lengths):
+            np.testing.assert_array_equal(
+                np.asarray(kd_p[b, :, :ln]), np.asarray(kd_d[b, :, :ln]),
+                err_msg=f"case {case} slot {b} K")
+            np.testing.assert_array_equal(
+                np.asarray(vd_p[b, :, :ln]), np.asarray(vd_d[b, :, :ln]),
+                err_msg=f"case {case} slot {b} V")
+
+
+# ---------------------------------------------------------------------------
+# ragged / paged kernel bitwise pins
+# ---------------------------------------------------------------------------
+
+_RAGGED_PATTERNS = [
+    (0, 7, 16, 3),     # dead slot + partial + exact boundary + tiny
+    (16, 0, 0, 12),    # one full, two dead
+    (1, 15, 8, 16),    # minimal + boundary-1 + mid-boundary + full
+    (5, 5, 5, 5),      # uniform partial
+]
+
+
+def _paged_case(rng, lengths, nb=4, bs=16, D=16, T=1, shuffle_seed=0):
+    """Build a shuffled physical pool + tables + logical scale/bias rows
+    for the given ragged lengths. Returns kernel args for both the paged
+    entry and the equivalent dense contiguous cache."""
+    N = len(lengths)
+    S = nb * bs
+    P = N * nb + 1  # + trash block
+    k = rng.normal(0, 1, (N, S, D)).astype(np.float32)
+    v = rng.normal(0, 1, (N, S, D)).astype(np.float32)
+    q = rng.normal(0, 1, (N, T, D)).astype(np.float32)
+    # zero the dead tails so early-exit == full-walk holds exactly
+    for n, ln in enumerate(lengths):
+        k[n, ln:] = 0.0
+        v[n, ln:] = 0.0
+    kc, ks = quantize_kv(jnp.asarray(k), E4M3)
+    vc, vs = quantize_kv(jnp.asarray(v), E4M3)
+    ks = jnp.where(jnp.arange(S)[None] < jnp.asarray(lengths)[:, None],
+                   ks, 0.0)
+    vs = jnp.where(jnp.arange(S)[None] < jnp.asarray(lengths)[:, None],
+                   vs, 0.0)
+    qt = quantize_fp8(jnp.asarray(q).reshape(N, T * D), E4M3, axis=1)
+    qv = qt.q.reshape(N, T, D)
+    qk = jnp.broadcast_to(qt.scale, (N, S)) * ks * (D ** -0.5)
+    bias = np.where(np.arange(S)[None] < np.asarray(lengths)[:, None],
+                    0.0, -1e30).astype(np.float32)
+    # scatter logical tiles into a shuffled physical pool; dead slots
+    # keep zeroed tables (pointing at the trash block)
+    shuf = np.random.default_rng(shuffle_seed)
+    order = 1 + shuf.permutation(P - 1)
+    k_pool = np.zeros((P, bs, D), np.uint8)
+    v_pool = np.zeros((P, bs, D), np.uint8)
+    bt = np.zeros((N, nb), np.int32)
+    nxt = 0
+    for n, ln in enumerate(lengths):
+        for j in range(-(-ln // bs)):
+            phys = int(order[nxt])
+            nxt += 1
+            bt[n, j] = phys
+            k_pool[phys] = np.asarray(kc[n, j * bs:(j + 1) * bs])
+            v_pool[phys] = np.asarray(vc[n, j * bs:(j + 1) * bs])
+    live = jnp.asarray(lengths, jnp.int32)
+    return (qv, jnp.asarray(k_pool), jnp.asarray(v_pool),
+            jnp.asarray(bt), live, qk, vs, jnp.asarray(bias),
+            (kc, vc, bs))
+
+
+@pytest.mark.parametrize("lengths", _RAGGED_PATTERNS)
+def test_paged_kernel_bitwise_vs_ref(rng, lengths):
+    """Pallas paged kernel == pure-jnp reference, bit for bit, at ragged
+    length patterns including length-0 and block-boundary lengths."""
+    qv, kp, vp, bt, live, qk, vs, bias, _ = _paged_case(rng, lengths)
+    got_k = mgs_paged_flash_attention(qv, kp, vp, bt, live, qk, vs, bias,
+                                      E4M3, use_kernel=True)
+    got_r = mgs_paged_flash_attention(qv, kp, vp, bt, live, qk, vs, bias,
+                                      E4M3, use_kernel=False)
+    np.testing.assert_array_equal(np.asarray(got_k), np.asarray(got_r))
+    # dead slots produce exactly-zero output rows
+    for n, ln in enumerate(lengths):
+        if ln == 0:
+            np.testing.assert_array_equal(np.asarray(got_k[n]),
+                                          np.zeros_like(got_k[n]))
+
+
+@pytest.mark.parametrize("lengths", _RAGGED_PATTERNS)
+def test_paged_kernel_matches_dense_gathered(rng, lengths):
+    """Walking a shuffled physical pool through block tables is
+    bitwise-identical to the dense kernel over the contiguous cache with
+    the same ``lengths`` — block placement never changes a bit."""
+    qv, kp, vp, bt, live, qk, vs, bias, (kc, vc, bs) = _paged_case(
+        rng, lengths, shuffle_seed=3)
+    paged = mgs_paged_flash_attention(qv, kp, vp, bt, live, qk, vs, bias,
+                                      E4M3, use_kernel=True)
+    dense = mgs_flash_attention(qv, kc, vc, qk, vs, bias, E4M3, chunk=bs,
+                                use_kernel=True, lengths=live)
+    np.testing.assert_array_equal(np.asarray(paged), np.asarray(dense))
+
+
+@pytest.mark.parametrize("lengths", _RAGGED_PATTERNS)
+def test_dense_early_exit_bitwise_vs_full_walk(rng, lengths):
+    """The masked-chunk early-exit (``lengths=``) over a zero-inert tail
+    is bitwise-identical to walking every chunk, on both tiers."""
+    qv, _, _, _, live, qk, vs, bias, (kc, vc, bs) = _paged_case(
+        rng, lengths)
+    for use_kernel in (False, True):
+        early = mgs_flash_attention(qv, kc, vc, qk, vs, bias, E4M3,
+                                    chunk=bs, use_kernel=use_kernel,
+                                    lengths=live)
+        full = mgs_flash_attention(qv, kc, vc, qk, vs, bias, E4M3,
+                                   chunk=bs, use_kernel=use_kernel,
+                                   lengths=None)
+        np.testing.assert_array_equal(np.asarray(early), np.asarray(full))
+    ref = mgs_flash_attention_ref(qv, kc, vc, qk, vs, bias, E4M3,
+                                  chunk=bs, lengths=live)
+    kern = mgs_flash_attention(qv, kc, vc, qk, vs, bias, E4M3, chunk=bs,
+                               use_kernel=True, lengths=live)
+    np.testing.assert_array_equal(np.asarray(ref), np.asarray(kern))
+
+
+def test_paged_kernel_ignores_trash_and_stale_blocks(rng):
+    """Garbage in the trash block and in unreferenced (freed, stale)
+    blocks never changes a live slot's output: rewrite every block the
+    live tables do not name with random bytes and require bit-identity."""
+    lengths = (7, 0, 16)
+    qv, kp, vp, bt, live, qk, vs, bias, _ = _paged_case(rng, lengths)
+    before = mgs_paged_flash_attention(qv, kp, vp, bt, live, qk, vs,
+                                       bias, E4M3, use_kernel=True)
+    bs = kp.shape[1]
+    used = set()
+    for n, ln in enumerate(lengths):
+        used |= set(np.asarray(bt)[n, :-(-ln // bs)].tolist())
+    kp2, vp2 = np.asarray(kp).copy(), np.asarray(vp).copy()
+    for p in range(kp2.shape[0]):
+        if p not in used:
+            kp2[p] = rng.integers(0, 255, kp2[p].shape)
+            vp2[p] = rng.integers(0, 255, vp2[p].shape)
+    after = mgs_paged_flash_attention(qv, jnp.asarray(kp2),
+                                      jnp.asarray(vp2), bt, live, qk, vs,
+                                      bias, E4M3, use_kernel=True)
+    np.testing.assert_array_equal(np.asarray(before), np.asarray(after))
