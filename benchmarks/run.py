@@ -18,7 +18,7 @@ def main() -> None:
     from . import (decode_bench, failover, fig3_dot_error, fig4_overflow,
                    fig5_markov, fig9_pareto, kernel_bench,
                    replica_throughput, roofline_table, serving_bench,
-                   table1_accuracy, table3_energy)
+                   spec_bench, table1_accuracy, table3_energy)
     suites = {
         "fig3": fig3_dot_error.run,
         "fig4": fig4_overflow.run,
@@ -32,6 +32,7 @@ def main() -> None:
         "decode": decode_bench.run,
         "failover": failover.run,
         "serving": serving_bench.run,
+        "spec": spec_bench.run,
     }
     want = sys.argv[1:] or list(suites)
     csv = Csv()

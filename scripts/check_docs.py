@@ -37,7 +37,12 @@ LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
 # tolerance layer is public serving API and must stay documented.
 API_MODULES = ("repro.launch.serve", "repro.launch.replica",
                "repro.quant.kvcache", "repro.runtime.checkpoint",
-               "repro.runtime.elastic", "repro.runtime.fault_tolerance")
+               "repro.runtime.elastic", "repro.runtime.fault_tolerance",
+               # joined with ISSUE-8: the speculative-decoding surface —
+               # the paged model steps (draft/verify/rewind) and the
+               # multi-query verify attention kernel are public serving
+               # API and must stay documented.
+               "repro.models", "repro.kernels.mgs_attention")
 API_SKIP = {"main"}
 
 

@@ -35,6 +35,9 @@ XLA_FLAGS="--xla_force_host_platform_device_count=8" \
 # Continuous-batching shard (ISSUE-7): the ragged-traffic determinism
 # harness on an 8-device mesh — slot-level admission over the paged KV
 # pool, per-request tokens identical to the single-device engine.
+# ISSUE-8 rides the same shard: speculative draft/verify rounds on the
+# forced-8-device mesh, tokens bitwise equal to 1-device sequential —
+# the shard-layout and speculation invariances compose.
 XLA_FLAGS="--xla_force_host_platform_device_count=8" \
     python -m pytest -x -q -m multidevice tests/test_continuous.py
 
@@ -51,6 +54,12 @@ python -m benchmarks.run failover
 # continuous batching vs fixed groups — p50/p99 latency + tok/s;
 # refreshes BENCH_serving.json.
 python -m benchmarks.run serving
+
+# Speculative-decoding smoke (ISSUE-8): sequential vs draft/verify
+# rounds on the same burst, asserting bitwise-equal tokens per row;
+# the fast sweep keeps CI short — the full sweep (python -m
+# benchmarks.run spec) refreshes the tracked BENCH_spec.json.
+REPRO_SPEC_BENCH_FAST=1 python -m benchmarks.run spec
 
 # Continuous-batching CLI smoke: slot-level serving end to end through
 # the __main__ entry point (FP8_MGS_SERVE_PAGED preset, reduced tiles).

@@ -29,7 +29,8 @@ against.
 from . import ops, ref
 from .mgs_attention import (flash_chunk_limit, mgs_flash_attention,
                             mgs_flash_attention_ref,
-                            mgs_paged_flash_attention)
+                            mgs_paged_flash_attention,
+                            mgs_paged_verify_attention)
 from .mgs_matmul import (ACTIVATIONS, WS_STRIPE_BUDGET_BYTES, limb_decompose,
                          mgs_matmul_dmac_pallas,
                          mgs_matmul_exact_fused_pallas,
@@ -41,4 +42,5 @@ __all__ = ["ops", "ref", "ACTIVATIONS", "WS_STRIPE_BUDGET_BYTES",
            "mgs_matmul_exact_fused_pallas", "mgs_matmul_exact_pallas",
            "worst_case_flush_period", "ws_stripe_bytes",
            "mgs_flash_attention", "mgs_flash_attention_ref",
-           "mgs_paged_flash_attention", "flash_chunk_limit"]
+           "mgs_paged_flash_attention", "mgs_paged_verify_attention",
+           "flash_chunk_limit"]

@@ -78,10 +78,14 @@ from .mgs_matmul import (_CompilerParams, _decode_limbs, _limb_split,
                          _round_decompose_e4m3)
 
 __all__ = ["mgs_flash_attention", "mgs_flash_attention_ref",
-           "mgs_paged_flash_attention", "flash_chunk_limit"]
+           "mgs_paged_flash_attention", "mgs_paged_verify_attention",
+           "flash_chunk_limit"]
 
 _TINY = 1e-30
 _MAX_PAIR = _N_LIMBS * (1 << (_LIMB_BASE - 1)) ** 2  # per-K-elem class bound
+# row count at which _class_dots switches from 9 separate limb-pair dots
+# to the single stacked GEMM (see its docstring; both are bit-identical)
+_STACK_MIN_ROWS = 8
 
 
 def flash_chunk_limit() -> int:
@@ -105,19 +109,53 @@ def _combine_classes(accs):
 
 
 def _class_dots(lx, lw, contract):
-    """9 limb-pair integer contractions, summed per weight class a+b.
+    """Limb-pair integer contractions, summed per weight class a+b.
 
     ``contract``: ((x_dim,), (w_dim,)) dot_general contracting dims —
     (1,),(1,) for q @ k^T (both operands are (rows, D)); (1,),(0,) for
     p @ v ((T, chunk) x (chunk, D)). int32 sums are exact.
+
+    Two bit-identical schedules, picked by the static row count:
+
+    * single-row slices (plain decode, T = 1) run the 9 limb-pair dots
+      as separate matvec-shaped contractions — fastest when each dot is
+      tiny;
+    * multi-row slices (the speculative verify's T x R query block) run
+      ONE stacked contraction: the limb planes concatenate along each
+      operand's non-contracted axis, a single integer GEMM produces
+      every pair product, and the 9 blocks are sliced back out and
+      summed per class, paying the per-call GEMM overhead once instead
+      of 9 times (measured ~1.7x on the whole verify round at the
+      emulation tier).
+
+    Integer sums are exact under any partition, so the class totals —
+    and everything downstream — are bit-identical either way; the gate
+    is on a compile-time shape and can never change an output.
     """
+    (xd,), (wd,) = contract
+    if lx[0].shape[1 - xd] < _STACK_MIN_ROWS:
+        accs = [None] * _N_CLASSES
+        for a in range(_N_LIMBS):
+            for b in range(_N_LIMBS):
+                d = jax.lax.dot_general(lx[a], lw[b],
+                                        (contract, ((), ())),
+                                        preferred_element_type=jnp.int32)
+                c = a + b
+                accs[c] = d if accs[c] is None else accs[c] + d
+        return accs
+    xs = jnp.concatenate(list(lx), axis=1 - xd)
+    ws = jnp.concatenate(list(lw), axis=1 - wd)
+    d = jax.lax.dot_general(xs, ws, (contract, ((), ())),
+                            preferred_element_type=jnp.int32)
+    xn = lx[0].shape[1 - xd]
+    wn = lw[0].shape[1 - wd]
     accs = [None] * _N_CLASSES
     for a in range(_N_LIMBS):
         for b in range(_N_LIMBS):
-            d = jax.lax.dot_general(lx[a], lw[b], (contract, ((), ())),
-                                    preferred_element_type=jnp.int32)
+            blk = jax.lax.slice(d, (a * xn, b * wn),
+                                ((a + 1) * xn, (b + 1) * wn))
             c = a + b
-            accs[c] = d if accs[c] is None else accs[c] + d
+            accs[c] = blk if accs[c] is None else accs[c] + blk
     return accs
 
 
@@ -147,11 +185,16 @@ def _attn_tile_step(lq, k_codes, v_codes, qk_row, v_row, bias, m, l, o,
     Args:
       lq: 3 decoded query limb planes, each (T, D) int8.
       k_codes / v_codes: (chunk, D) uint8 packed cache codes.
-      qk_row: (1, chunk) f32 per-key score scale (sigma_q * k_scale[s] *
-        head_dim**-0.5).
-      v_row: (1, chunk) f32 per-key value scale.
-      bias: (1, chunk) f32 additive mask row, broadcast over the T rows
-        (decode masks depend only on the key position).
+      qk_row: (1 | T, chunk) f32 per-key score scale (sigma_q *
+        k_scale[s] * head_dim**-0.5) — one shared row, or one row per
+        query row (the multi-query verify path, where each token
+        carries its own quantization scale).
+      v_row: (1 | T, chunk) f32 per-key value scale.
+      bias: (1 | T, chunk) f32 additive mask row — shared when masks
+        depend only on the key position (sequential decode), per row
+        when each token has its own causal horizon (verify). Every op
+        that consumes these is elementwise over rows, so a shared row
+        is bitwise the per-row broadcast.
       m / l: (T, 1) f32 running row max / denominator.
       o: (T, D) f32 running (unnormalized) output.
 
@@ -224,8 +267,8 @@ def _flash_kernel(bt_ref, live_ref, last_ref, qc_ref, kp_ref, vp_ref,
     def _update():
         lq = [q_limbs[a] for a in range(_N_LIMBS)]
         m_new, l_new, o_new = _attn_tile_step(
-            lq, kp_ref[0], vp_ref[0], qk_ref[...], vs_ref[...],
-            bias_ref[...], m_ref[...], l_ref[...], acc_ref[...], fmt)
+            lq, kp_ref[0], vp_ref[0], qk_ref[0], vs_ref[0],
+            bias_ref[0], m_ref[...], l_ref[...], acc_ref[...], fmt)
         m_ref[...] = m_new
         l_ref[...] = l_new
         acc_ref[...] = o_new
@@ -241,11 +284,13 @@ def _flash_pallas(q_codes, k_pool, v_pool, bt, live, qk_scale, v_scale,
 
     ``k_pool`` / ``v_pool`` are physical ``(P, chunk, D)`` tile pools;
     ``bt[n, j]`` names slice ``n``'s ``j``-th tile. The scale/bias rows
-    stay *logical* ``(N, nb * chunk)`` — the caller gathers them through
-    the table (they are ~1/D of the code traffic), which keeps the
-    kernel's scalar-prefetch surface to the table + live lengths.
+    stay *logical* ``(N, rs, nb * chunk)`` with ``rs in (1, T)`` — the
+    caller gathers them through the table (they are ~1/D of the code
+    traffic), which keeps the kernel's scalar-prefetch surface to the
+    table + live lengths.
     """
     N, T, D = q_codes.shape
+    rs = qk_scale.shape[1]
     nb = bt.shape[1]
     chunk = k_pool.shape[1]
     last = _last_live_chunk(live, chunk)
@@ -256,7 +301,7 @@ def _flash_pallas(q_codes, k_pool, v_pool, bt, live, qk_scale, v_scale,
 
     def _at_row(n, j, bt_, lv, lt):
         del bt_, lv
-        return (n, jnp.minimum(j, lt[n]))
+        return (n, 0, jnp.minimum(j, lt[n]))
 
     def _at_slice(n, j, bt_, lv, lt):
         del j, bt_, lv, lt
@@ -269,9 +314,9 @@ def _flash_pallas(q_codes, k_pool, v_pool, bt, live, qk_scale, v_scale,
             pl.BlockSpec((1, T, D), _at_slice),
             pl.BlockSpec((1, chunk, D), _at_table),
             pl.BlockSpec((1, chunk, D), _at_table),
-            pl.BlockSpec((1, chunk), _at_row),
-            pl.BlockSpec((1, chunk), _at_row),
-            pl.BlockSpec((1, chunk), _at_row),
+            pl.BlockSpec((1, rs, chunk), _at_row),
+            pl.BlockSpec((1, rs, chunk), _at_row),
+            pl.BlockSpec((1, rs, chunk), _at_row),
         ],
         out_specs=pl.BlockSpec((1, T, D), _at_slice),
         scratch_shapes=[
@@ -302,6 +347,7 @@ def _flash_ref(q_codes, k_pool, v_pool, bt, live, qk_scale, v_scale, bias,
     ``jnp.take``, dead chunks masked out of the scan carry (selecting the
     old carry is bitwise the kernel's skipped update)."""
     N, T, D = q_codes.shape
+    rs = qk_scale.shape[1]
     nb = bt.shape[1]
     chunk = k_pool.shape[1]
 
@@ -309,9 +355,9 @@ def _flash_ref(q_codes, k_pool, v_pool, bt, live, qk_scale, v_scale, bias,
         lq = _decode_limbs(qc, fmt)
         kc = jnp.take(k_pool, bt_n, axis=0)
         vc = jnp.take(v_pool, bt_n, axis=0)
-        qkc = qk.reshape(nb, 1, chunk)
-        vsc = vs.reshape(nb, 1, chunk)
-        bc = bs.reshape(nb, 1, chunk)
+        qkc = qk.reshape(rs, nb, chunk).transpose(1, 0, 2)
+        vsc = vs.reshape(rs, nb, chunk).transpose(1, 0, 2)
+        bc = bs.reshape(rs, nb, chunk).transpose(1, 0, 2)
 
         def step(carry, xs):
             kb, vb, qkb, vsb, bb, j = xs
@@ -338,6 +384,14 @@ def _dispatch(q_codes, k_pool, v_pool, bt, live, qk_scale, v_scale, bias,
     if k_pool.shape[1] > flash_chunk_limit():
         raise ValueError(f"chunk {k_pool.shape[1]} exceeds the int32 "
                          f"class-accumulator bound {flash_chunk_limit()}")
+    if qk_scale.ndim == 2:
+        # one shared scale/bias row per slice (sequential decode) — the
+        # rs == 1 degenerate case of the per-row layout
+        qk_scale = qk_scale[:, None]
+        v_scale = v_scale[:, None]
+        bias = bias[:, None]
+    assert qk_scale.shape[1] in (1, q_codes.shape[1]), (
+        qk_scale.shape, q_codes.shape)
     live = live.astype(jnp.int32)
     if use_kernel:
         return _flash_pallas(q_codes, k_pool, v_pool, bt, live, qk_scale,
@@ -500,3 +554,89 @@ def mgs_paged_flash_attention(q, k_pool, v_pool, block_table, lengths,
     return _dispatch(q_codes, k_pool, v_pool,
                      block_table.astype(jnp.int32), live, qk_scale,
                      v_scale, bias, fmt, use_kernel, interpret)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("fmt", "use_kernel", "interpret"))
+def mgs_paged_verify_attention(q, k_pool, v_pool, block_table, lengths,
+                               qk_scale, v_scale, bias,
+                               fmt: FPFormat = E4M3, *,
+                               use_kernel: bool = True,
+                               interpret: bool | None = None):
+    """Multi-query (T > 1) verify attention over the paged pool.
+
+    The speculative-decoding verify step scores ``T`` candidate
+    positions of every slice in one launch, and — the step's perf
+    contract — walks each slice's KV blocks **once**, not ``T`` times:
+    all ``T * R`` query rows of a slice (``T`` candidate tokens x their
+    GQA group of ``R`` rows) batch into a single kernel slice that
+    shares every chunk's limb decode, while the score scale and mask
+    bias stay *per row* (token ``t`` folds its own query quantization
+    scale and its own causal-horizon mask). Without the sharing, verify
+    costs ``T`` sequential steps of attention and speculation cannot
+    beat sequential decode.
+
+    Bitwise identity to ``T`` sequential decode steps survives the
+    batching because nothing in the tile step couples rows: the q @ k^T
+    and p @ v limb contractions are integer-exact per row, and the
+    online softmax, score scaling, and weight re-quantization are
+    row-wise. The one asymmetry — a row whose causal horizon ends
+    before the slice's last live chunk still *walks* the tail chunks
+    the sequential step at that position never would — is an exact
+    no-op on its running state: the caller's bias holds every key past
+    a token's horizon at ``-1e30``, which absorbs any finite score
+    exactly, and since every live token attends at least its own
+    freshly-appended position, its running max stays a finite real
+    score; masked keys then contribute ``exp(-1e30 - m) == 0.0``
+    exactly, and ``l * 1.0 + 0.0`` / ``o * 1.0 + 0.0`` are IEEE
+    identities (``tests/test_paged_kv.py`` pins this per token).
+
+    Args:
+      q: ``(N, T, R, D)`` format-exact FP8 query values — ``T``
+        candidate tokens x ``R`` query rows per token (the GQA group of
+        the slice's kv head; sequential decode is the ``T == 1``
+        degenerate case).
+      k_pool / v_pool: ``(P, bs, D)`` uint8 physical code pools, as in
+        :func:`mgs_paged_flash_attention`.
+      block_table: ``(N, nb)`` int32 physical tile ids — shared by all
+        ``T`` tokens of a slice (candidates extend the same logical
+        sequence).
+      lengths: ``(N, T)`` int32 per-token live key counts
+        (``pos + t + 1`` for live slots, 0 for dead ones). The slice
+        walks to the *largest* horizon; shorter tokens' tails are
+        bias-masked (see above).
+      qk_scale / v_scale / bias: ``(N, T, nb * bs)`` f32 logical rows,
+        per token — ``qk_scale`` folds each token's own query
+        quantization scale; ``bias`` must hold every key past token
+        ``t``'s horizon at the mask floor (the model's causal +
+        sentinel mask does).
+      fmt / use_kernel / interpret: as in :func:`mgs_flash_attention`.
+
+    Returns:
+      ``(N, T, R, D)`` float32 attention outputs.
+    """
+    N, T, R, D = q.shape
+    P, bs, Dp = k_pool.shape
+    nb = block_table.shape[1]
+    S = nb * bs
+    assert Dp == D and v_pool.shape == (P, bs, D), (k_pool.shape,
+                                                    v_pool.shape, q.shape)
+    assert block_table.shape == (N, nb), (block_table.shape, N)
+    assert lengths.shape == (N, T), (lengths.shape, (N, T))
+    assert qk_scale.shape == (N, T, S) and v_scale.shape == (N, T, S), (
+        qk_scale.shape, v_scale.shape, (N, T, S))
+    assert bias.shape == (N, T, S), (bias.shape, (N, T, S))
+    # one slice per pool row, T * R query rows each, token-major — every
+    # chunk's KV limb decode is shared by all T tokens of the slice
+    q_codes = encode_bits(q, fmt).reshape(N, T * R, D)
+    # per-row scale/bias: token t's logical row serves its R query rows
+    qk = jnp.repeat(qk_scale, R, axis=1)
+    vs = jnp.repeat(v_scale, R, axis=1)
+    bias_r = jnp.repeat(bias, R, axis=1)
+    # walk to the farthest causal horizon of the slice (token T - 1);
+    # dead slots report 0 everywhere and stay exactly zero
+    live = jnp.clip(lengths.astype(jnp.int32), 0, S).max(axis=1)
+    out = _dispatch(q_codes, k_pool, v_pool,
+                    block_table.astype(jnp.int32), live, qk, vs, bias_r,
+                    fmt, use_kernel, interpret)
+    return out.reshape(N, T, R, D)

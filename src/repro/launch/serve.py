@@ -30,8 +30,9 @@ from repro.configs import get_config, reduced_config
 from repro.configs.base import ModelConfig
 from repro.launch.mesh import make_mesh, make_serve_mesh
 from repro.models import (adopt_slot, decode_step, decode_step_paged,
-                          init_cache, init_paged_cache, init_params,
-                          param_dims, prefill, release_slot)
+                          draft_step_paged, init_cache, init_paged_cache,
+                          init_params, param_dims, prefill, release_slot,
+                          rewind_slots, verify_step_paged)
 from repro.parallel.sharding import make_rules, use_rules
 from repro.quant import (BlockAllocator, PreparedWeight, calibrating,
                          prepare_logits_head, prepare_params)
@@ -460,6 +461,20 @@ class ContinuousBatchingEngine(ServeEngine):
     blocks, and free lanes decode into the trash block. See
     docs/serving.md and tests/test_continuous.py.
 
+    With ``spec_k >= 1`` the engine decodes **speculatively**: each
+    round runs ``spec_k - 1`` cheap truncated-layer self-draft steps
+    (``cfg.quant.draft_layers`` of the model propose the next tokens),
+    then scores current-token + drafts in one multi-query verify step
+    (``models.verify_step_paged``) and accepts the longest prefix whose
+    draft tokens match the verify argmaxes **exactly** (integer ``==``).
+    Because every verify position is its own kernel slice with its own
+    quantization rows, accepted tokens — and their logits rows — are
+    *bitwise identical* to plain sequential decode; the rejected tail is
+    physically zeroed back out of the pool (``models.rewind_slots``), so
+    a request's bits never depend on ``spec_k``, the draft depth, or
+    co-resident acceptance patterns. Draft quality only moves the
+    acceptance *rate* (surfaced in ``stats["spec"]``), never a token.
+
     Restricted to plain dense decoder-only architectures (the
     ``models.init_paged_cache`` guard); the replica fleet's fault
     injection seam is group-mode only and not threaded through here.
@@ -468,13 +483,21 @@ class ContinuousBatchingEngine(ServeEngine):
     def __init__(self, cfg: ModelConfig, mesh, *, slots: int, max_len: int,
                  n_blocks: Optional[int] = None, params=None, dims=None,
                  seed: int = 0, eos_id: Optional[int] = None,
-                 calibration: Optional[CalibrationTable] = None):
+                 calibration: Optional[CalibrationTable] = None,
+                 spec_k: Optional[int] = None):
         if not cfg.quant.per_row_act:
             raise ValueError(
                 "ContinuousBatchingEngine requires quant.per_row_act=True: "
                 "per-tensor activation scales couple co-scheduled slots "
                 "through a shared absmax, breaking the traffic-invariance "
                 "contract (use e.g. quant.config.FP8_MGS_SERVE_PAGED)")
+        if spec_k is not None and spec_k < 1:
+            raise ValueError(f"spec_k must be >= 1 (got {spec_k}); use "
+                             f"spec_k=None for plain sequential decode")
+        # must precede super().__init__: _build_jits (called there) is
+        # virtual and compiles the verify/draft/rewind entry points with
+        # spec_k as a static shape
+        self.spec_k = spec_k
         super().__init__(cfg, mesh, batch=1, max_len=max_len,
                          params=params, dims=dims, seed=seed, eos_id=eos_id,
                          calibration=calibration, deterministic=True)
@@ -501,6 +524,31 @@ class ContinuousBatchingEngine(ServeEngine):
             donate_argnums=(2,))
         self._adopt = jax.jit(adopt_slot, donate_argnums=(0,))
         self._release = jax.jit(release_slot, donate_argnums=(0,))
+        if self.spec_k:
+            k = self.spec_k
+
+            def _round(p, cur, c):
+                # the whole round — k - 1 chained truncated-layer
+                # drafts plus the multi-query verify — is one jitted
+                # program, so a round costs a single dispatch. On
+                # launch-overhead-bound tiers (CPU emulation) this is
+                # what makes speculation a win at all: k separate
+                # launches can never beat k sequential steps there.
+                toks = [cur]
+                for j in range(k - 1):
+                    dlog, c = draft_step_paged(
+                        p, cfg, toks[-1], c, jnp.asarray(j, jnp.int32))
+                    toks.append(jnp.argmax(dlog, axis=-1)[:, None]
+                                .astype(jnp.int32))
+                tokens = (toks[0] if k == 1
+                          else jnp.concatenate(toks, axis=1))
+                logits, c = verify_step_paged(p, cfg, tokens, c)
+                return tokens, logits, c
+
+            self._spec_round = jax.jit(_round, donate_argnums=(2,))
+            self._rewind = jax.jit(
+                lambda c, keep: rewind_slots(c, keep, k),
+                donate_argnums=(0,))
 
     def warmup(self, plen_buckets, *, max_new: int = 1, seed: int = 0):
         """Compile the admission + decode path at the bucket lengths.
@@ -514,9 +562,10 @@ class ContinuousBatchingEngine(ServeEngine):
         return.
         """
         buckets = sorted({int(b) for b in plen_buckets})
+        pad = self.spec_k - 1 if self.spec_k else 0
         bad = [b for b in buckets
                if b <= 0
-               or -(-(b + max_new) // self.block_size) > self.n_table]
+               or -(-(b + max_new + pad) // self.block_size) > self.n_table]
         if bad:
             raise ValueError(f"warmup buckets {bad} out of range for "
                              f"max_len={self.max_len}, max_new={max_new}")
@@ -535,11 +584,17 @@ class ContinuousBatchingEngine(ServeEngine):
         """Try to admit one request; None if no slot/blocks right now."""
         plen = len(req.prompt)
         bucket = bucket_for(plen, self._buckets, block=self.block_size)
-        n_alloc = -(-(bucket + req.max_new_tokens) // self.block_size)
+        # reserve spec_k - 1 extra rows: a verify round starting at the
+        # last sequential position appends that far past it before the
+        # rejected tail is rewound
+        pad = self.spec_k - 1 if self.spec_k else 0
+        n_alloc = -(-(bucket + req.max_new_tokens + pad)
+                    // self.block_size)
         if n_alloc > self.n_table:
             raise ValueError(
                 f"request {req.rid}: bucket {bucket} + "
-                f"max_new {req.max_new_tokens} needs {n_alloc} blocks > "
+                f"max_new {req.max_new_tokens} (+ {pad} speculative "
+                f"headroom) needs {n_alloc} blocks > "
                 f"table width {self.n_table} (raise max_len)")
         if not self._free_slots or self.alloc.n_free < n_alloc:
             return None
@@ -603,8 +658,11 @@ class ContinuousBatchingEngine(ServeEngine):
         token — the observable the determinism harness compares bitwise.
 
         Returns the :meth:`ServeEngine.run`-style stats dict plus
-        ``steps`` (decode steps run), and per-request
-        ``timing[rid] = (arrival_s, admit_s, done_s)``.
+        ``steps`` (decode steps run — speculative *rounds* when
+        ``spec_k`` is set, each emitting 1..k tokens), per-request
+        ``timing[rid] = (arrival_s, admit_s, done_s)``, and — under
+        speculation — ``stats["spec"]`` with the round's drafted /
+        accepted counts and acceptance rate.
         """
         if arrivals is None:
             arrivals = [0.0] * len(requests)
@@ -617,6 +675,7 @@ class ContinuousBatchingEngine(ServeEngine):
         active: Dict[int, _Slot] = {}
         timing: Dict[int, Any] = {}
         n_prefill = n_decode = n_steps = 0
+        n_drafted = n_accepted = 0
 
         def finish(req: Request, arrival: float, admit_s: float):
             nonlocal n_decode
@@ -649,22 +708,64 @@ class ContinuousBatchingEngine(ServeEngine):
                     break
                 for slot, st in active.items():
                     self._cur[slot, 0] = st.cur
-                logits, self.cache = self._decode_paged(
-                    self.params, jnp.asarray(self._cur), self.cache)
-                n_steps += 1
-                rows = np.asarray(logits)
-                for slot in list(active):
-                    st = active[slot]
-                    st.cur = int(rows[slot].argmax())
-                    self._harvest(slot, st, active, rows[slot])
-                    if st.req.done:
-                        finish(st.req, st.arrival, st.admit_s)
+                if self.spec_k:
+                    k = self.spec_k
+                    # one fused launch drafts and verifies the whole
+                    # round; a single host sync covers all k positions
+                    tokens, logits, self.cache = self._spec_round(
+                        self.params, jnp.asarray(self._cur), self.cache)
+                    n_steps += 1
+                    targets = np.asarray(
+                        jnp.argmax(logits, axis=-1).astype(jnp.int32))
+                    tokens_np = np.asarray(tokens)
+                    rows = np.asarray(logits)      # (slots, k, vocab)
+                    keep = np.zeros(self.slots, np.int32)
+                    for slot in list(active):
+                        st = active[slot]
+                        # exact acceptance: drafts survive while they
+                        # equal the verify argmax at their position
+                        a = 0
+                        while (a + 1 < k and tokens_np[slot, a + 1]
+                                == targets[slot, a]):
+                            a += 1
+                        n_drafted += k - 1
+                        n_accepted += a
+                        keep[slot] = a + 1
+                        for j in range(a + 1):
+                            st.cur = int(targets[slot, j])
+                            self._harvest(slot, st, active, rows[slot, j])
+                            if st.req.done:
+                                finish(st.req, st.arrival, st.admit_s)
+                                break
+                    # released slots have pos == 0 and are skipped; live
+                    # ones advance by their accepted count and shed the
+                    # rejected rows
+                    self.cache = self._rewind(self.cache,
+                                              jnp.asarray(keep))
+                else:
+                    logits, self.cache = self._decode_paged(
+                        self.params, jnp.asarray(self._cur), self.cache)
+                    n_steps += 1
+                    rows = np.asarray(logits)
+                    for slot in list(active):
+                        st = active[slot]
+                        st.cur = int(rows[slot].argmax())
+                        self._harvest(slot, st, active, rows[slot])
+                        if st.req.done:
+                            finish(st.req, st.arrival, st.admit_s)
         dt = time.monotonic() - t0
         stats: Dict[str, Any] = {
             "prefill_tokens": n_prefill, "decode_tokens": n_decode,
             "steps": n_steps, "wall_s": dt,
             "decode_tok_per_s": n_decode / max(dt, 1e-9),
             "timing": timing}
+        if self.spec_k:
+            stats["spec"] = {
+                "k": self.spec_k,
+                "draft_layers": self.cfg.quant.draft_layers,
+                "drafted": n_drafted, "accepted": n_accepted,
+                "acceptance_rate": n_accepted / max(n_drafted, 1),
+                "tokens_per_round": n_decode / max(n_steps, 1)}
         if record_logits:
             stats["logits"] = self._logits_log
         self._logits_log = None
@@ -685,7 +786,8 @@ def make_engine(cfg: ModelConfig, mesh, *, batch: int, max_len: int,
                 eos_id: Optional[int] = None,
                 calibration: Optional[CalibrationTable] = None,
                 deterministic: bool = True,
-                continuous: bool = False) -> ServeEngine:
+                continuous: bool = False,
+                spec_k: Optional[int] = None) -> ServeEngine:
     """Engine factory — one construction point for every driver.
 
     A thin, keyword-only wrapper over :class:`ServeEngine` so the CLI
@@ -696,7 +798,9 @@ def make_engine(cfg: ModelConfig, mesh, *, batch: int, max_len: int,
     engines, and ``calibration`` to start pre-calibrated. With
     ``continuous=True`` the returned engine is a
     :class:`ContinuousBatchingEngine` with ``batch`` decode slots
-    (always deterministic — that layout is its contract).
+    (always deterministic — that layout is its contract); ``spec_k``
+    additionally turns on draft/verify speculative decoding there
+    (bitwise-exact acceptance — tokens never change, only throughput).
     """
     if continuous:
         if not deterministic:
@@ -705,7 +809,11 @@ def make_engine(cfg: ModelConfig, mesh, *, batch: int, max_len: int,
                              "their contract)")
         return ContinuousBatchingEngine(
             cfg, mesh, slots=batch, max_len=max_len, params=params,
-            dims=dims, seed=seed, eos_id=eos_id, calibration=calibration)
+            dims=dims, seed=seed, eos_id=eos_id, calibration=calibration,
+            spec_k=spec_k)
+    if spec_k is not None:
+        raise ValueError("spec_k requires continuous=True: speculative "
+                         "decoding runs on the paged continuous engine")
     return ServeEngine(cfg, mesh, batch=batch, max_len=max_len,
                        params=params, dims=dims, seed=seed, eos_id=eos_id,
                        calibration=calibration, deterministic=deterministic)
@@ -739,6 +847,17 @@ def main():
                          "traffic; forces the FP8_MGS_SERVE_PAGED quant "
                          "preset; incompatible with --replicas > 1 here "
                          "(use ReplicaServeDriver(continuous=True))")
+    ap.add_argument("--spec-k", type=int, default=0,
+                    help="speculative decoding depth for --continuous: "
+                         "each round drafts k-1 tokens with the first "
+                         "--draft-layers layers and verifies all k in "
+                         "one multi-query step; accepted tokens are "
+                         "bitwise identical to sequential decode "
+                         "(0 = off)")
+    ap.add_argument("--draft-layers", type=int, default=0,
+                    help="layers the self-draft pass runs (default 0 = "
+                         "half the stack); fewer layers draft faster "
+                         "but accept less")
     ap.add_argument("--no-deterministic", action="store_true",
                     help="batch-over-data throughput layout instead of "
                          "the deterministic (cross-mesh bit-identical) "
@@ -763,14 +882,21 @@ def main():
         if args.reduced:    # CPU-friendly tiles + jnp reference path
             q = q.replace(use_kernel=False, fused=False,
                           block_m=32, block_n=32, block_k=32)
+        if args.spec_k:
+            q = q.replace(draft_layers=args.draft_layers
+                          or max(1, cfg.n_layers // 2))
         cfg = dataclasses.replace(cfg, quant=q)
+    elif args.spec_k:
+        ap.error("--spec-k requires --continuous (speculation runs on "
+                 "the paged continuous engine)")
     rng = np.random.default_rng(0)
     reqs = [Request(rid=i,
                     prompt=rng.integers(1, cfg.vocab,
                                         args.prompt_len).astype(np.int32),
                     max_new_tokens=args.max_new)
             for i in range(args.n_requests)]
-    max_len = args.prompt_len + args.max_new + 1
+    max_len = (args.prompt_len + args.max_new + 1
+               + (args.spec_k - 1 if args.spec_k else 0))
 
     if args.replicas > 1:
         from repro.launch.replica import ReplicaServeDriver
@@ -788,7 +914,8 @@ def main():
             mesh = make_mesh((data_p, model_p), ("data", "model"))
         engine = make_engine(cfg, mesh, batch=args.batch, max_len=max_len,
                              deterministic=not args.no_deterministic,
-                             continuous=args.continuous)
+                             continuous=args.continuous,
+                             spec_k=args.spec_k or None)
         if args.continuous:
             engine.warmup([args.prompt_len], max_new=1)
             stats = engine.serve(reqs)

@@ -1,9 +1,12 @@
 # Model zoo: unified transformer stack covering every assigned architecture
 # family, with MGS-quantized linears as a first-class execution mode.
 from .transformer import (adopt_slot, decode_step, decode_step_paged,
-                          forward, init_cache, init_paged_cache, init_params,
-                          loss_fn, param_dims, prefill, release_slot)
+                          draft_step_paged, forward, init_cache,
+                          init_paged_cache, init_params, loss_fn,
+                          param_dims, prefill, release_slot, rewind_slots,
+                          verify_step_paged)
 
 __all__ = ["decode_step", "forward", "init_cache", "init_params", "loss_fn",
            "param_dims", "prefill", "init_paged_cache", "decode_step_paged",
+           "verify_step_paged", "draft_step_paged", "rewind_slots",
            "adopt_slot", "release_slot"]

@@ -18,10 +18,11 @@ import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
 from repro.kernels.mgs_attention import (mgs_flash_attention,
-                                         mgs_paged_flash_attention)
+                                         mgs_paged_flash_attention,
+                                         mgs_paged_verify_attention)
 from repro.quant import (PagedKVCache, QuantizedKVCache, append_kv,
                          paged_append_kv, qeinsum)
-from repro.quant.quantize import quantize_fp8
+from repro.quant.quantize import QTensor, quantize_fp8, quantize_fp8_static
 from .common import ParamFactory, apply_rope
 from .linear import proj
 
@@ -204,6 +205,40 @@ def _pad_kv_to_chunk(k, v, k_pos, chunk: int):
     return k, v, k_pos
 
 
+#: Calibration site of the decode-query quantization. During a
+#: calibration pass :func:`repro.quant.calibrate.observe_amax` records
+#: its running absmax; the table emits it as ``"attn.q.amax"``, which
+#: ``QuantConfig.static_q_scale`` consumers read back here.
+_Q_SITE = "attn.q"
+
+
+def _quantize_decode_q(q2, quant) -> QTensor:
+    """Per-row decode-query quantization — dynamic absmax or calibrated.
+
+    ``q2``: ``(N, K)`` float query rows (one per kernel slice). The
+    dynamic path is ``quantize_fp8(axis=1)`` — a per-step absmax reduce
+    over every row. With ``quant.static_q_scale`` and a calibrated
+    ``"attn.q.amax"`` entry on the config, the reduce is replaced by a
+    *fixed* scale derived from the calibrated absmax
+    (:func:`repro.quant.quantize.quantize_fp8_static`): rows are clipped
+    into the calibrated range and rounded with the same jit-compiled f32
+    scale-division as the dynamic path, so any row whose own absmax
+    equals the calibrated value produces bit-identical codes and scale
+    (``tests/test_kvcache.py`` pins this), and rows within the range
+    differ only by the scale the dynamic path would have *chosen* — the
+    standard static-quantization contract. Falls back to dynamic when no
+    calibrated entry exists.
+    """
+    fmt = quant.kv_fmt
+    from repro.quant.calibrate import observe_amax
+    observe_amax(_Q_SITE, q2)
+    amax = (quant.act_sigma(_Q_SITE + ".amax")
+            if quant.static_q_scale else None)
+    if amax is None or amax <= 0.0:
+        return quantize_fp8(q2, fmt, axis=1)
+    return quantize_fp8_static(q2, fmt, amax)
+
+
 def _sdpa_packed_cache(q, cache: QuantizedKVCache, bias, quant,
                        lengths=None):
     """Decode attention over the packed-FP8 cache: the MGS flash kernel.
@@ -238,7 +273,7 @@ def _sdpa_packed_cache(q, cache: QuantizedKVCache, bias, quant,
     # (B, T, KV, G, hd) -> (B*KV, G*T, hd) rows; per-slice quantization
     # (q is one token's projections — this transpose is O(B*H*hd))
     q2 = q.transpose(0, 2, 3, 1, 4).reshape(B * KV, G * T * hd)
-    qt = quantize_fp8(q2, fmt, axis=1)
+    qt = _quantize_decode_q(q2, quant)
     qvals = qt.q.reshape(B * KV, G * T, hd)
     if quant.accum in ("mgs_exact", "mgs_dmac"):
         from repro.quant.calibrate import observe
@@ -281,7 +316,7 @@ def _sdpa_paged_cache(q, cache: PagedKVCache, block_table, bias, lengths,
     S = nb * bs
     fmt = quant.kv_fmt
     q2 = q.transpose(0, 2, 3, 1, 4).reshape(B * KV, G * T * hd)
-    qt = quantize_fp8(q2, fmt, axis=1)
+    qt = _quantize_decode_q(q2, quant)
     qvals = qt.q.reshape(B * KV, G * T, hd)
     if quant.accum in ("mgs_exact", "mgs_dmac"):
         from repro.quant.calibrate import observe
@@ -307,6 +342,63 @@ def _sdpa_paged_cache(q, cache: PagedKVCache, block_table, bias, lengths,
                                     bias2, fmt,
                                     use_kernel=quant.use_kernel)
     return out.reshape(B, KV, G, T, hd).transpose(0, 3, 1, 2, 4).astype(
+        q.dtype)
+
+
+def _sdpa_paged_verify(q, cache: PagedKVCache, block_table, bias,
+                       positions, lengths, quant):
+    """Multi-query (T > 1) verify attention over the paged pool.
+
+    The speculative verify step's twin of :func:`_sdpa_paged_cache`.
+    Every (slot, kv-head, token) triple is its own kernel slice: the
+    query is quantized per ``(G * hd)`` row-slice — **exactly** the
+    granularity the sequential ``T == 1`` decode step uses, so token
+    ``t``'s quantized query (and hence its scores, softmax, and output)
+    is bit-identical to the sequential decode step at position
+    ``pos + t``. Per-token live lengths give each token its own causal
+    horizon over the freshly appended candidate entries; the mask bias
+    is already per-token.
+
+    ``positions``: ``(B, T)`` query positions (``pos + t``); a token's
+    live key count is ``positions + 1`` (its prefix plus itself),
+    gated to 0 for dead slots (``lengths == 0``).
+    """
+    B, T, KV, G, hd = q.shape
+    bs = cache.k_codes.shape[2]
+    nb = block_table.shape[1]
+    S = nb * bs
+    fmt = quant.kv_fmt
+    # (B, T, KV, G, hd) -> (B*KV*T, G*hd) rows, token-fastest — the
+    # sequential decode step's per-slice quantization granularity
+    q2 = q.transpose(0, 2, 1, 3, 4).reshape(B * KV * T, G * hd)
+    qt = _quantize_decode_q(q2, quant)
+    qvals = qt.q.reshape(B * KV, T, G, hd)
+    if quant.accum in ("mgs_exact", "mgs_dmac"):
+        from repro.quant.calibrate import observe
+        observe("attn.scores", qvals, fmt)
+    bt = block_table.astype(jnp.int32)
+    ks = jnp.take(cache.k_scale, bt.reshape(-1), axis=0)
+    vs = jnp.take(cache.v_scale, bt.reshape(-1), axis=0)
+    ks = ks.reshape(B, nb, KV, bs).transpose(0, 2, 1, 3).reshape(B * KV, S)
+    vs = vs.reshape(B, nb, KV, bs).transpose(0, 2, 1, 3).reshape(B * KV, S)
+    qk = qt.scale.reshape(B * KV, T, 1) * ks[:, None, :] * (hd ** -0.5)
+    vs3 = jnp.broadcast_to(vs[:, None, :], (B * KV, T, S))
+    P = cache.k_codes.shape[0]
+    kp = cache.k_codes.reshape(P * KV, bs, hd)
+    vp = cache.v_codes.reshape(P * KV, bs, hd)
+    bt_nk = (bt[:, None, :] * KV
+             + jnp.arange(KV, dtype=jnp.int32)[None, :, None]).reshape(
+                 B * KV, nb)
+    # per-token causal horizons: token t's live keys end at positions+1
+    live_t = jnp.where(lengths[:, None] > 0,
+                       positions.astype(jnp.int32) + 1, 0)
+    live = jnp.repeat(live_t, KV, axis=0)
+    bias3 = jnp.broadcast_to(bias.reshape(B, 1, T, S),
+                             (B, KV, T, S)).reshape(B * KV, T, S)
+    out = mgs_paged_verify_attention(qvals, kp, vp, bt_nk, live, qk, vs3,
+                                     bias3, fmt,
+                                     use_kernel=quant.use_kernel)
+    return out.reshape(B, KV, T, G, hd).transpose(0, 2, 1, 3, 4).astype(
         q.dtype)
 
 
@@ -344,7 +436,27 @@ def attention_apply(p, x, cfg: ModelConfig, *, positions,
 
     new_cache = None
     packed_out = None
-    if cross_kv is not None:
+    if isinstance(cross_kv, QuantizedKVCache):
+        # packed encoder K/V (written once at prefill, quant.kvcache):
+        # decode attends the codes through the MGS flash kernel — the
+        # self-attention packed contract applied to cross-attention, so
+        # encoder-decoder decode stops streaming a float cross cache.
+        if T != 1:
+            raise NotImplementedError(
+                "packed cross-attention is decode-only (T == 1): the "
+                "decoder prefill attends the fresh float encoder K/V "
+                "and only stores them quantized")
+        S = cross_kv.k_codes.shape[2]
+        enc_len = cfg.encoder_len
+        k_pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None],
+                                 (B, S))
+        k_pos = jnp.where(k_pos < enc_len, k_pos, _POS_SENTINEL)
+        bias3 = _mask(positions, k_pos, causal=False, window=cfg.window,
+                      is_global=is_global)
+        packed_out = _sdpa_packed_cache(
+            q, cross_kv, bias3, cfg.quant,
+            lengths=jnp.full((B,), enc_len, jnp.int32))
+    elif cross_kv is not None:
         k, v = cross_kv.k, cross_kv.v
         k_pos = (jnp.zeros((B, k.shape[1]), jnp.int32)
                  + jnp.arange(k.shape[1], dtype=jnp.int32)
@@ -355,11 +467,10 @@ def attention_apply(p, x, cfg: ModelConfig, *, positions,
         k = apply_rope(k, positions, cfg.rope_theta)
         v = proj(x, p["wv"], cfg.quant, site="attn.wv")
         if isinstance(cache, PagedKVCache):
-            if T != 1:
-                raise NotImplementedError(
-                    "the paged pool is decode-only (T == 1): prompts are "
-                    "prefilled into a dense batch-1 cache and adopted "
-                    "into the pool (models.adopt_slot)")
+            # decode (T == 1) or speculative verify (T == k): append all
+            # T candidate entries through the block table, then attend.
+            # Prompts still enter the pool via slot adoption
+            # (models.adopt_slot); this path extends live sequences only.
             new_cache = paged_append_kv(cache, k, v, cache_pos,
                                         block_table, cfg.quant.kv_fmt)
             bs = cache.k_codes.shape[2]
@@ -370,8 +481,13 @@ def attention_apply(p, x, cfg: ModelConfig, *, positions,
             k_pos = jnp.where(valid, k_pos, _POS_SENTINEL)
             bias3 = _mask(positions, k_pos, causal=causal,
                           window=cfg.window, is_global=is_global)
-            packed_out = _sdpa_paged_cache(q, new_cache, block_table,
-                                           bias3, lengths, cfg.quant)
+            if T == 1:
+                packed_out = _sdpa_paged_cache(q, new_cache, block_table,
+                                               bias3, lengths, cfg.quant)
+            else:
+                packed_out = _sdpa_paged_verify(q, new_cache, block_table,
+                                                bias3, positions, lengths,
+                                                cfg.quant)
         elif isinstance(cache, QuantizedKVCache):
             # packed cache: re-quantize ONLY the new entries (per-entry
             # scales — old codes are bit-frozen, see quant.kvcache)

@@ -29,7 +29,8 @@ import numpy as np
 from repro.configs.base import ModelConfig
 from repro.parallel.sharding import constrain
 from repro.quant import (PagedKVCache, QuantizedKVCache, init_paged_kv,
-                         init_quantized_kv, qeinsum)
+                         init_quantized_kv, paged_rollback_kv, qeinsum,
+                         quantize_kv)
 from .attention import KVCache, attention_apply, attention_init
 from .common import ParamFactory, dtype_of, grad_barrier, rms_norm
 from .ffn import ffn_apply, ffn_init
@@ -38,6 +39,7 @@ from .moe import moe_apply, moe_init
 
 __all__ = ["init_params", "param_dims", "forward", "loss_fn", "init_cache",
            "prefill", "decode_step", "init_paged_cache", "decode_step_paged",
+           "verify_step_paged", "draft_step_paged", "rewind_slots",
            "adopt_slot", "release_slot"]
 
 
@@ -636,13 +638,33 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int,
         dims["ssm_h"] = hd
         dims["ssm_conv"] = cd
     if cfg.encoder_layers:
-        xshape = (cfg.n_layers, batch, cfg.encoder_len, cfg.n_kv_heads,
-                  cfg.head_dim)
-        cache["cross_k"] = jnp.zeros(xshape, kv_dtype)
-        cache["cross_v"] = jnp.zeros(xshape, kv_dtype)
-        xd = ("layers", "batch", "enc_seq", "kv_heads", "head_dim")
-        dims["cross_k"] = xd
-        dims["cross_v"] = xd
+        if packed:
+            # packed cross planes: written once at prefill (quantize_kv
+            # over the projected encoder K/V), streamed as 1-byte codes
+            # by every decode step's cross-attention. Same chunk-aligned
+            # padding as the self-attention planes; the pad tail is
+            # zero-inert and masked (enc positions >= encoder_len).
+            chunk = cfg.quant.block_k
+            enc_pad = -(-cfg.encoder_len // chunk) * chunk
+            cq = init_quantized_kv((cfg.n_layers, batch), cfg.n_kv_heads,
+                                   enc_pad, cfg.head_dim)
+            cache["cross_k"] = cq.k_codes
+            cache["cross_v"] = cq.v_codes
+            cache["cross_k_scale"] = cq.k_scale
+            cache["cross_v_scale"] = cq.v_scale
+            xd = ("layers", "batch", "kv_heads", "enc_seq", "head_dim")
+            dims["cross_k"] = xd
+            dims["cross_v"] = xd
+            dims["cross_k_scale"] = xd[:-1]
+            dims["cross_v_scale"] = xd[:-1]
+        else:
+            xshape = (cfg.n_layers, batch, cfg.encoder_len, cfg.n_kv_heads,
+                      cfg.head_dim)
+            cache["cross_k"] = jnp.zeros(xshape, kv_dtype)
+            cache["cross_v"] = jnp.zeros(xshape, kv_dtype)
+            xd = ("layers", "batch", "enc_seq", "kv_heads", "head_dim")
+            dims["cross_k"] = xd
+            dims["cross_v"] = xd
     return cache, dims
 
 
@@ -691,13 +713,32 @@ def prefill(params, cfg: ModelConfig, batch, cache):
     if cfg.encoder_layers:
         enc = _encode(params, cfg, batch["audio_embeds"])
         from .linear import proj as _proj
+        packed_cross = cache["cross_k"].dtype == jnp.uint8
+
         def cross_kv_one(pc):
-            return (_proj(enc, pc["attn"]["wk"], cfg.quant).astype(
-                        cache["cross_k"].dtype),
-                    _proj(enc, pc["attn"]["wv"], cfg.quant).astype(
-                        cache["cross_v"].dtype))
+            k = _proj(enc, pc["attn"]["wk"], cfg.quant)
+            v = _proj(enc, pc["attn"]["wv"], cfg.quant)
+            if not packed_cross:
+                k = k.astype(cache["cross_k"].dtype)
+                v = v.astype(cache["cross_v"].dtype)
+            return k, v
         ck, cv = jax.lax.map(cross_kv_one, params["cross"])
-        cache = dict(cache, cross_k=ck, cross_v=cv)
+        if packed_cross:
+            # write-once quantization (per-entry scales, quant.kvcache):
+            # prefill attends the fresh float K/V below; decode streams
+            # these codes through the MGS flash kernel.
+            S_pad = cache["cross_k"].shape[3]
+            kc, ksc = quantize_kv(ck, cfg.quant.kv_fmt)
+            vc, vsc = quantize_kv(cv, cfg.quant.kv_fmt)
+            pad = ((0, 0), (0, 0), (0, 0), (0, S_pad - kc.shape[2]))
+            cache = dict(
+                cache,
+                cross_k=jnp.pad(jnp.swapaxes(kc, 2, 3), pad + ((0, 0),)),
+                cross_v=jnp.pad(jnp.swapaxes(vc, 2, 3), pad + ((0, 0),)),
+                cross_k_scale=jnp.pad(jnp.swapaxes(ksc, 2, 3), pad),
+                cross_v_scale=jnp.pad(jnp.swapaxes(vsc, 2, 3), pad))
+        else:
+            cache = dict(cache, cross_k=ck, cross_v=cv)
 
     new_cache = dict(cache)
     if cfg.is_hybrid:
@@ -721,13 +762,15 @@ def prefill(params, cfg: ModelConfig, batch, cache):
                          ssm_conv=convs.astype(cache["ssm_conv"].dtype))
     elif cfg.encoder_layers:
         def dbody(x, xs):
-            pl, pc, kvl, ck, cv = xs
+            pl, pc, kvl, ckl, cvl = xs
             x, akv, _ = _dense_body(pl, x, positions, cfg, True,
-                                    kvl, 0, KVCache(ck, cv), pc)
+                                    kvl, 0, KVCache(ckl, cvl), pc)
             return x, akv
+        # prefill attends the fresh (float) encoder K/V on both cache
+        # layouts; the packed planes above are storage for decode only
         x, kvs = jax.lax.scan(
             dbody, x, (params["layers"], params["cross"], _kv_stack(cache),
-                       new_cache["cross_k"], new_cache["cross_v"]))
+                       ck, cv))
         new_cache.update(**_kv_entries(kvs))
     else:
         flags = _global_flags(cfg)
@@ -779,14 +822,31 @@ def decode_step(params, cfg: ModelConfig, tokens, cache):
         new_cache.update(ssm_h=hs,
                          ssm_conv=convs.astype(cache["ssm_conv"].dtype))
     elif cfg.encoder_layers:
-        def dbody(x, xs):
-            pl, pc, kvl, ck, cv = xs
-            x, akv, _ = _dense_body(pl, x, positions, cfg, True,
-                                    kvl, pos, KVCache(ck, cv), pc)
-            return x, akv
-        x, kvs = jax.lax.scan(
-            dbody, x, (params["layers"], params["cross"], _kv_stack(cache),
-                       cache["cross_k"], cache["cross_v"]))
+        packed_cross = cache["cross_k"].dtype == jnp.uint8
+        if packed_cross:
+            # decode streams the packed cross codes (written once at
+            # prefill) through the MGS flash kernel per layer
+            def dbody(x, xs):
+                pl, pc, kvl, ckl, cvl, cks, cvs = xs
+                x, akv, _ = _dense_body(
+                    pl, x, positions, cfg, True, kvl, pos,
+                    QuantizedKVCache(ckl, cvl, cks, cvs), pc)
+                return x, akv
+            x, kvs = jax.lax.scan(
+                dbody, x, (params["layers"], params["cross"],
+                           _kv_stack(cache), cache["cross_k"],
+                           cache["cross_v"], cache["cross_k_scale"],
+                           cache["cross_v_scale"]))
+        else:
+            def dbody(x, xs):
+                pl, pc, kvl, ckl, cvl = xs
+                x, akv, _ = _dense_body(pl, x, positions, cfg, True,
+                                        kvl, pos, KVCache(ckl, cvl), pc)
+                return x, akv
+            x, kvs = jax.lax.scan(
+                dbody, x, (params["layers"], params["cross"],
+                           _kv_stack(cache), cache["cross_k"],
+                           cache["cross_v"]))
         new_cache.update(**_kv_entries(kvs))
     else:
         flags = _global_flags(cfg)
@@ -963,3 +1023,130 @@ def decode_step_paged(params, cfg: ModelConfig, tokens, cache):
     new_cache["pos"] = jnp.where(live, pos + 1, pos)
     x = rms_norm(x, params["final_norm"], cfg.norm_eps)
     return _logits(params, cfg, x)[:, 0], new_cache
+
+
+# ---------------------------------------------------------------------------
+# Serving: speculative decoding over the paged pool (draft -> verify ->
+# rewind). The three steps compose with decode_step_paged's fixed-shape
+# lifecycle: none of them advances ``pos`` except rewind_slots, which
+# commits exactly the accepted prefix.
+# ---------------------------------------------------------------------------
+
+
+def verify_step_paged(params, cfg: ModelConfig, tokens, cache):
+    """Score ``k`` candidate tokens per slot in one multi-query step.
+
+    tokens: ``(slots, k)`` — each slot's current token followed by its
+    ``k - 1`` draft proposals, occupying positions ``pos .. pos + k - 1``.
+    All ``k`` K/V entries are appended through the block table (the
+    admission reservation guarantees the blocks exist), then every
+    (slot, token) pair attends its own causal horizon as an independent
+    kernel slice — so ``logits[:, j]`` is **bit-identical** to the
+    logits sequential decode would produce at position ``pos + j`` given
+    the same inputs (the exact-acceptance contract, docs/serving.md).
+    ``pos`` is *not* advanced: :func:`rewind_slots` commits the accepted
+    prefix and physically zeroes the rejected tail.
+
+    Returns ``(logits (slots, k, vocab), cache)``.
+    """
+    _require_paged_arch(cfg)
+    params = _cast_params(params, cfg)
+    B, T = tokens.shape
+    pos = cache["pos"]
+    bt = cache["block_table"]
+    live = pos > 0
+    lengths = jnp.where(live, pos + 1, 0)
+    x = _embed_tokens(params, cfg, tokens)
+    x = constrain(x, ("batch", "seq", "embed_act"))
+    positions = pos[:, None] + jnp.arange(T, dtype=jnp.int32)[None, :]
+
+    flags = _global_flags(cfg)
+
+    def body(x, xs):
+        pl, isg, kvl = xs
+        x, akv, _ = _dense_body(pl, x, positions, cfg, isg, kvl, pos,
+                                None, None, block_table=bt,
+                                lengths=lengths)
+        return x, akv
+    x, kvs = jax.lax.scan(
+        body, x, (params["layers"], flags, _paged_kv_stack(cache)))
+
+    new_cache = dict(cache, **_paged_kv_entries(kvs))
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    return _logits(params, cfg, x), new_cache
+
+
+def draft_step_paged(params, cfg: ModelConfig, tokens, cache, offset):
+    """One cheap self-draft step at position ``pos + offset``.
+
+    Runs only the first ``cfg.quant.draft_layers`` transformer layers
+    (plus final norm and logits head) over sliced stacked params — the
+    truncated-layer self-draft. The draft's lower-layer K/V appends land
+    in the shared pool at ``pos + offset`` but are **overwritten by the
+    verify append before any verify read**, so draft numerics can only
+    change the acceptance *rate*, never an accepted token's bits.
+    ``offset`` is traced: one compilation serves every draft position of
+    a round. ``pos`` is not advanced.
+
+    tokens: ``(slots, 1)``. Returns ``(logits (slots, vocab), cache)``.
+    """
+    _require_paged_arch(cfg)
+    L = cfg.quant.draft_layers or cfg.n_layers
+    L = min(L, cfg.n_layers)
+    params = _cast_params(params, cfg)
+    pos = cache["pos"]
+    bt = cache["block_table"]
+    live = pos > 0
+    offset = jnp.asarray(offset, jnp.int32)
+    dpos = jnp.where(live, pos + offset, pos)
+    lengths = jnp.where(live, dpos + 1, 0)
+    x = _embed_tokens(params, cfg, tokens)
+    x = constrain(x, ("batch", "seq", "embed_act"))
+    positions = dpos[:, None]
+
+    flags = _global_flags(cfg)[:L]
+    lp = jax.tree.map(lambda a: a[:L], params["layers"])
+    kv_full = _paged_kv_stack(cache)
+    kv_draft = PagedKVCache(*(p[:L] for p in kv_full))
+
+    def body(x, xs):
+        pl, isg, kvl = xs
+        x, akv, _ = _dense_body(pl, x, positions, cfg, isg, kvl, dpos,
+                                None, None, block_table=bt,
+                                lengths=lengths)
+        return x, akv
+    x, kvs = jax.lax.scan(body, x, (lp, flags, kv_draft))
+
+    merged = PagedKVCache(*(jnp.concatenate([u, f[L:]], axis=0)
+                            for u, f in zip(kvs, kv_full)))
+    new_cache = dict(cache, **_paged_kv_entries(merged))
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    return _logits(params, cfg, x)[:, 0], new_cache
+
+
+def rewind_slots(cache, keep, max_tokens: int):
+    """Commit ``keep`` verified entries per slot; zero the rejected tail.
+
+    After :func:`verify_step_paged` appended ``k`` candidate entries at
+    ``pos .. pos + k - 1`` and acceptance emitted ``keep`` tokens, the
+    pool must look exactly as if sequential decode had run ``keep``
+    steps: entries ``pos .. pos + keep - 1`` stay, entries
+    ``pos + keep .. pos + k - 1`` are *physically zeroed*
+    (:func:`repro.quant.paged_rollback_kv` — codes and scales back to
+    the never-written state), and ``pos`` advances by ``keep``. Free
+    slots (``pos == 0``) pass through untouched, so the engine can
+    rewind after releasing finished slots.
+
+    keep: ``(slots,)`` int32 in ``[1, max_tokens]`` for live slots
+    (ignored for free ones). ``max_tokens``: static ``k`` bound.
+    """
+    pos = cache["pos"]
+    live = pos > 0
+    keep = keep.astype(jnp.int32)
+    start = jnp.where(live, pos + keep, 0)
+    count = jnp.where(live, max_tokens - keep, 0)
+    pool = paged_rollback_kv(_paged_kv_stack(cache), cache["block_table"],
+                             start, count, max_tokens)
+    new_cache = dict(cache, **_paged_kv_entries(pool))
+    new_cache["pos"] = jnp.where(live, pos + keep, pos)
+    return new_cache

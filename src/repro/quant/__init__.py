@@ -7,7 +7,8 @@ from .config import ACCUMS, DTYPES, KV_CACHES, QuantConfig
 from .kvcache import (TRASH_BLOCK, BlockAllocator, PagedKVCache,
                       QuantizedKVCache, append_kv, dequantize_kv,
                       gather_paged_kv, init_paged_kv, init_quantized_kv,
-                      kv_cache_bytes, paged_append_kv, quantize_kv)
+                      kv_cache_bytes, paged_append_kv, paged_rollback_kv,
+                      quantize_kv)
 from .prepared import (PREP_STATS, PreparedWeight, clear_prepared_cache,
                        prepare_logits_head, prepare_params, prepare_unembed,
                        prepare_weight)
@@ -27,4 +28,4 @@ __all__ = ["ACCUMS", "DTYPES", "KV_CACHES", "QuantConfig", "qmatmul",
            "quantize_kv", "append_kv", "init_quantized_kv",
            "dequantize_kv", "kv_cache_bytes", "PagedKVCache",
            "BlockAllocator", "TRASH_BLOCK", "init_paged_kv",
-           "paged_append_kv", "gather_paged_kv"]
+           "paged_append_kv", "paged_rollback_kv", "gather_paged_kv"]

@@ -42,7 +42,7 @@ import numpy as np
 from repro.core.markov import Pmf, limb_sigma_default, plan_flush_period
 
 __all__ = ["ActivationRecorder", "CalibrationTable", "calibrating",
-           "current_recorder", "observe"]
+           "current_recorder", "observe", "observe_amax"]
 
 # Balanced base-128 limbs of the exact kernel take values in [-64, 63].
 _LIMB_LO = -64
@@ -55,6 +55,7 @@ class ActivationRecorder:
     def __init__(self):
         self._counts: Dict[str, np.ndarray] = {}
         self._calls: Dict[str, int] = {}
+        self._amax: Dict[str, float] = {}
         self._lock = threading.Lock()
 
     def record(self, site: str, limbs: np.ndarray):
@@ -90,8 +91,25 @@ class ActivationRecorder:
         counts = self._counts[site]
         return Pmf(_LIMB_LO, counts / counts.sum())
 
+    def record_amax(self, site: str, value: float):
+        """Fold one call's per-row activation absmax into the site max.
+
+        Distinct namespace from the limb sigmas: the table stores it
+        under ``"<site>.amax"``, consumed by the static decode-query
+        scale (``QuantConfig.static_q_scale``) rather than the flush
+        planner.
+        """
+        v = float(value)
+        with self._lock:
+            self._amax[site] = max(self._amax.get(site, 0.0), v)
+
+    def amax(self, site: str) -> Optional[float]:
+        return self._amax.get(site)
+
     def table(self) -> "CalibrationTable":
-        return CalibrationTable({s: self.pmf(s).std for s in self._counts})
+        sigmas = {s: self.pmf(s).std for s in self._counts}
+        sigmas.update({f"{s}.amax": v for s, v in self._amax.items()})
+        return CalibrationTable(sigmas)
 
 
 class CalibrationTable:
@@ -192,3 +210,26 @@ def observe(site: Optional[str], q_values, fmt):
     jax.debug.callback(
         lambda l, _site=site, _rec=rec: _rec.record(_site, np.asarray(l)),
         limbs)
+
+
+def observe_amax(site: Optional[str], x):
+    """Record the running absmax of a float activation at ``site``.
+
+    The static-scale twin of :func:`observe`: a no-op outside a
+    :func:`calibrating` context. The absmax reduce runs in-graph; the
+    host-side max-fold rides ``jax.debug.callback``. The table emits the
+    observation under ``"<site>.amax"``, which
+    ``QuantConfig.static_q_scale`` consumers look up via
+    ``cfg.act_sigma(f"{site}.amax")``.
+    """
+    rec = current_recorder()
+    if rec is None or site is None:
+        return
+    import jax
+    import jax.numpy as jnp
+
+    amax = jnp.max(jnp.abs(x.astype(jnp.float32)))
+    jax.debug.callback(
+        lambda a, _site=site, _rec=rec: _rec.record_amax(
+            _site, float(np.asarray(a))),
+        amax)

@@ -91,6 +91,24 @@ class QuantConfig:
         numerics of its own).
       kv_format: FP8 format of the packed cache codes (narrow-exponent
         only: the exact limb kernels decode them in-VMEM).
+      draft_layers: speculative-decoding self-draft depth. When set, the
+        serving engine's draft pass runs only the first ``draft_layers``
+        transformer layers (plus the final norm and logits head) to
+        propose candidate tokens; the full model verifies them. Draft
+        numerics never leak into accepted output — acceptance is an
+        exact ``==`` against the full model's greedy tokens — so this
+        knob trades acceptance *rate* against draft cost only. ``None``
+        disables truncated drafting (drafts run the full model, useful
+        only for testing the spec plumbing).
+      static_q_scale: use the calibrated static decode-query scale. When
+        True and ``calibration`` carries an ``"attn.q.amax"`` entry, the
+        packed/paged decode attention quantizes q with that fixed scale
+        instead of a per-step absmax reduce — one fewer reduction on the
+        decode critical path. Rows exceeding the calibrated amax are
+        clipped (the standard static-quantization contract); when the
+        running absmax stays within the calibrated one, the quantized
+        codes are bitwise identical to the dynamic path's. Falls back to
+        dynamic absmax when no calibrated entry exists.
     """
 
     dtype: str = "none"
@@ -111,8 +129,13 @@ class QuantConfig:
     calibration: Optional[Tuple[Tuple[str, float], ...]] = None
     kv_cache: str = "float"
     kv_format: str = "e4m3"
+    draft_layers: Optional[int] = None
+    static_q_scale: bool = False
 
     def __post_init__(self):
+        if self.draft_layers is not None and self.draft_layers < 1:
+            raise ValueError(f"draft_layers must be >= 1 when set, got "
+                             f"{self.draft_layers}")
         if self.dtype not in DTYPES:
             raise ValueError(f"dtype {self.dtype!r} not in {DTYPES}")
         if self.accum not in ACCUMS:

@@ -54,7 +54,8 @@ from repro.core.formats import (E4M3, FPFormat, decode_bits, encode_bits,
 __all__ = ["QuantizedKVCache", "quantize_kv", "append_kv",
            "init_quantized_kv", "dequantize_kv", "kv_cache_bytes",
            "PagedKVCache", "BlockAllocator", "TRASH_BLOCK",
-           "init_paged_kv", "paged_append_kv", "gather_paged_kv"]
+           "init_paged_kv", "paged_append_kv", "paged_rollback_kv",
+           "gather_paged_kv"]
 
 
 class QuantizedKVCache(NamedTuple):
@@ -258,41 +259,109 @@ def init_paged_kv(lead, n_blocks: int, n_heads: int, block_size: int,
 
 def paged_append_kv(cache: PagedKVCache, k_new, v_new, pos, block_table,
                     fmt: FPFormat = E4M3) -> PagedKVCache:
-    """Write each slot's one new K/V entry through its block table.
+    """Write each slot's ``T`` new K/V entries through its block table.
 
-    The decode-step (``T == 1``) twin of :func:`append_kv`: quantize the
-    ``B`` fresh entries (per-entry scales, O(new) work) and scatter each
-    into physical block ``block_table[b, pos[b] // bs]`` at in-block
-    offset ``pos[b] % bs``. Old codes and scales are bit-frozen — the
-    scatter touches exactly one (position, head) row per slot.
+    The paged twin of :func:`append_kv`: quantize the ``B * T`` fresh
+    entries (per-entry scales, O(new) work) and scatter token ``t`` of
+    slot ``b`` into physical block ``block_table[b, (pos[b] + t) // bs]``
+    at in-block offset ``(pos[b] + t) % bs``. Old codes and scales are
+    bit-frozen — the scatter touches exactly the written (position,
+    head) rows. Sequential decode uses ``T == 1``; the speculative
+    verify step writes all ``k`` candidate positions in one call, and a
+    later :func:`paged_rollback_kv` physically zeroes the rejected tail.
+
+    Per-entry quantization makes the write *idempotent*: re-appending a
+    position already holding the same float K/V rewrites the identical
+    code/scale bytes, which is why a verify append may overwrite entries
+    a cheap draft pass left behind without any bit drift.
 
     Args:
       cache: per-layer ``(P, KV, bs, hd)`` pool view.
-      k_new / v_new: ``(B, 1, KV, hd)`` fresh decode projections.
-      pos: ``(B,)`` int32 logical write positions (a free slot's
-        ``pos = 0`` lands in its zeroed table's :data:`TRASH_BLOCK`).
+      k_new / v_new: ``(B, T, KV, hd)`` fresh projections.
+      pos: ``(B,)`` int32 logical write positions of token 0 (a free
+        slot's ``pos = 0`` lands in its zeroed table's
+        :data:`TRASH_BLOCK`).
       block_table: ``(B, nb)`` int32 physical block ids.
       fmt: the cache's code format.
 
     Returns:
-      The pool with one entry per slot replaced.
+      The pool with ``T`` entries per slot replaced.
     """
-    if k_new.shape[1] != 1:
-        raise ValueError(f"paged append is the decode step (T == 1); "
-                         f"prompts enter the pool via slot adoption "
-                         f"(models.adopt_slot), got T={k_new.shape[1]}")
     bs = cache.k_codes.shape[-2]
+    nb = block_table.shape[1]
+    B, T, KV, hd = k_new.shape
     pos = pos.astype(jnp.int32)
     kc, ks = quantize_kv(k_new, fmt)
     vc, vs = quantize_kv(v_new, fmt)
-    phys = jnp.take_along_axis(block_table.astype(jnp.int32),
-                               (pos // bs)[:, None], axis=1)[:, 0]
-    off = pos % bs
+    pos_t = pos[:, None] + jnp.arange(T, dtype=jnp.int32)[None, :]
+    # Clip the table index: a free slot's pos stays 0 so it never
+    # overruns, but a live slot's last verify positions may exceed its
+    # *bucket* while still inside the admission-reserved blocks; the
+    # clip only guards the (never-read) trash scatter of free slots.
+    blk = jnp.clip(pos_t // bs, 0, nb - 1)
+    phys = jnp.take_along_axis(block_table.astype(jnp.int32), blk, axis=1)
+    off = pos_t % bs
+    phys_f, off_f = phys.reshape(-1), off.reshape(-1)
     return PagedKVCache(
-        k_codes=cache.k_codes.at[phys, :, off, :].set(kc[:, 0]),
-        v_codes=cache.v_codes.at[phys, :, off, :].set(vc[:, 0]),
-        k_scale=cache.k_scale.at[phys, :, off].set(ks[:, 0]),
-        v_scale=cache.v_scale.at[phys, :, off].set(vs[:, 0]))
+        k_codes=cache.k_codes.at[phys_f, :, off_f, :].set(
+            kc.reshape(B * T, KV, hd)),
+        v_codes=cache.v_codes.at[phys_f, :, off_f, :].set(
+            vc.reshape(B * T, KV, hd)),
+        k_scale=cache.k_scale.at[phys_f, :, off_f].set(
+            ks.reshape(B * T, KV)),
+        v_scale=cache.v_scale.at[phys_f, :, off_f].set(
+            vs.reshape(B * T, KV)))
+
+
+def paged_rollback_kv(cache: PagedKVCache, block_table, start, count,
+                      max_count: int) -> PagedKVCache:
+    """Physically zero logical positions ``[start, start + count)``.
+
+    The speculative-decoding rewind: a verify step appended ``k``
+    candidate entries, acceptance kept a prefix, and the rejected tail
+    must vanish — not just be masked out by ``lengths``, but restored to
+    the all-zero bytes a never-drafted pool would hold, so the
+    bit-identity harness can compare whole pools and block release/reuse
+    stays oblivious to speculation. Codes and scales both go to 0
+    (exactly the :func:`init_paged_kv` state for those rows).
+
+    Args:
+      cache: stacked or per-layer ``(..., P, KV, bs, hd)`` pool view —
+        the zeroing mask is per (block, offset), broadcast over every
+        leading (layer) and head axis.
+      block_table: ``(B, nb)`` int32 physical block ids.
+      start: ``(B,)`` int32 first logical position to zero.
+      count: ``(B,)`` int32 number of entries to zero (0 = no-op for
+        that slot; released/free slots pass 0).
+      max_count: static upper bound on ``count`` (the engine's
+        ``spec_k``); the scatter is fixed-shape ``B * max_count``.
+
+    Returns:
+      The pool with the named rows zeroed. :data:`TRASH_BLOCK` is never
+      zeroed (its content is scratch by contract, and masked-out
+      lanes of the scatter are redirected there).
+    """
+    bs = cache.k_codes.shape[-2]
+    nb = block_table.shape[1]
+    P = cache.k_codes.shape[-4]
+    start = start.astype(jnp.int32)
+    count = count.astype(jnp.int32)
+    pos_t = start[:, None] + jnp.arange(max_count, dtype=jnp.int32)[None, :]
+    valid = jnp.arange(max_count, dtype=jnp.int32)[None, :] < count[:, None]
+    blk = jnp.clip(pos_t // bs, 0, nb - 1)
+    phys = jnp.take_along_axis(block_table.astype(jnp.int32), blk, axis=1)
+    phys = jnp.where(valid, phys, TRASH_BLOCK)
+    off = pos_t % bs
+    hit = jnp.zeros((P, bs), jnp.bool_)
+    hit = hit.at[phys.reshape(-1), off.reshape(-1)].set(True)
+    hit = hit.at[TRASH_BLOCK].set(False)
+    zero4 = hit[:, None, :, None]   # vs (..., P, KV, bs, hd)
+    zero3 = hit[:, None, :]         # vs (..., P, KV, bs)
+    return PagedKVCache(
+        k_codes=jnp.where(zero4, jnp.uint8(0), cache.k_codes),
+        v_codes=jnp.where(zero4, jnp.uint8(0), cache.v_codes),
+        k_scale=jnp.where(zero3, jnp.float32(0), cache.k_scale),
+        v_scale=jnp.where(zero3, jnp.float32(0), cache.v_scale))
 
 
 def gather_paged_kv(cache: PagedKVCache,

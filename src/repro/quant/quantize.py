@@ -20,8 +20,9 @@ import jax.numpy as jnp
 
 from repro.core.formats import FPFormat, round_to_format
 
-__all__ = ["QTensor", "quantize_fp8", "quantize_int", "dequantize_int",
-           "fake_quant_fp8", "fake_quant_int"]
+__all__ = ["QTensor", "quantize_fp8", "quantize_fp8_static",
+           "quantize_int", "dequantize_int", "fake_quant_fp8",
+           "fake_quant_int"]
 
 
 class QTensor(NamedTuple):
@@ -50,6 +51,24 @@ def quantize_fp8(x, fmt: FPFormat, axis: Optional[int] = None,
     scale = amax / (fmt.max_finite * margin)
     q = round_to_format(x / scale, fmt)
     return QTensor(q=q, scale=scale)
+
+
+@partial(jax.jit, static_argnames=("fmt",))
+def quantize_fp8_static(x, fmt: FPFormat, amax) -> QTensor:
+    """:func:`quantize_fp8` with a *fixed* (calibrated) per-tensor absmax.
+
+    ``x``: ``(N, K)`` rows. The absmax reduce is replaced by ``amax``;
+    rows are clipped into ``[-amax, amax]`` and rounded with the same
+    scale division, under jit like the dynamic path — so a row whose own
+    absmax equals ``amax`` produces codes and scale bit-identical to
+    ``quantize_fp8(x, fmt, axis=1)`` (XLA lowers the divide-by-constant
+    identically only when both paths compile; an eager reimplementation
+    of the division is 1 ulp off the jitted one)."""
+    x = x.astype(jnp.float32)
+    a = jnp.asarray(amax, jnp.float32)
+    scale = a / fmt.max_finite
+    q = round_to_format(jnp.clip(x, -a, a) / scale, fmt)
+    return QTensor(q=q, scale=jnp.broadcast_to(scale, (x.shape[0], 1)))
 
 
 @partial(jax.jit, static_argnames=("bits", "axis", "symmetric"))

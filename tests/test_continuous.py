@@ -183,6 +183,108 @@ def test_invariance_under_mid_flight_admission(harness):
 
 
 # ---------------------------------------------------------------------------
+# speculative decoding: bitwise-exact acceptance (ISSUE-8)
+# ---------------------------------------------------------------------------
+
+
+def _spec_cfg(draft_layers=1):
+    """Spec config with a deliberately weak (1-layer) self-draft: rejections
+    are frequent, so the accept/rewind path is exercised hard."""
+    cfg = _cfg()
+    return dataclasses.replace(
+        cfg, quant=dataclasses.replace(cfg.quant,
+                                       draft_layers=draft_layers))
+
+
+@pytest.mark.parametrize("k", [1, 2, 4])
+def test_spec_bitwise_vs_sequential(harness, k):
+    """The tentpole contract: a spec_k engine's greedy tokens AND the
+    logits rows behind them are bitwise identical to the sequential
+    engine's, for every request, at every draft depth — speculation may
+    only change throughput, never bits."""
+    eng = ContinuousBatchingEngine(_spec_cfg(), harness["mesh"], slots=3,
+                                   max_len=_MAXLEN,
+                                   params=harness["eng"].params,
+                                   dims=harness["eng"].dims, spec_k=k)
+    eng.warmup(_BUCKETS, max_new=2)
+    reqs = _reqs(harness["prompts"])
+    stats = eng.serve(reqs, record_logits=True)
+    for i, req in enumerate(reqs):
+        assert req.done
+        assert req.out_tokens == harness["iso_tokens"][i], f"req {i}"
+        assert _logits_equal(stats["logits"][i],
+                             harness["base_stats"]["logits"][i]), f"req {i}"
+    spec = stats["spec"]
+    assert spec["k"] == k
+    assert 0 <= spec["accepted"] <= spec["drafted"]
+    if k == 1:
+        assert spec["drafted"] == 0
+    else:
+        # every live slot drafts k-1 per round
+        assert spec["drafted"] >= stats["steps"]
+        # accepted drafts shrink the round count below one-per-token
+        assert stats["steps"] <= harness["base_stats"]["steps"]
+
+
+def test_spec_full_depth_draft_accepts_everything(harness):
+    """A full-depth self-draft (draft_layers == n_layers) *is* the model:
+    every draft matches its verify target, so acceptance is 100% and each
+    round commits all k tokens — the internal consistency check that
+    verify positions really do reproduce sequential decode."""
+    cfg = harness["cfg"]
+    eng = ContinuousBatchingEngine(
+        _spec_cfg(draft_layers=cfg.n_layers), harness["mesh"], slots=3,
+        max_len=_MAXLEN, params=harness["eng"].params,
+        dims=harness["eng"].dims, spec_k=3)
+    eng.warmup(_BUCKETS, max_new=2)
+    reqs = _reqs(harness["prompts"])
+    stats = eng.serve(reqs)
+    for i, req in enumerate(reqs):
+        assert req.out_tokens == harness["iso_tokens"][i], f"req {i}"
+    assert stats["spec"]["accepted"] == stats["spec"]["drafted"]
+    assert stats["spec"]["acceptance_rate"] == 1.0
+
+
+def test_spec_invariance_under_mid_flight_admission(harness):
+    """Admission interleaved with speculative rounds (the feed hook
+    fires between draft/verify rounds): latecomers admitted while
+    neighbors are mid-speculation still get sequential-identical bits,
+    and the in-flight requests are undisturbed."""
+    eng = ContinuousBatchingEngine(_spec_cfg(), harness["mesh"], slots=2,
+                                   max_len=_MAXLEN,
+                                   params=harness["eng"].params,
+                                   dims=harness["eng"].dims, spec_k=2)
+    eng.warmup(_BUCKETS, max_new=2)
+    prompts = harness["prompts"]
+    reqs = _reqs(prompts, rid0=0)
+    pending = [[reqs[3]], [reqs[4], reqs[5]]]
+    polls = {"n": 0}
+
+    def feed():
+        polls["n"] += 1
+        if polls["n"] >= 2 and pending:
+            return pending.pop(0)
+        return []
+
+    stats = eng.serve(reqs[:3], record_logits=True, feed=feed)
+    assert not pending, "feed was never drained"
+    for i, req in enumerate(reqs):
+        assert req.out_tokens == harness["iso_tokens"][i], f"req {i}"
+        assert _logits_equal(stats["logits"][i],
+                             harness["base_stats"]["logits"][i]), f"req {i}"
+
+
+def test_spec_guards():
+    mesh = make_mesh((1, 1), ("data", "model"))
+    with pytest.raises(ValueError, match="spec_k"):
+        ContinuousBatchingEngine(_spec_cfg(), mesh, slots=2,
+                                 max_len=_MAXLEN, spec_k=0)
+    with pytest.raises(ValueError, match="continuous"):
+        make_engine(_spec_cfg(), mesh, batch=2, max_len=_MAXLEN,
+                    spec_k=2)
+
+
+# ---------------------------------------------------------------------------
 # bucket agreement: no uncounted recompiles (the small-fix regression)
 # ---------------------------------------------------------------------------
 
@@ -370,3 +472,86 @@ def test_native_continuous_bit_identity():
     t1 = tokens_on(make_mesh((1, 1), ("data", "model")))
     t8 = tokens_on(make_serve_mesh())
     assert t1 == t8
+
+
+_SPEC_SHARD_CODE = """
+import dataclasses, json
+import jax, numpy as np
+from repro.configs import reduced_config
+from repro.launch.mesh import make_mesh, make_serve_mesh
+from repro.launch.serve import ContinuousBatchingEngine, Request
+from repro.models import init_params
+from repro.quant import QuantConfig
+
+cfg = dataclasses.replace(
+    reduced_config("deepseek-7b"),
+    quant=QuantConfig(dtype="fp8_e4m3", accum="mgs_exact",
+                      kv_cache="packed", per_row_act=True,
+                      block_m=32, block_n=32, block_k=32,
+                      draft_layers=1))
+params, dims = init_params(cfg, jax.random.PRNGKey(0))
+rng = np.random.default_rng(7)
+prompts = [rng.integers(1, cfg.vocab, n).astype(np.int32)
+           for n in (5, 11, 3)]
+
+def run_on(mesh, spec_k):
+    eng = ContinuousBatchingEngine(cfg, mesh, slots=2, max_len=36,
+                                   params=params, dims=dims,
+                                   spec_k=spec_k)
+    eng.warmup([8, 16], max_new=2)
+    reqs = [Request(rid=i, prompt=p.copy(), max_new_tokens=3)
+            for i, p in enumerate(prompts)]
+    stats = eng.serve(reqs, record_logits=True)
+    return reqs, stats["logits"]
+
+r1, l1 = run_on(make_mesh((1, 1), ("data", "model")), None)
+r8, l8 = run_on(make_serve_mesh(), 2)
+print(json.dumps({
+    "ndev": jax.device_count(),
+    "tokens_equal": all(a.out_tokens == b.out_tokens
+                        for a, b in zip(r1, r8)),
+    "logits_bitwise": all(
+        len(l1[i]) == len(l8[i])
+        and all((x == y).all() for x, y in zip(l1[i], l8[i]))
+        for i in range(len(prompts)))}))
+"""
+
+
+@pytest.mark.slow
+def test_spec_sharded_bit_identity():
+    """ISSUE-8 acceptance: speculative decode on a forced-8-device mesh
+    produces the same bits as *sequential* decode on a single device —
+    the two orthogonal invariances (shard layout, speculation) compose."""
+    res = json.loads(_run(_SPEC_SHARD_CODE).strip().splitlines()[-1])
+    assert res["ndev"] == 8
+    assert res["tokens_equal"]
+    assert res["logits_bitwise"]
+
+
+@pytest.mark.multidevice
+@pytest.mark.skipif(jax.device_count() < 8,
+                    reason="needs XLA_FLAGS forced >= 8 host devices "
+                           "(scripts/ci.sh multi-device shard)")
+def test_native_spec_bit_identity():
+    from repro.launch.mesh import make_serve_mesh
+    from repro.models import init_params
+
+    cfg = _spec_cfg()
+    params, dims = init_params(cfg, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(7)
+    prompts = [rng.integers(1, cfg.vocab, n).astype(np.int32)
+               for n in (5, 11, 3)]
+
+    def tokens_on(mesh, spec_k):
+        eng = ContinuousBatchingEngine(cfg, mesh, slots=2, max_len=36,
+                                       params=params, dims=dims,
+                                       spec_k=spec_k)
+        eng.warmup([8, 16], max_new=2)
+        reqs = [Request(rid=i, prompt=p.copy(), max_new_tokens=3)
+                for i, p in enumerate(prompts)]
+        eng.serve(reqs)
+        return [r.out_tokens for r in reqs]
+
+    t_seq = tokens_on(make_mesh((1, 1), ("data", "model")), None)
+    t_spec = tokens_on(make_serve_mesh(), 2)
+    assert t_seq == t_spec

@@ -225,6 +225,218 @@ def test_packed_cache_config_validation():
         QuantConfig(**dict(_PACKED, kv_format="e5m2"))
     assert QuantConfig(**_PACKED).quantized_kv
     assert QuantConfig(**_PACKED).kv_fmt.name == "e4m3"
+    with pytest.raises(ValueError, match="draft_layers"):
+        QuantConfig(**dict(_PACKED), draft_layers=0)
+
+
+# ---------------------------------------------------------------------------
+# packed cross-attention (encoder-decoder), ISSUE-8 satellite
+# ---------------------------------------------------------------------------
+
+
+def _whisper_cfg(kv: str):
+    return dataclasses.replace(
+        reduced_config("whisper-tiny"), compute_dtype="float32",
+        quant=QuantConfig(dtype="fp8_e4m3", accum="mgs_exact",
+                          kv_cache=kv))
+
+
+def test_packed_cross_attention_whisper(rng):
+    """Whisper decode through packed-FP8 cross planes: the codes are
+    written exactly once at prefill (bit-frozen across decode steps),
+    equal ``quantize_kv`` of the float-path projected encoder K/V bit
+    for bit, and end-to-end decode logits stay within fp8 noise of the
+    float-cross run."""
+    B = 2
+    cfg_f = _whisper_cfg("float")
+    cfg_p = _whisper_cfg("packed")
+    params, _ = init_params(cfg_p, jax.random.PRNGKey(0))
+    toks = jnp.asarray(rng.integers(1, cfg_p.vocab, (B, 8)), jnp.int32)
+    audio = jnp.asarray(
+        rng.normal(0, 1, (B, cfg_p.encoder_len, cfg_p.d_model))
+        .astype(np.float32))
+    outs, caches = {}, {}
+    for cfg in (cfg_f, cfg_p):
+        kv = cfg.quant.kv_cache
+        cache, _ = init_cache(cfg, B, 12)
+        lg, cache = prefill(params, cfg,
+                            {"tokens": toks[:, :6], "audio_embeds": audio},
+                            cache)
+        snap = {k: np.asarray(cache[k]).copy()
+                for k in ("cross_k", "cross_v")}
+        for t in (6, 7):
+            lg, cache = decode_step(params, cfg, toks[:, t:t + 1], cache)
+        for k, v in snap.items():     # write-once: decode never touches
+            np.testing.assert_array_equal(np.asarray(cache[k]), v)
+        outs[kv] = np.asarray(lg, np.float32)
+        caches[kv] = cache
+    pc = caches["packed"]
+    assert pc["cross_k"].dtype == jnp.uint8
+    # packed planes == quantize_kv of the full-precision projected
+    # encoder K/V (recomputed here; the float cache stores them rounded
+    # to kv_cache_dtype, so it is NOT the bitwise source of truth),
+    # zero-padded to the chunk multiple
+    from repro.models.linear import proj as _proj
+    from repro.models.transformer import _cast_params, _encode
+    cast = _cast_params(params, cfg_p)
+    enc_out = _encode(cast, cfg_p, audio)
+    ck, cv = jax.lax.map(
+        lambda pcl: (_proj(enc_out, pcl["attn"]["wk"], cfg_p.quant),
+                     _proj(enc_out, pcl["attn"]["wv"], cfg_p.quant)),
+        cast["cross"])
+    enc = cfg_p.encoder_len
+    for plane, scale, fk in (("cross_k", "cross_k_scale", ck),
+                             ("cross_v", "cross_v_scale", cv)):
+        qc, qs = quantize_kv(fk, cfg_p.quant.kv_fmt)
+        np.testing.assert_array_equal(
+            np.asarray(jnp.swapaxes(pc[plane], 2, 3)[:, :, :enc]),
+            np.asarray(qc))
+        np.testing.assert_array_equal(
+            np.asarray(jnp.swapaxes(pc[scale], 2, 3)[:, :, :enc]),
+            np.asarray(qs))
+        # the pad tail beyond encoder_len is never written
+        assert not np.asarray(pc[plane])[:, :, :, enc:].any()
+    # two quantized caches (self + cross) compound: noise-level bound,
+    # plus greedy-decision agreement (the serving observable)
+    rel = (np.abs(outs["packed"] - outs["float"]).max()
+           / np.abs(outs["float"]).max())
+    assert rel < 0.5, rel
+    assert (outs["packed"].argmax(-1) == outs["float"].argmax(-1)).all()
+
+
+def test_packed_cross_decode_bitwise_kernel_vs_emulation(rng):
+    """The cross-attention packed path honors the repo-wide tier
+    contract at its granularity — the op: one decoder layer's
+    cross-attention over the same packed encoder planes is bit-identical
+    between the Pallas kernel tier (interpret mode) and the pure-jnp
+    emulation tier, exactly like the dense-matmul pins in test_qeinsum
+    and the flash-kernel pin above. End-to-end whisper logits are
+    pinned to noise-bound + argmax agreement only: the encoder/decoder
+    float glue (rms_norm, residual adds) compiles into a different XLA
+    program per tier and drifts at the ulp level, which the per-entry
+    cache quantization can amplify into a code flip — op-level tier
+    equality, not whole-program bit equality, is the contract."""
+    from repro.models.attention import attention_apply
+
+    B = 2
+    base = _whisper_cfg("packed")
+    KV, hd, S = base.n_kv_heads, base.head_dim, base.encoder_len
+    params, _ = init_params(base, jax.random.PRNGKey(0))
+    x = jnp.asarray(rng.normal(0, 1, (B, 1, base.d_model))
+                    .astype(np.float32))
+    kf = jnp.asarray(rng.normal(0, 1, (B, S, KV, hd)).astype(np.float32))
+    vf = jnp.asarray(rng.normal(0, 1, (B, S, KV, hd)).astype(np.float32))
+    kc, ks = quantize_kv(kf, base.quant.kv_fmt)
+    vc, vs = quantize_kv(vf, base.quant.kv_fmt)
+    ckv = QuantizedKVCache(jnp.swapaxes(kc, 1, 2), jnp.swapaxes(vc, 1, 2),
+                           jnp.swapaxes(ks, 1, 2), jnp.swapaxes(vs, 1, 2))
+    pl = jax.tree_util.tree_map(lambda a: a[0], params["cross"])
+    positions = jnp.full((B, 1), 6, jnp.int32)
+
+    def tier(use_kernel):
+        return dataclasses.replace(
+            base, quant=dataclasses.replace(
+                base.quant, use_kernel=use_kernel, fused=use_kernel,
+                block_m=32, block_n=32, block_k=32))
+
+    op = {}
+    for use_kernel in (False, True):
+        o, _ = attention_apply(pl["attn"], x, tier(use_kernel),
+                               positions=positions, causal=False,
+                               cross_kv=ckv)
+        op[use_kernel] = np.asarray(o)
+    np.testing.assert_array_equal(op[False], op[True])
+
+    toks = jnp.asarray(rng.integers(1, base.vocab, (B, 8)), jnp.int32)
+    audio = jnp.asarray(
+        rng.normal(0, 1, (B, base.encoder_len, base.d_model))
+        .astype(np.float32))
+    outs = {}
+    for use_kernel in (False, True):
+        cfg = tier(use_kernel)
+        cache, _ = init_cache(cfg, B, 12)
+        lg, cache = prefill(params, cfg,
+                            {"tokens": toks[:, :6], "audio_embeds": audio},
+                            cache)
+        for t in (6, 7):
+            lg, cache = decode_step(params, cfg, toks[:, t:t + 1], cache)
+        outs[use_kernel] = np.asarray(lg)
+    rel = (np.abs(outs[False] - outs[True]).max()
+           / np.abs(outs[False]).max())
+    assert rel < 0.1, rel
+    assert (outs[False].argmax(-1) == outs[True].argmax(-1)).all()
+
+
+# ---------------------------------------------------------------------------
+# calibrated static decode-q scale, ISSUE-8 satellite
+# ---------------------------------------------------------------------------
+
+
+def test_static_q_scale_pin_and_fallback(rng):
+    """The static (calibrated-amax) decode-q path: for a row whose
+    absmax equals the calibrated amax, codes AND scale are bitwise
+    identical to the dynamic per-step path (the f32 ``amax /
+    max_finite`` division is shared); without a table — or with
+    ``static_q_scale`` off — the helper IS the dynamic path; and the
+    coarser shared scale keeps absolute error within the format's
+    top-binade ulp."""
+    from repro.models.attention import _quantize_decode_q
+    from repro.quant import CalibrationTable
+
+    q2 = jnp.asarray(rng.normal(0, 3, (4, 32)).astype(np.float32))
+    amax = float(np.abs(np.asarray(q2)).max())
+    row = int(np.abs(np.asarray(q2)).max(axis=1).argmax())
+    dyn_cfg = QuantConfig(**_PACKED, per_row_act=True)
+    st_cfg = dataclasses.replace(
+        dyn_cfg, static_q_scale=True).with_calibration(
+            CalibrationTable({"attn.q.amax": amax}))
+    dyn = quantize_fp8(q2, E4M3, axis=1)
+    st = _quantize_decode_q(q2, st_cfg)
+    assert st.scale.shape == dyn.scale.shape
+    # the pin: the amax-achieving row quantizes identically
+    np.testing.assert_array_equal(np.asarray(st.scale[row]),
+                                  np.asarray(dyn.scale[row]))
+    np.testing.assert_array_equal(np.asarray(st.q[row]),
+                                  np.asarray(dyn.q[row]))
+    # dynamic fallback: flag off, missing table, and degenerate amax
+    for qc in (dyn_cfg,
+               dataclasses.replace(dyn_cfg, static_q_scale=True),
+               dataclasses.replace(
+                   dyn_cfg, static_q_scale=True).with_calibration(
+                       CalibrationTable({"attn.q.amax": 0.0}))):
+        fb = _quantize_decode_q(q2, qc)
+        np.testing.assert_array_equal(np.asarray(fb.q),
+                                      np.asarray(dyn.q))
+        np.testing.assert_array_equal(np.asarray(fb.scale),
+                                      np.asarray(dyn.scale))
+    # coarser static scale still reconstructs within top-binade ulp
+    deq = np.asarray(st.q) * np.asarray(st.scale)
+    assert np.abs(deq - np.asarray(q2)).max() <= amax * 0.05
+
+
+def test_decode_records_q_amax_under_calibration(rng):
+    """An eager decode step under ``calibrating()`` observes the decode
+    query absmax at the ``attn.q`` site; the table carries it as
+    ``attn.q.amax`` through the existing sigma-pairs plumbing, where
+    ``act_sigma`` (the static path's lookup) finds it."""
+    from repro.quant import CalibrationTable, calibrating
+
+    cfg = dataclasses.replace(_packed_cfg(per_row_act=True),
+                              compute_dtype="float32")
+    params, _ = init_params(cfg, jax.random.PRNGKey(0))
+    toks = jnp.asarray(rng.integers(1, 256, (2, 7)), jnp.int32)
+    cache, _ = init_cache(cfg, 2, 10)
+    lg, cache = prefill(params, cfg, {"tokens": toks[:, :6]}, cache)
+    with calibrating() as rec:
+        decode_step(params, cfg, toks[:, 6:7], cache)
+    table = rec.table()
+    amax = table.sigma("attn.q.amax")
+    assert amax is not None and amax > 0.0
+    qc = cfg.quant.with_calibration(table)
+    assert qc.act_sigma("attn.q.amax") == pytest.approx(amax)
+    # round-trips through the pairs encoding
+    assert CalibrationTable.from_pairs(qc.calibration).sigma(
+        "attn.q.amax") == pytest.approx(amax)
 
 
 # ---------------------------------------------------------------------------

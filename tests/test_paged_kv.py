@@ -30,10 +30,11 @@ from repro.core.formats import E4M3
 from repro.kernels.mgs_attention import (mgs_flash_attention,
                                          mgs_flash_attention_ref,
                                          mgs_paged_flash_attention)
-from repro.quant.kvcache import (BlockAllocator, QuantizedKVCache,
-                                 TRASH_BLOCK, append_kv, dequantize_kv,
-                                 gather_paged_kv, init_paged_kv,
-                                 init_quantized_kv, paged_append_kv,
+from repro.quant.kvcache import (BlockAllocator, PagedKVCache,
+                                 QuantizedKVCache, TRASH_BLOCK, append_kv,
+                                 dequantize_kv, gather_paged_kv,
+                                 init_paged_kv, init_quantized_kv,
+                                 paged_append_kv, paged_rollback_kv,
                                  quantize_kv)
 from repro.quant.quantize import quantize_fp8
 
@@ -164,12 +165,27 @@ def test_paged_append_bit_freezes_everything_else(rng):
                 np.asarray(ks[b, 0]))
 
 
-def test_paged_append_requires_single_token():
-    pool = init_paged_kv((), 4, _KV, _BS, _HD)
-    k = jnp.zeros((1, 2, _KV, _HD))
-    with pytest.raises(ValueError, match="adopt_slot"):
-        paged_append_kv(pool, k, k, jnp.zeros((1,), jnp.int32),
-                        jnp.zeros((1, 2), jnp.int32), E4M3)
+def test_paged_append_multi_token_bitwise(rng):
+    """The speculative verify append (T > 1, one call) writes exactly the
+    bytes T sequential single-token appends would — including across a
+    block boundary."""
+    nb, T = 2, 3
+    pos0 = _BS - 2   # tokens straddle the block boundary
+    table = jnp.asarray([[1, 2]], jnp.int32)
+    k = jnp.asarray(rng.normal(0, 2, (1, T, _KV, _HD)).astype(np.float32))
+    v = jnp.asarray(rng.normal(0, 2, (1, T, _KV, _HD)).astype(np.float32))
+    seq = init_paged_kv((), nb + 1, _KV, _BS, _HD)
+    for t in range(T):
+        seq = paged_append_kv(seq, k[:, t:t + 1], v[:, t:t + 1],
+                              jnp.asarray([pos0 + t], jnp.int32), table,
+                              E4M3)
+    multi = paged_append_kv(init_paged_kv((), nb + 1, _KV, _BS, _HD),
+                            k, v, jnp.asarray([pos0], jnp.int32), table,
+                            E4M3)
+    for f in PagedKVCache._fields:
+        np.testing.assert_array_equal(np.asarray(getattr(multi, f)),
+                                      np.asarray(getattr(seq, f)),
+                                      err_msg=f)
 
 
 def test_paged_dense_dequantize_bitwise_ragged(rng):
@@ -351,3 +367,138 @@ def test_paged_kernel_ignores_trash_and_stale_blocks(rng):
                                       jnp.asarray(vp2), bt, live, qk, vs,
                                       bias, E4M3, use_kernel=True)
     np.testing.assert_array_equal(np.asarray(before), np.asarray(after))
+
+
+# ---------------------------------------------------------------------------
+# speculative rollback: draft-then-rewind leaves no trace (ISSUE-8)
+# ---------------------------------------------------------------------------
+
+
+def _grown_pool(rng, table, length):
+    """A pool grown ``length`` committed tokens via sequential appends."""
+    pool = init_paged_kv((), int(np.asarray(table).max()) + 1, _KV, _BS,
+                         _HD)
+    for t in range(length):
+        k = jnp.asarray(rng.normal(0, 2, (1, 1, _KV, _HD))
+                        .astype(np.float32))
+        v = jnp.asarray(rng.normal(0, 2, (1, 1, _KV, _HD))
+                        .astype(np.float32))
+        pool = paged_append_kv(pool, k, v, jnp.asarray([t], jnp.int32),
+                               table, E4M3)
+    return pool
+
+
+@pytest.mark.parametrize("accepted", [0, 1, 2, 3])
+def test_paged_rollback_restores_never_drafted_state(rng, accepted):
+    """The engine's speculative round at the pool level: append ``k``
+    candidate rows, accept ``e``, roll back the rest — the pool must be
+    bitwise equal to one that only ever appended the ``e`` accepted
+    tokens. Exercised across a block boundary."""
+    k_spec = 3
+    pos0 = _BS - 1   # candidates straddle the boundary
+    table = jnp.asarray([[1, 2]], jnp.int32)
+    committed = _grown_pool(rng, table, pos0)
+    k = jnp.asarray(rng.normal(0, 2, (1, k_spec, _KV, _HD))
+                    .astype(np.float32))
+    v = jnp.asarray(rng.normal(0, 2, (1, k_spec, _KV, _HD))
+                    .astype(np.float32))
+    spec = paged_append_kv(committed, k, v, jnp.asarray([pos0], jnp.int32),
+                           table, E4M3)
+    rolled = paged_rollback_kv(
+        spec, table, jnp.asarray([pos0 + accepted], jnp.int32),
+        jnp.asarray([k_spec - accepted], jnp.int32), k_spec)
+    baseline = committed
+    if accepted:
+        baseline = paged_append_kv(committed, k[:, :accepted],
+                                   v[:, :accepted],
+                                   jnp.asarray([pos0], jnp.int32), table,
+                                   E4M3)
+    for f in PagedKVCache._fields:
+        np.testing.assert_array_equal(np.asarray(getattr(rolled, f)),
+                                      np.asarray(getattr(baseline, f)),
+                                      err_msg=f"accepted={accepted} {f}")
+
+
+def test_paged_rollback_preserves_other_slots_and_allocator(rng):
+    """Rolling back one slot's rejected tail never touches another
+    slot's bytes, the trash block, or the allocator: rollback is pure
+    pool arithmetic — blocks stay owned by their slot, so the free list
+    is bitwise the same host object state afterwards."""
+    alloc = BlockAllocator(6)
+    t0 = alloc.alloc(2)
+    t1 = alloc.alloc(2)
+    free_before = list(alloc._free)
+    table = jnp.asarray([t0, t1], jnp.int32)
+    pool = init_paged_kv((), 6, _KV, _BS, _HD)
+    pool = pool._replace(
+        k_codes=jnp.asarray(rng.integers(0, 255, pool.k_codes.shape),
+                            jnp.uint8))
+    k = jnp.asarray(rng.normal(0, 2, (2, 2, _KV, _HD)).astype(np.float32))
+    pos = jnp.asarray([1, _BS - 1], jnp.int32)
+    spec = paged_append_kv(pool, k, k, pos, table, E4M3)
+    # slot 0 keeps 0 of 2 candidates, slot 1 keeps both (count 0)
+    rolled = paged_rollback_kv(spec, table, pos,
+                               jnp.asarray([2, 0], jnp.int32), 2)
+    assert list(alloc._free) == free_before
+    # slot 1's candidate rows survive untouched
+    for t in range(2):
+        p = int(pos[1]) + t
+        blk, off = int(table[1, p // _BS]), p % _BS
+        np.testing.assert_array_equal(
+            np.asarray(rolled.k_codes[blk, :, off]),
+            np.asarray(spec.k_codes[blk, :, off]))
+    # the trash block is never zeroed by a rollback (dead slots park
+    # their rejected rows there via TRASH_BLOCK-masked tables)
+    np.testing.assert_array_equal(np.asarray(rolled.k_codes[TRASH_BLOCK]),
+                                  np.asarray(spec.k_codes[TRASH_BLOCK]))
+    # slot 0's rejected rows are back to the pre-append bytes... which a
+    # count=0 rollback of everything leaves fully intact
+    ident = paged_rollback_kv(spec, table, pos,
+                              jnp.asarray([0, 0], jnp.int32), 2)
+    for f in PagedKVCache._fields:
+        np.testing.assert_array_equal(np.asarray(getattr(ident, f)),
+                                      np.asarray(getattr(spec, f)),
+                                      err_msg=f)
+
+
+# ---------------------------------------------------------------------------
+# multi-query verify kernel: per-token bitwise factoring (ISSUE-8)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("base_lengths", [(5, 0, 14), (1, 16, 8)])
+def test_paged_verify_bitwise_per_token(rng, base_lengths):
+    """The T>1 verify entry is a pure flattening: token ``t`` of slice
+    ``n`` comes out bitwise equal to a standalone T=1 paged call with
+    that token's own length/scale/bias rows — on both tiers — so exact
+    ``==`` acceptance against sequential decode is sound."""
+    from repro.kernels.mgs_attention import mgs_paged_verify_attention
+    T, R = 3, 2
+    _, kp, vp, bt, _, _, _, _, _ = _paged_case(rng, base_lengths)
+    N = len(base_lengths)
+    S = bt.shape[1] * kp.shape[1]
+    q = jnp.asarray(rng.normal(0, 1, (N, T, R, 16)).astype(np.float32))
+    # per-token causal horizons: dead slots stay dead for every token
+    lengths = np.zeros((N, T), np.int32)
+    for n, ln in enumerate(base_lengths):
+        for t in range(T):
+            lengths[n, t] = min(ln + t + 1, S) if ln else 0
+    qk = rng.normal(0, 1, (N, T, S)).astype(np.float32)
+    vs = rng.normal(0, 1, (N, T, S)).astype(np.float32)
+    live_mask = np.arange(S)[None, None] < lengths[:, :, None]
+    qk = np.where(live_mask, qk, 0.0).astype(np.float32)
+    vs = np.where(live_mask, vs, 0.0).astype(np.float32)
+    bias = np.where(live_mask, 0.0, -1e30).astype(np.float32)
+    lengths, qk, vs, bias = map(jnp.asarray, (lengths, qk, vs, bias))
+    for use_kernel in (False, True):
+        got = mgs_paged_verify_attention(q, kp, vp, bt, lengths, qk, vs,
+                                         bias, E4M3,
+                                         use_kernel=use_kernel)
+        assert got.shape == (N, T, R, 16)
+        for t in range(T):
+            solo = mgs_paged_flash_attention(
+                q[:, t], kp, vp, bt, lengths[:, t], qk[:, t], vs[:, t],
+                bias[:, t], E4M3, use_kernel=use_kernel)
+            np.testing.assert_array_equal(
+                np.asarray(got[:, t]), np.asarray(solo),
+                err_msg=f"kernel={use_kernel} token {t}")
