@@ -15,8 +15,8 @@ from .common import Csv
 
 
 def main() -> None:
-    from . import (decode_bench, failover, fig3_dot_error, fig4_overflow,
-                   fig5_markov, fig9_pareto, kernel_bench,
+    from . import (decode_bench, drift, failover, fig3_dot_error,
+                   fig4_overflow, fig5_markov, fig9_pareto, kernel_bench,
                    replica_throughput, roofline_table, serving_bench,
                    spec_bench, table1_accuracy, table3_energy)
     suites = {
@@ -31,6 +31,7 @@ def main() -> None:
         "replica": replica_throughput.run,
         "decode": decode_bench.run,
         "failover": failover.run,
+        "drift": drift.run,
         "serving": serving_bench.run,
         "spec": spec_bench.run,
     }

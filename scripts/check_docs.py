@@ -42,7 +42,11 @@ API_MODULES = ("repro.launch.serve", "repro.launch.replica",
                # the paged model steps (draft/verify/rewind) and the
                # multi-query verify attention kernel are public serving
                # API and must stay documented.
-               "repro.models", "repro.kernels.mgs_attention")
+               "repro.models", "repro.kernels.mgs_attention",
+               # joined with ISSUE-9: the streaming-calibration surface
+               # (drift detection + versioned hot-swap flush plans) is
+               # public serving API and must stay documented.
+               "repro.quant.streaming")
 API_SKIP = {"main"}
 
 

@@ -40,6 +40,11 @@ XLA_FLAGS="--xla_force_host_platform_device_count=8" \
 # the shard-layout and speculation invariances compose.
 XLA_FLAGS="--xla_force_host_platform_device_count=8" \
     python -m pytest -x -q -m multidevice tests/test_continuous.py
+# Streaming-calibration shard (ISSUE-9): fault-injected fleet hot swap
+# on the 8-device replica set — versioned table pushed mid-traffic with
+# zero drops, PREP_STATS flat, jit caches pinned, health undisturbed.
+XLA_FLAGS="--xla_force_host_platform_device_count=8" \
+    python -m pytest -x -q -m multidevice tests/test_streaming_calib.py
 
 # Decode-bench smoke (ISSUE-5): analytic HBM accounting + measured
 # float-vs-packed decode wall time; refreshes BENCH_decode.json.
@@ -60,6 +65,12 @@ python -m benchmarks.run serving
 # the fast sweep keeps CI short — the full sweep (python -m
 # benchmarks.run spec) refreshes the tracked BENCH_spec.json.
 REPRO_SPEC_BENCH_FAST=1 python -m benchmarks.run spec
+
+# Drift-benchmark smoke (ISSUE-9): synthetic mid-stream distribution
+# shift — the streaming-refresh flush plan recovers to within 10% of
+# the freshly-calibrated oracle, the static plan does not (the module
+# asserts the acceptance itself); refreshes BENCH_drift.json.
+python -m benchmarks.run drift
 
 # Continuous-batching CLI smoke: slot-level serving end to end through
 # the __main__ entry point (FP8_MGS_SERVE_PAGED preset, reduced tiles).

@@ -159,8 +159,8 @@ def _flush_classes(acc_i, acc_f):
     acc_i[...] = jnp.zeros_like(acc_i)
 
 
-def _exact_kernel(lx_ref, lw_ref, o_ref, acc_i, acc_f, *, nsteps: int,
-                  flush_period: int, out_scale: float):
+def _exact_kernel(lx_ref, lw_ref, fp_ref, o_ref, acc_i, acc_f, *,
+                  nsteps: int, out_scale: float):
     k = pl.program_id(2)
 
     @pl.when(k == 0)
@@ -170,7 +170,7 @@ def _exact_kernel(lx_ref, lw_ref, o_ref, acc_i, acc_f, *, nsteps: int,
 
     _accumulate_classes(acc_i, lx_ref, lw_ref)
 
-    @pl.when((jax.lax.rem(k + 1, flush_period) == 0) | (k == nsteps - 1))
+    @pl.when((jax.lax.rem(k + 1, fp_ref[0, 0]) == 0) | (k == nsteps - 1))
     def _flush():
         _flush_classes(acc_i, acc_f)
 
@@ -179,10 +179,35 @@ def _exact_kernel(lx_ref, lw_ref, o_ref, acc_i, acc_f, *, nsteps: int,
         o_ref[...] = acc_f[...] * out_scale
 
 
+def _flush_scalar(flush_period, block_k: int, nsteps: int):
+    """Flush period as a (1, 1) int32 SMEM kernel operand.
+
+    The period is a *runtime scalar*, not a trace constant: re-planning
+    it (e.g. from a hot-swapped calibration table) must never cost a
+    recompile. Note the period IS bit-affecting: the int32 class
+    partials are exact regardless, but each flush rounds them into the
+    f32 wide accumulator, so different periods can differ in the last
+    ulp — which is why serve engines version the period alongside the
+    table and pin it per request. A period beyond the grid means "flush
+    once at the end"; the in-graph clamp also keeps the in-kernel rem()
+    in int32 range for Markov-planned periods.
+    """
+    if flush_period is None:
+        flush_period = worst_case_flush_period(block_k)
+    if isinstance(flush_period, int):
+        # Markov plans on near-uniform sigmas can exceed int32; any
+        # period >= nsteps means the same thing ("flush once at the end")
+        flush_period = min(flush_period, 2**31 - 1)
+    fp = jnp.clip(jnp.asarray(flush_period, jnp.int32), 1, nsteps)
+    return fp.reshape(1, 1)
+
+
+_FP_SPEC = pl.BlockSpec(memory_space=pltpu.SMEM)
+
+
 @functools.partial(
     jax.jit,
-    static_argnames=("fmt", "block_m", "block_n", "block_k", "flush_period",
-                     "interpret"))
+    static_argnames=("fmt", "block_m", "block_n", "block_k", "interpret"))
 def mgs_matmul_exact_pallas(x, w, fmt: FPFormat = E4M3, *, block_m: int = 128,
                             block_n: int = 128, block_k: int = 128,
                             flush_period: int | None = None,
@@ -196,7 +221,12 @@ def mgs_matmul_exact_pallas(x, w, fmt: FPFormat = E4M3, *, block_m: int = 128,
       fmt: narrow-exponent FP8 format (E4M3 default).
       block_m / block_n / block_k: Pallas tile sizes.
       flush_period: K-grid steps between narrow->wide flushes (``None`` =
-        :func:`worst_case_flush_period`).
+        :func:`worst_case_flush_period`). A **runtime scalar** (python
+        int or traced int32), shipped to the kernel through SMEM — never
+        a trace constant, so re-planned periods swap in without a
+        recompile. The period is bit-affecting (each flush rounds the
+        exact int32 partials into the f32 wide accumulator), so it is
+        versioned calibration state upstream.
       w_limbs: (3, K, N) int8 pre-decomposed limb planes (e.g. a cached
         ``quant.prepared.PreparedWeight.limbs`` plane).
       interpret: run in Pallas interpret mode (CPU tests).
@@ -218,16 +248,11 @@ def mgs_matmul_exact_pallas(x, w, fmt: FPFormat = E4M3, *, block_m: int = 128,
     else:
         lw = limb_decompose(_pad2(w, Kp, Np), fmt)      # (3, Kp, Np) int8
     nsteps = Kp // block_k
-    if flush_period is None:
-        flush_period = worst_case_flush_period(block_k)
-    # A period beyond the grid means "flush once at the end"; clamping also
-    # keeps the in-kernel rem() in int32 range for Markov-planned periods.
-    flush_period = max(1, min(flush_period, nsteps))
+    fp = _flush_scalar(flush_period, block_k, nsteps)
     out_scale = 2.0 ** (-2 * (fmt.bias + fmt.mbits))
 
     grid = (Mp // block_m, Np // block_n, nsteps)
     kernel = functools.partial(_exact_kernel, nsteps=nsteps,
-                               flush_period=flush_period,
                                out_scale=out_scale)
     out = pl.pallas_call(
         kernel,
@@ -237,6 +262,7 @@ def mgs_matmul_exact_pallas(x, w, fmt: FPFormat = E4M3, *, block_m: int = 128,
                          lambda i, j, k: (0, i, k)),
             pl.BlockSpec((_N_LIMBS, block_k, block_n),
                          lambda i, j, k: (0, k, j)),
+            _FP_SPEC,
         ],
         out_specs=pl.BlockSpec((block_m, block_n), lambda i, j, k: (i, j)),
         out_shape=jax.ShapeDtypeStruct((Mp, Np), jnp.float32),
@@ -247,7 +273,7 @@ def mgs_matmul_exact_pallas(x, w, fmt: FPFormat = E4M3, *, block_m: int = 128,
         compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
-    )(lx, lw)
+    )(lx, lw, fp)
     return out[:M, :N]
 
 
@@ -266,8 +292,8 @@ def _epilogue(r, scale_ref, bias_ref, activation: str, has_scale: bool,
     return ACTIVATIONS[activation](r)
 
 
-def _exact_fused_kernel(xc_ref, wc_ref, scale_ref, bias_ref, o_ref, acc_i,
-                        acc_f, *, nsteps: int, flush_period: int,
+def _exact_fused_kernel(xc_ref, wc_ref, scale_ref, bias_ref, fp_ref, o_ref,
+                        acc_i, acc_f, *, nsteps: int,
                         out_scale: float, fmt: FPFormat, activation: str,
                         has_scale: bool, has_bias: bool):
     k = pl.program_id(2)
@@ -282,7 +308,7 @@ def _exact_fused_kernel(xc_ref, wc_ref, scale_ref, bias_ref, o_ref, acc_i,
     lw = _decode_limbs(wc_ref[...], fmt)
     _accumulate_classes(acc_i, lx, lw)
 
-    @pl.when((jax.lax.rem(k + 1, flush_period) == 0) | (k == nsteps - 1))
+    @pl.when((jax.lax.rem(k + 1, fp_ref[0, 0]) == 0) | (k == nsteps - 1))
     def _flush():
         _flush_classes(acc_i, acc_f)
 
@@ -293,9 +319,9 @@ def _exact_fused_kernel(xc_ref, wc_ref, scale_ref, bias_ref, o_ref, acc_i,
 
 
 def _exact_fused_stationary_kernel(xc_ref, wc_ref, scale_ref, bias_ref,
-                                   o_ref, limbs, acc_i, acc_f, *,
+                                   fp_ref, o_ref, limbs, acc_i, acc_f, *,
                                    cache_weight: bool, nsteps: int,
-                                   flush_period: int, out_scale: float,
+                                   out_scale: float,
                                    fmt: FPFormat, activation: str,
                                    has_scale: bool, has_bias: bool):
     """One K-resident stationary kernel body for both cached operands.
@@ -340,7 +366,7 @@ def _exact_fused_stationary_kernel(xc_ref, wc_ref, scale_ref, bias_ref,
         lx, lw = cached, _decode_limbs(wc_ref[...], fmt)
     _accumulate_classes(acc_i, lx, lw)
 
-    @pl.when((jax.lax.rem(k + 1, flush_period) == 0) | (k == nsteps - 1))
+    @pl.when((jax.lax.rem(k + 1, fp_ref[0, 0]) == 0) | (k == nsteps - 1))
     def _flush():
         _flush_classes(acc_i, acc_f)
 
@@ -372,7 +398,7 @@ def ws_stripe_bytes(K: int, block: int, block_k: int) -> int:
 
 @functools.partial(
     jax.jit,
-    static_argnames=("fmt", "block_m", "block_n", "block_k", "flush_period",
+    static_argnames=("fmt", "block_m", "block_n", "block_k",
                      "activation", "schedule", "interpret"))
 def mgs_matmul_exact_fused_pallas(x_codes, w_codes, fmt: FPFormat = E4M3, *,
                                   scale=None, bias=None,
@@ -400,7 +426,12 @@ def mgs_matmul_exact_fused_pallas(x_codes, w_codes, fmt: FPFormat = E4M3, *,
       flush_period: K-grid steps between narrow->wide accumulator
         flushes; ``None`` = deterministic
         :func:`worst_case_flush_period`, or a Markov-planned period from
-        :func:`repro.core.markov.plan_flush_period`.
+        :func:`repro.core.markov.plan_flush_period`. A **runtime
+        scalar** (python int or traced int32) shipped through SMEM, not
+        a trace constant — re-planned periods (hot-swapped calibration)
+        swap in with zero recompiles. Bit-affecting: each flush rounds
+        the exact int32 partials into the f32 wide accumulator, so the
+        period is versioned calibration state upstream.
       schedule: ``"output"`` (output-stationary — decode both operand
         tiles every grid step), ``"weight"`` (K-resident
         weight-stationary — cache the decoded weight limb stripe in VMEM
@@ -446,14 +477,10 @@ def mgs_matmul_exact_fused_pallas(x_codes, w_codes, fmt: FPFormat = E4M3, *,
         brow = jnp.pad(jnp.asarray(bias, jnp.float32).reshape(1, N)[:1],
                        ((0, 0), (0, Np - N)))
     nsteps = Kp // block_k
-    if flush_period is None:
-        flush_period = worst_case_flush_period(block_k)
-    # A period beyond the grid means "flush once at the end"; clamping also
-    # keeps the in-kernel rem() in int32 range for Markov-planned periods.
-    flush_period = max(1, min(flush_period, nsteps))
+    fp = _flush_scalar(flush_period, block_k, nsteps)
     out_scale = 2.0 ** (-2 * (fmt.bias + fmt.mbits))
 
-    kw = dict(nsteps=nsteps, flush_period=flush_period, out_scale=out_scale,
+    kw = dict(nsteps=nsteps, out_scale=out_scale,
               fmt=fmt, activation=activation, has_scale=has_scale,
               has_bias=has_bias)
     if schedule in ("weight", "activation"):
@@ -496,6 +523,7 @@ def mgs_matmul_exact_fused_pallas(x_codes, w_codes, fmt: FPFormat = E4M3, *,
                 pl.BlockSpec((block_k, block_n), w_map),
                 pl.BlockSpec((1, block_n), row_map),
                 pl.BlockSpec((1, block_n), row_map),
+                _FP_SPEC,
             ],
             out_specs=pl.BlockSpec((block_m, block_n), out_map),
             out_shape=jax.ShapeDtypeStruct((Mp, Np), jnp.float32),
@@ -507,7 +535,7 @@ def mgs_matmul_exact_fused_pallas(x_codes, w_codes, fmt: FPFormat = E4M3, *,
             compiler_params=_CompilerParams(
                 dimension_semantics=("parallel", "arbitrary", "arbitrary")),
             interpret=interpret,
-        )(xc, wc, srow, brow)
+        )(xc, wc, srow, brow, fp)
         return out[:M, :N]
     out = pl.pallas_call(
         functools.partial(_exact_fused_kernel, **kw),
@@ -517,6 +545,7 @@ def mgs_matmul_exact_fused_pallas(x_codes, w_codes, fmt: FPFormat = E4M3, *,
             pl.BlockSpec((block_k, block_n), lambda i, j, k: (k, j)),
             pl.BlockSpec((1, block_n), lambda i, j, k: (0, j)),
             pl.BlockSpec((1, block_n), lambda i, j, k: (0, j)),
+            _FP_SPEC,
         ],
         out_specs=pl.BlockSpec((block_m, block_n), lambda i, j, k: (i, j)),
         out_shape=jax.ShapeDtypeStruct((Mp, Np), jnp.float32),
@@ -527,7 +556,7 @@ def mgs_matmul_exact_fused_pallas(x_codes, w_codes, fmt: FPFormat = E4M3, *,
         compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
-    )(xc, wc, srow, brow)
+    )(xc, wc, srow, brow, fp)
     return out[:M, :N]
 
 

@@ -150,6 +150,11 @@ def mgs_matmul(x, w, fmt: FPFormat = E4M3, mode: str = "exact", *,
                             or activation != "none"):
         raise ValueError("epilogue (scale/bias/activation) is exact-mode "
                          "only; rescale dmac outputs in the caller")
+    if isinstance(flush_period, int):
+        # host-planned periods can exceed int32 (near-uniform sigmas);
+        # the kernel clips to its K grid anyway, so clamp before the
+        # period crosses the jit boundary as an int32 operand
+        flush_period = min(flush_period, 2**31 - 1)
     lead = x.shape[:-1]
     K = x.shape[-1]
     x2 = x.reshape((-1, K))

@@ -251,6 +251,7 @@ class ReplicaServeDriver:
             "groups_per_replica": [0] * replicas}
         self.health = [ReplicaHealth() for _ in range(replicas)]
         self._events: List[Dict[str, Any]] = []
+        self._streaming = None          # set by enable_streaming
         self._closed = False
         self._queues: List["queue.Queue"] = [queue.Queue()
                                              for _ in range(replicas)]
@@ -563,10 +564,24 @@ class ReplicaServeDriver:
                 donors = [i for i in range(len(self.engines))
                           if i != idx and self.health[i].schedulable()]
             donor = self.engines[donors[0]] if donors else self.engines[idx]
+            # replay the donor's calibration history in version order:
+            # the replacement retains every version (replay-serviceable)
+            # and ends on the fleet's current runtime state, so it
+            # serves — and replays — bit-identically to the survivors.
+            # (Built bare when the donor holds tables — the donor's v1
+            # is the authoritative first install, not the ctor table.)
+            donor_tables = dict(donor._tables)
             engine = make_engine(
                 self.cfg, mesh, params=transfer_tree(donor.params, mesh),
-                dims=donor.dims, calibration=self._calibration,
+                dims=donor.dims,
+                calibration=None if donor_tables else self._calibration,
                 **self._engine_kwargs)
+            for v in sorted(donor_tables):
+                engine.apply_calibration(donor_tables[v])
+            if donor._streaming is not None:
+                engine.enable_streaming(
+                    donor._streaming,
+                    seed=donor._streaming.seed + idx)
             if self._warmup_plan is not None:
                 buckets, max_new, seed = self._warmup_plan
                 engine.warmup(buckets, max_new=max_new, seed=seed)
@@ -737,6 +752,85 @@ class ReplicaServeDriver:
         for engine in self.engines[1:]:
             engine.apply_calibration(table)
         return table
+
+    # -- streaming calibration: fleet-wide versioned hot swap --------------
+
+    def apply_calibration(self, table: CalibrationTable) -> int:
+        """Push ``table`` to every schedulable replica — **without** drain.
+
+        The fleet twin of :meth:`ServeEngine.apply_calibration`'s hot
+        path: each engine swaps its runtime state between decode steps
+        (the group engine at the next group boundary, the continuous
+        engine behind its drain fence), so live traffic keeps flowing —
+        zero recompiles, zero dropped requests. Call :meth:`calibrate`
+        for the *first* install instead (that path rebuilds jits and
+        must run idle). Returns the version the table was installed at
+        (identical on every replica: versions advance in lockstep
+        because every install goes through the driver).
+        """
+        with self._lock:
+            live = [i for i in range(len(self.engines))
+                    if self.health[i].state != "dead"]
+        versions = [self.engines[i].apply_calibration(table) for i in live]
+        self._log_event("calib_swap", -1, version=max(versions),
+                        replicas=live)
+        return max(versions)
+
+    def enable_streaming(self, *, seed: int = 0, sample_period: int = 4,
+                         **thresholds):
+        """Attach one shared streaming calibrator to the whole fleet.
+
+        Every replica feeds the same
+        :class:`~repro.quant.streaming.StreamingRecorder` (it is
+        thread-safe) through its own deterministic sampling gate —
+        ``seed + replica`` staggers the gates so the replicas sample
+        different traffic instead of all shadowing the same indices.
+        Returns the shared calibrator; drive refreshes with
+        :meth:`maybe_refresh_calibration`.
+        """
+        calibrator = self.engines[0].enable_streaming(
+            seed=seed, sample_period=sample_period, **thresholds)
+        for i, engine in enumerate(self.engines[1:], start=1):
+            engine.enable_streaming(calibrator, seed=seed + i)
+        self._streaming = calibrator
+        return calibrator
+
+    def maybe_refresh_calibration(self):
+        """Drift-check the shared statistics; fleet hot-swap on drift.
+
+        Returns the justifying
+        :class:`~repro.quant.streaming.DriftReport` when a refresh
+        happened, else ``None``. The refreshed table reaches every
+        replica through :meth:`apply_calibration` (the no-drain push).
+        """
+        if getattr(self, "_streaming", None) is None:
+            return None
+        report = self._streaming.maybe_refresh(self.apply_calibration)
+        if report is not None:
+            self._log_event("calib_refresh", -1,
+                            drifted_sites=list(report.drifted_sites))
+        return report
+
+    def replay(self, request: Request, version=None, *,
+               group: Optional[List[Request]] = None):
+        """Re-serve a logged request under its recorded table version.
+
+        Routes to a schedulable replica that has the version's table
+        retained (they all do when every install went through the
+        driver) — since replicas are bit-identical by construction, any
+        of them reproduces the original bits. Run while idle (after
+        :meth:`drain`): replay borrows the engine's compiled entry
+        points. See :meth:`ServeEngine.replay`.
+        """
+        want = request.table_version if version is None else version
+        with self._lock:
+            live = self._schedulable_locked()
+        for i in live:
+            if want == 0 or want in self.engines[i]._tables:
+                return self.engines[i].replay(request, version,
+                                              group=group)
+        raise KeyError(f"no schedulable replica retains calibration "
+                       f"version {want}")
 
     _COUNTERS = ("prefill_tokens", "decode_tokens", "requests", "groups",
                  "busy_s", "retries", "failovers", "requeued_requests",

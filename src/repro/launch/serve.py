@@ -16,7 +16,9 @@ pure-TP over every visible device.
 from __future__ import annotations
 
 import argparse
+import contextlib
 import dataclasses
+import threading
 import time
 from collections import deque
 from typing import Any, Dict, List, Optional
@@ -36,7 +38,8 @@ from repro.models import (adopt_slot, decode_step, decode_step_paged,
 from repro.parallel.sharding import make_rules, use_rules
 from repro.quant import (BlockAllocator, PreparedWeight, calibrating,
                          prepare_logits_head, prepare_params)
-from repro.quant.calibrate import CalibrationTable
+from repro.quant.calibrate import CalibrationTable, applied_calib_state
+from repro.quant.streaming import StreamingCalibrator, sample_gate
 
 __all__ = ["ServeEngine", "ContinuousBatchingEngine", "Request",
            "bucket_for", "make_engine", "main"]
@@ -119,6 +122,12 @@ class Request:
     max_new_tokens: int
     out_tokens: List[int] = dataclasses.field(default_factory=list)
     done: bool = False
+    #: calibration-table version the request was served under (stamped by
+    #: the engine: at group start for the group engine, at admission for
+    #: the continuous one). ``ServeEngine.replay`` re-installs exactly
+    #: this version's runtime state, so the logged output stays
+    #: bitwise-reproducible across any number of later hot swaps.
+    table_version: int = 0
 
 
 class ServeEngine:
@@ -204,15 +213,164 @@ class ServeEngine:
             if multi and dims is not None:
                 self.params = _place_raw_leaves(self.params, dims,
                                                 self.rules)
+            self._init_calib_runtime(calibration)
             self._build_jits()
+
+    # -- versioned runtime calibration state ---------------------------
+
+    def _init_calib_runtime(self, calibration: Optional[CalibrationTable]):
+        """Version bookkeeping + the runtime calib-state pytree.
+
+        ``self._calib_state`` is the small dict the jitted entry points
+        take as their last argument: ``{"flush": {site: int32 scalar},
+        "q_amax": f32 scalar}`` (keys present only when the config uses
+        them). Hot swaps replace the *arrays* — the pytree structure,
+        and therefore every trace, is untouched. Versions, tables, and
+        the host mirrors live outside any pytree on purpose: a version
+        id inside a traced argument would retrace per version.
+        """
+        self._site_wsigmas = self._collect_limb_sigmas(self.params)
+        sites = set(self._site_wsigmas)
+        if calibration is not None:
+            sites |= {s for s, _ in calibration.to_pairs()
+                      if not s.endswith(".amax")}
+        self._flush_sites = sorted(sites)
+        self._flush_host: Dict[str, int] = {}
+        self._amax_value = 0.0
+        if calibration is not None:
+            v = calibration.version if calibration.version > 0 else 1
+            if calibration.version != v:
+                calibration = CalibrationTable.from_pairs(
+                    calibration.to_pairs(), version=v)
+            self._tables = {v: calibration}
+            self.table_version = v
+        else:
+            self._tables: Dict[int, CalibrationTable] = {}
+            self.table_version = 0
+        self._calib_state = self._build_calib_state(calibration)
+        self._streaming: Optional[StreamingCalibrator] = None
+        self._stream_seed = 0
+        self._stream_index = 0
+        self._replaying = False
+        # guards the (version, state, host-mirror) swap against readers
+        # on other threads: the replica driver pushes refreshed tables
+        # from its own thread while worker threads snapshot per group /
+        # per admission. RLock: the continuous override re-enters.
+        self._calib_lock = threading.RLock()
+
+    @staticmethod
+    def _collect_limb_sigmas(params) -> Dict[str, float]:
+        """Per-site PreparedWeight limb sigma, keyed like _stamp_act_sigmas."""
+        out: Dict[str, float] = {}
+
+        def walk(node, path):
+            if isinstance(node, dict):
+                for k, v in node.items():
+                    walk(v, path + (k,))
+            elif isinstance(node, PreparedWeight):
+                if path and path[-1] in ("unembed", "unembed_prepared"):
+                    out["logits"] = float(node.limb_sigma)
+                elif len(path) >= 2:
+                    out[f"{path[-2]}.{path[-1]}"] = float(node.limb_sigma)
+
+        walk(params, ())
+        return out
+
+    def _build_calib_state(self, table: Optional[CalibrationTable]):
+        """Runtime state pytree for ``table`` (None = uncalibrated plan).
+
+        Pure function of ``(cfg.quant, self._site_wsigmas,
+        self._flush_sites, table)`` — replay rebuilds any version's
+        state from its stored table and gets the very arrays (values,
+        not objects) that served it.
+        """
+        q = self.cfg.quant
+        state: Dict[str, Any] = {}
+        if q.flush_target is not None:
+            host = self._plan_flush_host(table)
+            self._flush_host = host
+            state["flush"] = {s: jnp.asarray(p, jnp.int32)
+                              for s, p in host.items()}
+        if q.static_q_scale:
+            a = (table.sigma("attn.q.amax") if table is not None else None)
+            self._amax_value = float(a) if a is not None and a > 0 else 0.0
+            state["q_amax"] = jnp.asarray(self._amax_value, jnp.float32)
+        return state if state else None
+
+    def _plan_flush_host(self, table: Optional[CalibrationTable]
+                         ) -> Dict[str, int]:
+        """Host-side flush plan ``table`` implies — pure, no installation.
+
+        The continuous engine compares this against the installed
+        ``self._flush_host`` to decide whether a hot swap is bit-inert
+        for in-flight slots or must be fenced behind a drain.
+        """
+        q = self.cfg.quant
+        if q.flush_target is None:
+            return {}
+        from repro.core.markov import plan_flush_period
+        # int32-clamp: huge planned periods (near-uniform sigmas) all
+        # mean "flush once at the end" — the kernel clips to its grid
+        return {
+            s: min(2**31 - 1, plan_flush_period(
+                q.block_k, target_overflow=q.flush_target,
+                sigma_limb_x=(table.sigma(s) if table is not None
+                              else None),
+                sigma_limb_w=self._site_wsigmas.get(s)))
+            for s in self._flush_sites}
+
+    def _cs(self):
+        """The calib-state argument for the jitted entry points."""
+        return self._calib_state
+
+    @contextlib.contextmanager
+    def _pinned_state(self, version: int):
+        """Temporarily re-install ``version``'s runtime state (replay).
+
+        Swaps the state arrays and the stamped version on the *same* jit
+        caches — the compiled programs are untouched, which is exactly
+        why the replayed bits match the originals. Streaming observation
+        is muted for the duration so a replay never perturbs live drift
+        statistics.
+        """
+        if version != 0 and version not in self._tables:
+            raise KeyError(f"no calibration table recorded for version "
+                           f"{version} (known: {sorted(self._tables)})")
+        table = self._tables.get(version)
+        prev = (self._calib_state, self._flush_host, self._amax_value,
+                self.table_version, self._replaying)
+        rec = self._streaming.recorder if self._streaming else None
+        prev_mute = rec.muted if rec is not None else None
+        try:
+            self._calib_state = self._build_calib_state(table)
+            self.table_version = version
+            self._replaying = True
+            if rec is not None:
+                rec.muted = True
+            yield
+        finally:
+            (self._calib_state, self._flush_host, self._amax_value,
+             self.table_version, self._replaying) = prev
+            if rec is not None:
+                rec.muted = prev_mute
 
     def _build_jits(self):
         cfg = self.cfg
-        self._prefill = jax.jit(
-            lambda p, b, c: prefill(p, cfg, b, c))
-        self._decode = jax.jit(
-            lambda p, t, c: decode_step(p, cfg, t, c),
-            donate_argnums=(2,))
+
+        # cs defaults to None (no runtime state -> the static fallback
+        # plan, which resolves to the same periods as the engine's
+        # default state): tests may drive the jitted entries directly
+        # with the pre-versioning 3-arg signature.
+        def _pf(p, b, c, cs=None):
+            with applied_calib_state(cs):
+                return prefill(p, cfg, b, c)
+
+        def _dc(p, t, c, cs=None):
+            with applied_calib_state(cs):
+                return decode_step(p, cfg, t, c)
+
+        self._prefill = jax.jit(_pf)
+        self._decode = jax.jit(_dc, donate_argnums=(2,))
 
     def _make_batch(self, toks) -> Dict[str, Any]:
         batch = {"tokens": jnp.asarray(toks)}
@@ -257,35 +415,79 @@ class ServeEngine:
             batch = self._make_batch(toks)
             cache, _ = init_cache(self.cfg, self.batch, self.max_len)
             with use_rules(self.rules):
-                logits, cache = self._prefill(self.params, batch, cache)
+                logits, cache = self._prefill(self.params, batch, cache,
+                                              self._cs())
                 cur = jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
                 for _ in range(max_new):
-                    logits, cache = self._decode(self.params, cur, cache)
+                    logits, cache = self._decode(self.params, cur, cache,
+                                                 self._cs())
                     cur = jnp.argmax(logits, axis=-1)[:, None].astype(
                         jnp.int32)
             jax.block_until_ready(logits)
         self._buckets = buckets
         return buckets
 
-    def apply_calibration(self, table: CalibrationTable):
-        """Install a calibration table built elsewhere on this engine.
+    def apply_calibration(self, table: CalibrationTable) -> int:
+        """Install a calibration table on this engine; returns its version.
 
-        The table is stored on the QuantConfig, stamped onto every
+        Two paths, split on whether a table is already installed:
+
+        **First install** (legacy full rebuild): the table is stored on
+        the QuantConfig, stamped onto every
         :class:`~repro.quant.PreparedWeight` (``act_sigma`` — planes are
-        shared, only the static aux changes), and the jitted entry points
-        rebuilt so later traces plan their flush periods from the table's
-        observed per-site sigmas. This is how replica engines share one
-        calibration pass (:class:`repro.launch.replica.ReplicaServeDriver`
-        calibrates replica 0 and applies the table to the rest). Never
-        changes results — the exact kernels are flush-invariant.
+        shared, only the static aux changes), and the jitted entry
+        points rebuilt. This is how replica engines share one
+        calibration pass (:class:`repro.launch.replica.
+        ReplicaServeDriver` calibrates replica 0 and applies the table
+        to the rest). Do it before traffic — the rebuild retraces.
 
-        Must not race in-flight requests: jit rebuild mid-request would
-        retrace under the engine's feet. Drain first.
+        **Hot swap** (every later call): only the runtime state arrays
+        are replaced — flush periods and the static decode-query amax
+        flow to the kernels as runtime scalars, so the swap costs zero
+        recompiles and is safe *between decode steps* under live
+        traffic. The config and the PreparedWeight aux are deliberately
+        left at their first-install values (restamping the static aux
+        would retrace); they only feed the static fallback plan, which
+        the runtime state overrides. In-flight work is protected by
+        snapshotting: the group engine pins state per group, the
+        continuous engine pins per-slot amax at admission and fences
+        flush-state changes until resident requests drain (no
+        mid-request plan tearing).
+
+        The assigned version is monotone per engine: ``table.version``
+        when it advances the engine's counter, else ``current + 1``.
+        Every version's table is retained for :meth:`replay`.
         """
-        self.cfg = dataclasses.replace(
-            self.cfg, quant=self.cfg.quant.with_calibration(table))
-        self.params = _stamp_act_sigmas(self.params, table)
-        self._build_jits()
+        with self._calib_lock:
+            v = (table.version if table.version > self.table_version
+                 else self.table_version + 1)
+            if table.version != v:
+                table = CalibrationTable.from_pairs(table.to_pairs(),
+                                                    version=v)
+            first = not self._tables
+            self._tables[v] = table
+            new_sites = {s for s, _ in table.to_pairs()
+                         if not s.endswith(".amax")} - set(self._flush_sites)
+            if new_sites:
+                # site universe grew (e.g. first table adds attention
+                # score sites): the state pytree structure changes,
+                # costing one retrace on the next call. refreshed()
+                # tables keep the universe stable, so streaming swaps
+                # never hit this.
+                self._flush_sites = sorted(set(self._flush_sites)
+                                           | new_sites)
+            self.table_version = v
+            if first:
+                self.cfg = dataclasses.replace(
+                    self.cfg, quant=self.cfg.quant.with_calibration(table))
+                self.params = _stamp_act_sigmas(self.params, table)
+                self._calib_state = self._build_calib_state(table)
+                self._build_jits()
+            else:
+                self._calib_state = self._build_calib_state(table)
+            if self._streaming is not None:
+                self._streaming.table = table
+            return v
 
     def calibrate(self, prompts: Optional[List[np.ndarray]] = None, *,
                   update: bool = True, seed: int = 0) -> CalibrationTable:
@@ -296,12 +498,15 @@ class ServeEngine:
         matmul logs its quantized activation's limb PMF, aggregated
         across the scanned layer stack. Returns the resulting
         :class:`CalibrationTable`; with ``update=True`` the table is also
-        installed on the engine — stored in the QuantConfig, stamped onto
-        each PreparedWeight (``act_sigma``), and the jitted entry points
-        rebuilt — so subsequent requests plan their exact-kernel flush
-        periods from observed per-site sigmas. Calibration never changes
-        results (the exact kernels are flush-invariant); it only
-        lengthens flush periods safely.
+        installed on the engine (:meth:`apply_calibration` — the full
+        first-install path when no table is installed yet, a runtime
+        hot swap otherwise) so subsequent requests plan their
+        exact-kernel flush periods from observed per-site sigmas.
+        Calibration never changes *accuracy* — it lengthens flush
+        periods within the Markov overflow budget — but a changed
+        period does move the wide-accumulator rounding by ulps, which
+        is why requests record their table version and :meth:`replay`
+        restores it exactly.
         """
         if prompts is None:
             rng = np.random.default_rng(seed)
@@ -329,9 +534,108 @@ class ServeEngine:
             self.apply_calibration(table)
         return table
 
+    # -- streaming calibration (quant.streaming) -----------------------
+
+    def enable_streaming(self, calibrator: Optional[StreamingCalibrator]
+                         = None, *, seed: Optional[int] = None,
+                         sample_period: int = 4,
+                         **thresholds) -> StreamingCalibrator:
+        """Attach a streaming calibrator; gated traffic feeds its recorder.
+
+        Once enabled, every ``sample_gate``-admitted unit of traffic
+        (request group here; admission on the continuous engine) also
+        runs a *shadow pass*: an eager re-execution of the same tokens
+        under ``calibrating(recorder)``. The shadow pass is completely
+        off the compiled serve path — the production jit caches never
+        contain a recording callback, so enabling streaming cannot move
+        a single served bit; it costs roughly ``1/sample_period`` extra
+        prefills. Pass a shared ``calibrator`` to pool statistics
+        across replicas (per-engine ``seed`` staggers their gates);
+        ``thresholds`` forward to :class:`StreamingCalibrator`.
+        """
+        if calibrator is None:
+            calibrator = StreamingCalibrator(
+                self._tables.get(self.table_version,
+                                 CalibrationTable({})),
+                seed=seed if seed is not None else 0,
+                sample_period=sample_period, **thresholds)
+        self._streaming = calibrator
+        self._stream_seed = seed if seed is not None else calibrator.seed
+        return calibrator
+
+    def maybe_refresh_calibration(self):
+        """Drift-check the streaming statistics; hot-swap on drift.
+
+        Returns the justifying :class:`~repro.quant.streaming.
+        DriftReport` when a refresh happened, else ``None``. The
+        refreshed table goes through :meth:`apply_calibration`'s hot
+        path (runtime state swap, zero recompiles).
+        """
+        if self._streaming is None:
+            return None
+        return self._streaming.maybe_refresh(self.apply_calibration)
+
+    def _shadow_pass(self, toks: np.ndarray):
+        """Eager recording pass over sampled traffic tokens.
+
+        The streaming twin of :meth:`calibrate`'s trace: one eager
+        prefill + one decode step over the *actual* gated tokens, under
+        the shared streaming recorder. Results are discarded; only the
+        per-site statistics (and the decode-query amax) survive.
+        """
+        rec = self._streaming.recorder
+        cache, _ = init_cache(self.cfg, toks.shape[0], self.max_len)
+        with use_rules(self.rules), calibrating(rec):
+            logits, cache = prefill(self.params, self.cfg,
+                                    self._make_batch(toks), cache)
+            cur = jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
+            decode_step(self.params, self.cfg, cur, cache)
+
+    def replay(self, request: Request, version: Optional[int] = None, *,
+               group: Optional[List[Request]] = None):
+        """Re-serve a logged request under its recorded table version.
+
+        Returns ``(replayed_request, stats)`` where ``stats["logits"]``
+        carries the f32 logits row behind every emitted token — the
+        observable the determinism suite compares bitwise against the
+        original run. ``version`` defaults to
+        ``request.table_version``; the engine re-installs exactly that
+        version's runtime state (same jit caches, same arrays), so the
+        replay is bit-identical *forever*, however many hot swaps
+        happened since.
+
+        ``group``: the request's original co-members, in their original
+        order. Required whenever the quant config uses per-tensor
+        activation scales (``per_row_act=False``) — a group member's
+        quantization then depends on the whole group's absmax, so the
+        single request is not a closed bit-reproducible unit; replaying
+        the full group is. With ``per_row_act=True`` (the continuous
+        engine's contract) the default lone replay is exact.
+        """
+        version = request.table_version if version is None else version
+        members = list(group) if group is not None else [request]
+        idx = next((i for i, r in enumerate(members) if r is request), None)
+        if idx is None:
+            raise ValueError("request must be a member of its group")
+        if group is None and not self.cfg.quant.per_row_act and \
+                self.batch > 1:
+            raise ValueError(
+                "per-tensor activation scales couple group members: pass "
+                "group=<the request's original co-members> to replay "
+                "(per_row_act=False quant)")
+        copies = [dataclasses.replace(r, out_tokens=[], done=False)
+                  for r in members]
+        with self._pinned_state(version):
+            stats = self._replay_run(copies)
+        return copies[idx], stats
+
+    def _replay_run(self, copies: List[Request]) -> Dict[str, Any]:
+        return self.run(copies, record_logits=True)
+
     def run(self, requests: List[Request], *, injector=None,
             deadline_s: Optional[float] = None,
-            should_abort=None) -> Dict[str, Any]:
+            should_abort=None, record_logits: bool = False
+            ) -> Dict[str, Any]:
         """Serve a list of requests in fixed-size batches.
 
         The keyword-only arguments are the fault-tolerance seam the
@@ -361,9 +665,18 @@ class ServeEngine:
         t_start = time.time()
         n_prefill_tokens = 0
         n_decode_tokens = 0
+        logits_log: Dict[int, List[np.ndarray]] = {}
         for i in range(0, len(requests), self.batch):
             group = requests[i:i + self.batch]
             t_group = time.time()
+            # snapshot the runtime calib state for the whole group: a hot
+            # swap landing mid-group must not tear a request across two
+            # flush plans (the swap takes effect at the next group).
+            with self._calib_lock:
+                cs = self._calib_state
+                ver = self.table_version
+            for r in group:
+                r.table_version = ver
 
             def _watchdog():
                 if should_abort is not None and should_abort():
@@ -385,10 +698,16 @@ class ServeEngine:
             toks = np.zeros((self.batch, plen), np.int32)
             for j, r in enumerate(group):
                 toks[j, plen - len(r.prompt):] = r.prompt  # left-pad
+            if (self._streaming is not None and not self._replaying):
+                idx = self._stream_index
+                self._stream_index += 1
+                if sample_gate(self._stream_seed, idx,
+                               self._streaming.sample_period):
+                    self._shadow_pass(toks)
             batch = self._make_batch(toks)
             cache, _ = init_cache(self.cfg, self.batch, self.max_len)
             with use_rules(self.rules):
-                logits, cache = self._prefill(self.params, batch, cache)
+                logits, cache = self._prefill(self.params, batch, cache, cs)
                 n_prefill_tokens += plen * len(group)
                 _watchdog()
                 cur = jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
@@ -397,26 +716,33 @@ class ServeEngine:
                     if injector is not None:
                         injector.on_decode(step + 1)
                     _watchdog()
+                    rows = np.asarray(logits) if record_logits else None
                     for j, r in enumerate(group):
                         if not r.done and len(r.out_tokens) < r.max_new_tokens:
                             tok = int(cur[j, 0])
                             r.out_tokens.append(tok)
                             n_decode_tokens += 1
+                            if record_logits:
+                                logits_log.setdefault(r.rid, []).append(
+                                    rows[j].copy())
                             if self.eos_id is not None and tok == self.eos_id:
                                 r.done = True
                     if all(r.done or len(r.out_tokens) >= r.max_new_tokens
                            for r in group):
                         break
-                    logits, cache = self._decode(self.params, cur, cache)
+                    logits, cache = self._decode(self.params, cur, cache, cs)
                     cur = jnp.argmax(logits, axis=-1)[:, None].astype(
                         jnp.int32)
             for r in group:
                 r.done = True
         dt = time.time() - t_start
-        return {"prefill_tokens": n_prefill_tokens,
-                "decode_tokens": n_decode_tokens,
-                "wall_s": dt,
-                "decode_tok_per_s": n_decode_tokens / max(dt, 1e-9)}
+        stats = {"prefill_tokens": n_prefill_tokens,
+                 "decode_tokens": n_decode_tokens,
+                 "wall_s": dt,
+                 "decode_tok_per_s": n_decode_tokens / max(dt, 1e-9)}
+        if record_logits:
+            stats["logits"] = logits_log
+        return stats
 
 
 @dataclasses.dataclass
@@ -515,19 +841,31 @@ class ContinuousBatchingEngine(ServeEngine):
         self._free_slots = deque(range(slots))
         self._cur = np.zeros((slots, 1), np.int32)
         self._logits_log: Optional[Dict[int, List[np.ndarray]]] = None
+        # per-slot pinned decode-query amax: set at admission from the
+        # then-current table, so a later hot swap never moves an
+        # in-flight request's static q scale (0 = slot free -> dynamic
+        # path, never hit: free slots decode into the trash block)
+        self._slot_amax = np.zeros(slots, np.float32)
+        # fenced hot swap: a flush-plan-changing table waits here until
+        # the active slots drain (admissions pause meanwhile)
+        self._pending: Optional[CalibrationTable] = None
+        self._serving = False
 
     def _build_jits(self):
         super()._build_jits()
         cfg = self.cfg
-        self._decode_paged = jax.jit(
-            lambda p, t, c: decode_step_paged(p, cfg, t, c),
-            donate_argnums=(2,))
+
+        def _dp(p, t, c, cs=None):
+            with applied_calib_state(cs):
+                return decode_step_paged(p, cfg, t, c)
+
+        self._decode_paged = jax.jit(_dp, donate_argnums=(2,))
         self._adopt = jax.jit(adopt_slot, donate_argnums=(0,))
         self._release = jax.jit(release_slot, donate_argnums=(0,))
         if self.spec_k:
             k = self.spec_k
 
-            def _round(p, cur, c):
+            def _round_body(p, cur, c):
                 # the whole round — k - 1 chained truncated-layer
                 # drafts plus the multi-query verify — is one jitted
                 # program, so a round costs a single dispatch. On
@@ -544,6 +882,10 @@ class ContinuousBatchingEngine(ServeEngine):
                           else jnp.concatenate(toks, axis=1))
                 logits, c = verify_step_paged(p, cfg, tokens, c)
                 return tokens, logits, c
+
+            def _round(p, cur, c, cs=None):
+                with applied_calib_state(cs):
+                    return _round_body(p, cur, c)
 
             self._spec_round = jax.jit(_round, donate_argnums=(2,))
             self._rewind = jax.jit(
@@ -579,6 +921,21 @@ class ContinuousBatchingEngine(ServeEngine):
             self.serve([req])
         return buckets
 
+    def _cs_decode(self):
+        """Decode-step calib state: per-slot pinned q amaxes.
+
+        Same pytree structure as the admission-time state except
+        ``q_amax`` is the ``(slots,)`` vector of amaxes pinned at each
+        slot's admission — a hot swap between decode steps changes what
+        *new* admissions pin, never what a resident slot quantizes with.
+        """
+        cs = self._calib_state
+        if cs is None or "q_amax" not in cs:
+            return cs
+        cs = dict(cs)
+        cs["q_amax"] = jnp.asarray(self._slot_amax)
+        return cs
+
     def _admit(self, req: Request, arrival: float, t0: float,
                active: Dict[int, _Slot]) -> Optional[_Slot]:
         """Try to admit one request; None if no slot/blocks right now."""
@@ -602,9 +959,21 @@ class ContinuousBatchingEngine(ServeEngine):
         blocks = self.alloc.alloc(n_alloc)
         toks = np.zeros((1, bucket), np.int32)
         toks[0, bucket - plen:] = req.prompt          # left-pad
+        if self._streaming is not None and not self._replaying:
+            idx = self._stream_index
+            self._stream_index += 1
+            if sample_gate(self._stream_seed, idx,
+                           self._streaming.sample_period):
+                self._shadow_pass(toks)
+        with self._calib_lock:
+            # admission-time pin: version stamp, per-slot q amax, and
+            # the state the prefill runs under are one consistent read
+            req.table_version = self.table_version
+            self._slot_amax[slot] = self._amax_value
+            cs = self._cs()
         pcache, _ = init_cache(self.cfg, 1, bucket)
         logits, pcache = self._prefill(self.params, self._make_batch(toks),
-                                       pcache)
+                                       pcache, cs)
         phys = np.zeros(self.n_table, np.int32)       # tail -> trash block
         phys[:n_alloc] = blocks
         self.cache = self._adopt(self.cache, pcache,
@@ -632,6 +1001,7 @@ class ContinuousBatchingEngine(ServeEngine):
             self.alloc.free(st.blocks)
             self._free_slots.append(slot)
             self._cur[slot, 0] = 0
+            self._slot_amax[slot] = 0.0
             del active[slot]
 
     def serve(self, requests: List[Request], *, arrivals=None,
@@ -676,6 +1046,7 @@ class ContinuousBatchingEngine(ServeEngine):
         timing: Dict[int, Any] = {}
         n_prefill = n_decode = n_steps = 0
         n_drafted = n_accepted = 0
+        self._serving = True
 
         def finish(req: Request, arrival: float, admit_s: float):
             nonlocal n_decode
@@ -684,75 +1055,87 @@ class ContinuousBatchingEngine(ServeEngine):
             if on_done is not None:
                 on_done(req)
 
-        with use_rules(self.rules):
-            while True:
-                now = time.monotonic() - t0
-                if feed is not None:
-                    for req in feed():
-                        waiting.append((now, req))
-                while waiting and waiting[0][0] <= now:
-                    arr, req = waiting[0]
-                    st = self._admit(req, arr, t0, active)
-                    if st is None:
+        try:
+            with use_rules(self.rules):
+                while True:
+                    now = time.monotonic() - t0
+                    if feed is not None:
+                        for req in feed():
+                            waiting.append((now, req))
+                    if (self._pending is not None and not active
+                            and not self._replaying):
+                        # fenced hot swap: the active slots drained, install
+                        # the deferred table and resume admissions under it
+                        ServeEngine.apply_calibration(self, self._pending)
+                        self._pending = None
+                    while (waiting and waiting[0][0] <= now
+                           and (self._pending is None or self._replaying)):
+                        arr, req = waiting[0]
+                        st = self._admit(req, arr, t0, active)
+                        if st is None:
+                            break
+                        waiting.popleft()
+                        n_prefill += bucket_for(len(req.prompt), self._buckets,
+                                                block=self.block_size)
+                        if req.done:                      # done at first token
+                            finish(req, arr, st.admit_s)
+                    if not active:
+                        if waiting:
+                            time.sleep(min(1e-3, max(0.0,
+                                                     waiting[0][0] - now)))
+                            continue
                         break
-                    waiting.popleft()
-                    n_prefill += bucket_for(len(req.prompt), self._buckets,
-                                            block=self.block_size)
-                    if req.done:                      # done at first token
-                        finish(req, arr, st.admit_s)
-                if not active:
-                    if waiting:
-                        time.sleep(min(1e-3, max(0.0,
-                                                 waiting[0][0] - now)))
-                        continue
-                    break
-                for slot, st in active.items():
-                    self._cur[slot, 0] = st.cur
-                if self.spec_k:
-                    k = self.spec_k
-                    # one fused launch drafts and verifies the whole
-                    # round; a single host sync covers all k positions
-                    tokens, logits, self.cache = self._spec_round(
-                        self.params, jnp.asarray(self._cur), self.cache)
-                    n_steps += 1
-                    targets = np.asarray(
-                        jnp.argmax(logits, axis=-1).astype(jnp.int32))
-                    tokens_np = np.asarray(tokens)
-                    rows = np.asarray(logits)      # (slots, k, vocab)
-                    keep = np.zeros(self.slots, np.int32)
-                    for slot in list(active):
-                        st = active[slot]
-                        # exact acceptance: drafts survive while they
-                        # equal the verify argmax at their position
-                        a = 0
-                        while (a + 1 < k and tokens_np[slot, a + 1]
-                                == targets[slot, a]):
-                            a += 1
-                        n_drafted += k - 1
-                        n_accepted += a
-                        keep[slot] = a + 1
-                        for j in range(a + 1):
-                            st.cur = int(targets[slot, j])
-                            self._harvest(slot, st, active, rows[slot, j])
+                    for slot, st in active.items():
+                        self._cur[slot, 0] = st.cur
+                    if self.spec_k:
+                        k = self.spec_k
+                        # one fused launch drafts and verifies the whole
+                        # round; a single host sync covers all k positions
+                        tokens, logits, self.cache = self._spec_round(
+                            self.params, jnp.asarray(self._cur), self.cache,
+                            self._cs_decode())
+                        n_steps += 1
+                        targets = np.asarray(
+                            jnp.argmax(logits, axis=-1).astype(jnp.int32))
+                        tokens_np = np.asarray(tokens)
+                        rows = np.asarray(logits)      # (slots, k, vocab)
+                        keep = np.zeros(self.slots, np.int32)
+                        for slot in list(active):
+                            st = active[slot]
+                            # exact acceptance: drafts survive while they
+                            # equal the verify argmax at their position
+                            a = 0
+                            while (a + 1 < k and tokens_np[slot, a + 1]
+                                    == targets[slot, a]):
+                                a += 1
+                            n_drafted += k - 1
+                            n_accepted += a
+                            keep[slot] = a + 1
+                            for j in range(a + 1):
+                                st.cur = int(targets[slot, j])
+                                self._harvest(slot, st, active, rows[slot, j])
+                                if st.req.done:
+                                    finish(st.req, st.arrival, st.admit_s)
+                                    break
+                        # released slots have pos == 0 and are skipped; live
+                        # ones advance by their accepted count and shed the
+                        # rejected rows
+                        self.cache = self._rewind(self.cache,
+                                                  jnp.asarray(keep))
+                    else:
+                        logits, self.cache = self._decode_paged(
+                            self.params, jnp.asarray(self._cur), self.cache,
+                            self._cs_decode())
+                        n_steps += 1
+                        rows = np.asarray(logits)
+                        for slot in list(active):
+                            st = active[slot]
+                            st.cur = int(rows[slot].argmax())
+                            self._harvest(slot, st, active, rows[slot])
                             if st.req.done:
                                 finish(st.req, st.arrival, st.admit_s)
-                                break
-                    # released slots have pos == 0 and are skipped; live
-                    # ones advance by their accepted count and shed the
-                    # rejected rows
-                    self.cache = self._rewind(self.cache,
-                                              jnp.asarray(keep))
-                else:
-                    logits, self.cache = self._decode_paged(
-                        self.params, jnp.asarray(self._cur), self.cache)
-                    n_steps += 1
-                    rows = np.asarray(logits)
-                    for slot in list(active):
-                        st = active[slot]
-                        st.cur = int(rows[slot].argmax())
-                        self._harvest(slot, st, active, rows[slot])
-                        if st.req.done:
-                            finish(st.req, st.arrival, st.admit_s)
+        finally:
+            self._serving = False
         dt = time.monotonic() - t0
         stats: Dict[str, Any] = {
             "prefill_tokens": n_prefill, "decode_tokens": n_decode,
@@ -770,6 +1153,37 @@ class ContinuousBatchingEngine(ServeEngine):
             stats["logits"] = self._logits_log
         self._logits_log = None
         return stats
+
+    def apply_calibration(self, table: CalibrationTable) -> int:
+        """Hot-swap with a drain fence for flush-plan changes.
+
+        Flush periods are *global* kernel scalars (one SMEM operand per
+        step, shared by every slot), so a swap that changes any site's
+        planned period cannot be applied while requests are resident —
+        it would tear them across two plans mid-request. Such swaps are
+        **fenced**: the table is parked, admissions pause, the active
+        slots drain at their own pace, and the swap installs at the next
+        empty scheduling round (zero dropped requests, zero recompiles —
+        the fence is pure host bookkeeping).
+
+        Bit-inert swaps — same flush plan, e.g. an amax-only refresh —
+        install immediately even under traffic: resident slots are
+        protected by their admission-pinned per-slot amax, so only new
+        admissions see the new table.
+
+        Returns the installed version, or the *current* version when the
+        swap was fenced (the pending table's version is assigned when it
+        installs).
+        """
+        with self._calib_lock:
+            if (self._serving and self._tables
+                    and self._plan_flush_host(table) != self._flush_host):
+                self._pending = table
+                return self.table_version
+            return super().apply_calibration(table)
+
+    def _replay_run(self, copies: List[Request]) -> Dict[str, Any]:
+        return self.serve(copies, record_logits=True)
 
     def run(self, requests: List[Request], **kw) -> Dict[str, Any]:
         """Group-mode entry point is replaced by :meth:`serve`."""

@@ -212,7 +212,7 @@ def _pad_kv_to_chunk(k, v, k_pos, chunk: int):
 _Q_SITE = "attn.q"
 
 
-def _quantize_decode_q(q2, quant) -> QTensor:
+def _quantize_decode_q(q2, quant, batch: int | None = None) -> QTensor:
     """Per-row decode-query quantization — dynamic absmax or calibrated.
 
     ``q2``: ``(N, K)`` float query rows (one per kernel slice). The
@@ -228,12 +228,41 @@ def _quantize_decode_q(q2, quant) -> QTensor:
     differ only by the scale the dynamic path would have *chosen* — the
     standard static-quantization contract. Falls back to dynamic when no
     calibrated entry exists.
+
+    An active ``quant.calibrate.applied_calib_state`` context overrides
+    the config entry with its ``"q_amax"`` array — a runtime value
+    flowing through the engine's jitted step, so a hot-swapped table
+    re-scales with zero retraces. Scalar ``q_amax`` applies to every
+    row; a per-slot ``(B,)`` vector (continuous engine) is expanded to
+    this call's rows via ``batch`` (the leading slot count ``N`` is a
+    multiple of). Entries ``<= 0`` select the dynamic per-row reduce
+    for that row, bit-identically to ``quantize_fp8(axis=1)`` — that is
+    how a request admitted under an amax-free table keeps its dynamic
+    scales while a co-resident slot uses its pinned static one.
     """
     fmt = quant.kv_fmt
-    from repro.quant.calibrate import observe_amax
+    from repro.quant.calibrate import current_calib_state, observe_amax
     observe_amax(_Q_SITE, q2)
-    amax = (quant.act_sigma(_Q_SITE + ".amax")
-            if quant.static_q_scale else None)
+    if quant.static_q_scale:
+        cs = current_calib_state()
+        if cs is not None and "q_amax" in cs:
+            a = jnp.asarray(cs["q_amax"], jnp.float32)
+            if a.ndim == 0:
+                rows = jnp.broadcast_to(a, (q2.shape[0], 1))
+            else:
+                rows = jnp.repeat(a, q2.shape[0] // batch).reshape(-1, 1)
+            # dynamic fallback rows: replicate quantize_fp8's reduce
+            # exactly (same maximum-with-tiny guard) so a <= 0 entry is
+            # bit-identical to the dynamic path
+            dyn = jnp.maximum(
+                jnp.max(jnp.abs(q2.astype(jnp.float32)), axis=1,
+                        keepdims=True),
+                jnp.finfo(jnp.float32).tiny)
+            return quantize_fp8_static(q2, fmt, jnp.where(rows > 0.0,
+                                                          rows, dyn))
+        amax = quant.act_sigma(_Q_SITE + ".amax")
+    else:
+        amax = None
     if amax is None or amax <= 0.0:
         return quantize_fp8(q2, fmt, axis=1)
     return quantize_fp8_static(q2, fmt, amax)
@@ -273,7 +302,7 @@ def _sdpa_packed_cache(q, cache: QuantizedKVCache, bias, quant,
     # (B, T, KV, G, hd) -> (B*KV, G*T, hd) rows; per-slice quantization
     # (q is one token's projections — this transpose is O(B*H*hd))
     q2 = q.transpose(0, 2, 3, 1, 4).reshape(B * KV, G * T * hd)
-    qt = _quantize_decode_q(q2, quant)
+    qt = _quantize_decode_q(q2, quant, batch=B)
     qvals = qt.q.reshape(B * KV, G * T, hd)
     if quant.accum in ("mgs_exact", "mgs_dmac"):
         from repro.quant.calibrate import observe
@@ -316,7 +345,7 @@ def _sdpa_paged_cache(q, cache: PagedKVCache, block_table, bias, lengths,
     S = nb * bs
     fmt = quant.kv_fmt
     q2 = q.transpose(0, 2, 3, 1, 4).reshape(B * KV, G * T * hd)
-    qt = _quantize_decode_q(q2, quant)
+    qt = _quantize_decode_q(q2, quant, batch=B)
     qvals = qt.q.reshape(B * KV, G * T, hd)
     if quant.accum in ("mgs_exact", "mgs_dmac"):
         from repro.quant.calibrate import observe
@@ -371,7 +400,7 @@ def _sdpa_paged_verify(q, cache: PagedKVCache, block_table, bias,
     # (B, T, KV, G, hd) -> (B*KV*T, G*hd) rows, token-fastest — the
     # sequential decode step's per-slice quantization granularity
     q2 = q.transpose(0, 2, 1, 3, 4).reshape(B * KV * T, G * hd)
-    qt = _quantize_decode_q(q2, quant)
+    qt = _quantize_decode_q(q2, quant, batch=B)
     qvals = qt.q.reshape(B * KV, T, G, hd)
     if quant.accum in ("mgs_exact", "mgs_dmac"):
         from repro.quant.calibrate import observe

@@ -1,8 +1,9 @@
 # Quantization substrate: configs, quantizers, prepared-weight cache, and
 # the qmatmul dispatch that makes MGS a first-class execution mode for
 # every linear layer.
-from .calibrate import (ActivationRecorder, CalibrationTable, calibrating,
-                        current_recorder)
+from .calibrate import (ActivationRecorder, CalibrationTable,
+                        applied_calib_state, calibrating,
+                        current_calib_state, current_recorder)
 from .config import ACCUMS, DTYPES, KV_CACHES, QuantConfig
 from .kvcache import (TRASH_BLOCK, BlockAllocator, PagedKVCache,
                       QuantizedKVCache, append_kv, dequantize_kv,
@@ -16,6 +17,8 @@ from .qeinsum import QeinsumPlan, plan_qeinsum, qeinsum
 from .qmatmul import qmatmul
 from .quantize import (QTensor, dequantize_int, fake_quant_fp8,
                        fake_quant_int, quantize_fp8, quantize_int)
+from .streaming import (DriftReport, StreamingCalibrator, StreamingRecorder,
+                        detect_drift, sample_gate, tv_distance)
 
 __all__ = ["ACCUMS", "DTYPES", "KV_CACHES", "QuantConfig", "qmatmul",
            "qeinsum", "plan_qeinsum", "QeinsumPlan", "QTensor",
@@ -24,7 +27,10 @@ __all__ = ["ACCUMS", "DTYPES", "KV_CACHES", "QuantConfig", "qmatmul",
            "prepare_weight", "prepare_params", "prepare_unembed",
            "prepare_logits_head", "PREP_STATS",
            "clear_prepared_cache", "ActivationRecorder", "CalibrationTable",
-           "calibrating", "current_recorder", "QuantizedKVCache",
+           "applied_calib_state", "calibrating", "current_calib_state",
+           "current_recorder", "DriftReport", "StreamingCalibrator",
+           "StreamingRecorder", "detect_drift", "sample_gate",
+           "tv_distance", "QuantizedKVCache",
            "quantize_kv", "append_kv", "init_quantized_kv",
            "dequantize_kv", "kv_cache_bytes", "PagedKVCache",
            "BlockAllocator", "TRASH_BLOCK", "init_paged_kv",

@@ -34,15 +34,17 @@ site:
 from __future__ import annotations
 
 import contextlib
+import hashlib
 import threading
-from typing import Dict, Iterable, Mapping, Optional, Tuple, Union
+from typing import Any, Dict, Iterable, Mapping, Optional, Tuple, Union
 
 import numpy as np
 
 from repro.core.markov import Pmf, limb_sigma_default, plan_flush_period
 
-__all__ = ["ActivationRecorder", "CalibrationTable", "calibrating",
-           "current_recorder", "observe", "observe_amax"]
+__all__ = ["ActivationRecorder", "CalibrationTable", "applied_calib_state",
+           "calibrating", "current_calib_state", "current_recorder",
+           "observe", "observe_amax"]
 
 # Balanced base-128 limbs of the exact kernel take values in [-64, 63].
 _LIMB_LO = -64
@@ -119,12 +121,50 @@ class CalibrationTable:
     the frozen config stays hashable) and on each ``PreparedWeight`` as
     ``act_sigma``. Build one from :meth:`ActivationRecorder.table` or any
     mapping / pair iterable.
+
+    Tables are *versioned* for the streaming hot-swap path
+    (``quant.streaming``): ``version`` is a monotone id assigned by
+    whoever installs the table (engines bump it on every hot swap;
+    standalone tables default to 0) and ``content_hash`` fingerprints
+    the sigma content independently of the version — two tables with
+    equal hashes plan identical flush periods and static scales, so a
+    swap between them is bit-inert. The version is deliberately a plain
+    host-side attribute, never part of any jit-traced pytree: versions
+    must be free to grow forever without retracing anything.
     """
 
     def __init__(self, sigmas: Union[Mapping[str, float],
-                                     Iterable[Tuple[str, float]]]):
+                                     Iterable[Tuple[str, float]]],
+                 *, version: int = 0):
         items = (sigmas.items() if isinstance(sigmas, Mapping) else sigmas)
         self._sigmas = {str(k): float(v) for k, v in items}
+        self.version = int(version)
+
+    @property
+    def content_hash(self) -> str:
+        """sha256 over the sorted (site, sigma) pairs — version-free."""
+        h = hashlib.sha256()
+        for k, v in sorted(self._sigmas.items()):
+            h.update(f"{k}={v!r};".encode())
+        return h.hexdigest()
+
+    def refreshed(self, updates: Union[Mapping[str, float],
+                                       Iterable[Tuple[str, float]]],
+                  *, version: Optional[int] = None) -> "CalibrationTable":
+        """New table = this table's sigmas overlaid with ``updates``.
+
+        The streaming refresher observes a *subset* of sites per window
+        (only gated traffic); merging keeps unobserved sites at their
+        previous values, so the site universe — and therefore every
+        consumer's trace — is stable across refreshes. ``version``
+        defaults to ``self.version + 1``.
+        """
+        items = (updates.items() if isinstance(updates, Mapping)
+                 else updates)
+        merged = dict(self._sigmas)
+        merged.update({str(k): float(v) for k, v in items})
+        v = self.version + 1 if version is None else int(version)
+        return CalibrationTable(merged, version=v)
 
     def sigma(self, site: Optional[str],
               default: Optional[float] = None) -> Optional[float]:
@@ -136,8 +176,8 @@ class CalibrationTable:
         return tuple(sorted(self._sigmas.items()))
 
     @classmethod
-    def from_pairs(cls, pairs) -> "CalibrationTable":
-        return cls(dict(pairs))
+    def from_pairs(cls, pairs, *, version: int = 0) -> "CalibrationTable":
+        return cls(dict(pairs), version=version)
 
     def flush_period(self, site: str, block_k: int, *,
                      target_overflow: float,
@@ -157,7 +197,7 @@ class CalibrationTable:
     def __repr__(self):
         rows = ", ".join(f"{k}={v:.2f}" for k, v in sorted(
             self._sigmas.items()))
-        return f"CalibrationTable({rows})"
+        return f"CalibrationTable(v{self.version}: {rows})"
 
 
 _ctx = threading.local()
@@ -188,6 +228,41 @@ def calibrating(recorder: Optional[ActivationRecorder] = None):
         yield rec
     finally:
         _ctx.recorder = prev
+
+
+def current_calib_state() -> Optional[Mapping[str, Any]]:
+    """The runtime calibration state visible at trace time, if any.
+
+    The hot-swap path ships re-planned flush periods (and the static
+    decode-query amax) to the kernels as *runtime arrays*, not trace
+    constants: engines pass a small dict pytree
+    ``{"flush": {site: int32 scalar}, "q_amax": f32 scalar}`` as an
+    argument of the jitted step and enter :func:`applied_calib_state`
+    inside the jitted body, so ``qmatmul`` /
+    ``models.attention._quantize_decode_q`` pick the tracers up here.
+    Swapping the arrays between steps then changes the plan with zero
+    retraces. ``None`` when no engine state is active (the static
+    ``QuantConfig`` plan applies).
+    """
+    return getattr(_ctx, "calib_state", None)
+
+
+@contextlib.contextmanager
+def applied_calib_state(state: Optional[Mapping[str, Any]]):
+    """Context under which site-tagged matmuls read runtime calibration.
+
+    Trace-time, thread-local — enter it *inside* the jitted function
+    body around the model call, passing the state dict through the jit
+    boundary as a real argument so its leaves are tracers. Entering it
+    around an already-jitted call records nothing into the cached trace
+    (same hazard as :func:`calibrating`).
+    """
+    prev = current_calib_state()
+    _ctx.calib_state = state
+    try:
+        yield state
+    finally:
+        _ctx.calib_state = prev
 
 
 def observe(site: Optional[str], q_values, fmt):

@@ -48,13 +48,27 @@ from .quantize import quantize_fp8, quantize_int
 __all__ = ["qmatmul"]
 
 
-def _exact_flush_period(cfg: QuantConfig, w_sigma, x_sigma):
-    """Markov-planned flush period (static python int), or None.
+def _exact_flush_period(cfg: QuantConfig, w_sigma, x_sigma, site):
+    """Flush period for the exact kernel: runtime state, plan, or None.
 
-    ``x_sigma`` is the call site's observed activation limb sigma
-    (calibration table, else the PreparedWeight's stamped ``act_sigma``);
-    ``None`` falls back to the planner's uniform-limb default.
+    Resolution order:
+    1. An active ``applied_calib_state`` context carrying a flush entry
+       for ``site`` — a *traced int32 scalar* flowing through the
+       engine's jitted step (the hot-swap path: swapping the array
+       re-plans the period with zero retraces).
+    2. Host-side Markov plan when ``cfg.flush_target`` is set.
+       ``x_sigma`` is the call site's observed activation limb sigma
+       (calibration table, else the PreparedWeight's stamped
+       ``act_sigma``); ``None`` falls back to the planner's
+       uniform-limb default.
+    3. ``None`` — the kernel's deterministic worst-case bound.
     """
+    from .calibrate import current_calib_state
+    cs = current_calib_state()
+    if cs is not None and site is not None:
+        fp = cs.get("flush", {}).get(site)
+        if fp is not None:
+            return fp
     if cfg.flush_target is None:
         return None
     from repro.core.markov import plan_flush_period
@@ -124,7 +138,8 @@ def qmatmul(x, w, cfg: QuantConfig, out_dtype=None, *, bias=None,
                     block_m=cfg.block_m, block_n=cfg.block_n,
                     block_k=cfg.block_k,
                     flush_period=_exact_flush_period(
-                        cfg, w.limb_sigma if prepared else None, x_sigma),
+                        cfg, w.limb_sigma if prepared else None, x_sigma,
+                        site),
                     schedule=cfg.schedule,
                     scale=scale if in_kernel_epi else None,
                     bias=bias if in_kernel_epi else None,

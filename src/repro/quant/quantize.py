@@ -63,7 +63,14 @@ def quantize_fp8_static(x, fmt: FPFormat, amax) -> QTensor:
     absmax equals ``amax`` produces codes and scale bit-identical to
     ``quantize_fp8(x, fmt, axis=1)`` (XLA lowers the divide-by-constant
     identically only when both paths compile; an eager reimplementation
-    of the division is 1 ulp off the jitted one)."""
+    of the division is 1 ulp off the jitted one).
+
+    ``amax`` may also be a per-row ``(N, 1)`` array — the continuous
+    engine's versioned calib state feeds per-slot amaxes pinned at
+    admission (``models.attention._quantize_decode_q``), so co-resident
+    requests served under different calibration-table versions each keep
+    their own static scale; the scalar/array split is a broadcast, never
+    a retrace."""
     x = x.astype(jnp.float32)
     a = jnp.asarray(amax, jnp.float32)
     scale = a / fmt.max_finite
